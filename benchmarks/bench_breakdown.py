@@ -1,0 +1,87 @@
+"""Fig. 10 — time breakdown + device-placement ablation.
+
+Per workload: compute (fwd+bwd) time, parameter-sync time, and inter-wave
+send/recv overhead under (a) Spindle placement and (b) the sequential
+placement ablation.  The paper's claims: inter-wave overhead ≤ ~6% with
+Spindle placement and 3–6× larger with sequential placement.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import ClusterSpec, V5E
+from repro.core.plan import plan as mkplan
+from repro.core.workloads import WORKLOADS
+
+
+def _comm_seconds(placement, cluster) -> float:
+    return (
+        placement.interwave_bytes_intra / cluster.intra_island_bw
+        + placement.interwave_bytes_inter / cluster.inter_island_bw
+    )
+
+
+def _param_sync_seconds(p, cluster) -> float:
+    """Group-wise parameter sync: ring all-reduce per shared group."""
+    total = 0.0
+    mg = p.meta_graph
+    seen = set()
+    for m in mg.meta_ops.values():
+        if m.param_group and m.param_group not in seen:
+            seen.add(m.param_group)
+            group = p.param_device_groups().get(m.param_group, ())
+            k = len(group)
+            if k > 1:
+                payload = m.workload.param_bytes * m.L
+                total += 2 * (k - 1) / k * payload / cluster.inter_island_bw
+    return total
+
+
+def run() -> List[Dict]:
+    cluster = ClusterSpec(n_devices=16, island_size=8, mem_bytes=1e13)
+    rows = []
+    for name, maker in WORKLOADS.items():
+        g = maker()
+        for strategy in ("spindle", "sequential"):
+            p = mkplan(g, cluster, placement_strategy=strategy)
+            compute_s = p.makespan
+            comm_s = _comm_seconds(p.placement, cluster)
+            sync_s = _param_sync_seconds(p, cluster)
+            total = compute_s + comm_s + sync_s
+            rows.append(
+                {
+                    "bench": "breakdown",
+                    "workload": name,
+                    "placement": strategy,
+                    "compute_s": compute_s,
+                    "param_sync_s": sync_s,
+                    "interwave_s": comm_s,
+                    "interwave_pct": 100 * comm_s / total,
+                }
+            )
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print(f"{'workload':20s} {'placement':11s} {'compute':>9s} {'sync':>8s} "
+          f"{'interwave':>10s} {'iw %':>6s}")
+    for r in rows:
+        print(
+            f"{r['workload']:20s} {r['placement']:11s} {r['compute_s']:9.4f} "
+            f"{r['param_sync_s']:8.4f} {r['interwave_s']:10.5f} "
+            f"{r['interwave_pct']:5.1f}%"
+        )
+    by = {}
+    for r in rows:
+        by.setdefault(r["workload"], {})[r["placement"]] = r["interwave_s"]
+    for w, d in by.items():
+        if d["spindle"] > 0:
+            print(f"{w}: sequential-placement interwave is "
+                  f"{d['sequential'] / d['spindle']:.1f}x spindle's "
+                  f"(paper: 3–6x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Fig. 4 — scalability-estimator accuracy: piecewise α–β vs held-out points.
+
+Profile a sparse power-of-two grid, fit the scaling curves, then evaluate
+prediction error at the held-out (non-profiled) allocations against the
+full cost model.  The paper's single-piece α–β baseline is included to show
+why the *piecewise* fit is needed for heterogeneous MetaOps.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+from repro.core import (
+    ParallelConfig,
+    ScalabilityEstimator,
+    ScalingCurve,
+    V5E,
+    contract,
+    make_time_fn,
+    valid_allocations,
+)
+from repro.core.estimator import enumerate_configs
+from repro.core.workloads import multitask_clip
+
+
+def _best_time(m, n, time_fn) -> float:
+    return min(
+        (time_fn(m, c) for c in enumerate_configs(m, n)), default=math.inf
+    )
+
+
+def run() -> List[Dict]:
+    g = multitask_clip(4)
+    mg = contract(g)
+    time_fn = make_time_fn(V5E)
+    N = 16
+    rows = []
+    for mid, m in sorted(mg.meta_ops.items()):
+        # profile every other valid allocation, hold out the rest (the
+        # paper's "several discrete data points")
+        valids = valid_allocations(m, N)
+        grid = valids[::2] if len(valids) > 3 else valids
+        ns, ts, cfgs = [], [], []
+        for n in grid:
+            t = _best_time(m, n, time_fn)
+            if math.isfinite(t):
+                ns.append(n)
+                ts.append(t)
+                cfgs.append(ParallelConfig(dp=n))
+        if len(ns) < 2:
+            continue
+        curve = ScalingCurve(ns=ns, ts=ts, configs=cfgs)
+        # single-piece α–β baseline through the endpoints
+        n0, n1 = curve.ns[0], curve.ns[-1]
+        t0, t1 = curve.ts[0], curve.ts[-1]
+        if n0 != n1:
+            beta = (t0 - t1) / (1 / n0 - 1 / n1)
+            alpha = t0 - beta / n0
+        else:
+            alpha, beta = t0, 0.0
+        held_out = [n for n in valids if n not in curve.ns]
+        if not held_out:
+            continue
+        pw_err, ab_err = [], []
+        for n in held_out:
+            truth = _best_time(m, n, time_fn)
+            if not math.isfinite(truth):
+                continue
+            pw_err.append(abs(curve.estimate(n) - truth) / truth)
+            ab_err.append(abs(alpha + beta / n - truth) / truth)
+        if pw_err:
+            rows.append(
+                {
+                    "bench": "estimator",
+                    "meta": m.name,
+                    "piecewise_err_pct": 100 * sum(pw_err) / len(pw_err),
+                    "single_ab_err_pct": 100 * sum(ab_err) / len(ab_err),
+                    "speedup_at_N": curve.speedup(N),
+                }
+            )
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print(f"{'MetaOp':28s} {'piecewise err':>14s} {'single α–β err':>15s} "
+          f"{'ς(16)':>6s}")
+    seen = set()
+    for r in rows:
+        if r["meta"] in seen:
+            continue
+        seen.add(r["meta"])
+        print(f"{r['meta']:28s} {r['piecewise_err_pct']:13.2f}% "
+              f"{r['single_ab_err_pct']:14.2f}% {r['speedup_at_N']:6.2f}")
+    pw = sum(r["piecewise_err_pct"] for r in rows) / len(rows)
+    ab = sum(r["single_ab_err_pct"] for r in rows) / len(rows)
+    print(f"mean held-out error: piecewise {pw:.2f}% vs single α–β {ab:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

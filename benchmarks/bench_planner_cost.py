@@ -1,0 +1,50 @@
+"""Fig. 12 — execution-planner wall time (paper: < 3 s everywhere)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import ClusterSpec
+from repro.core.plan import plan as mkplan
+from repro.core.workloads import multitask_clip, ofasys, qwen_val
+
+
+def run() -> List[Dict]:
+    rows = []
+    for name, maker, k in [
+        ("multitask_clip", multitask_clip, 10),
+        ("ofasys", ofasys, 7),
+        ("qwen_val", qwen_val, 3),
+    ]:
+        for n in (16, 32, 64, 128):
+            g = maker(k)
+            t0 = time.perf_counter()
+            p = mkplan(g, ClusterSpec(n_devices=n, island_size=8,
+                                      mem_bytes=96e9))
+            wall = time.perf_counter() - t0
+            rows.append(
+                {
+                    "bench": "planner_cost",
+                    "workload": name,
+                    "devices": n,
+                    "planner_s": wall,
+                    "n_waves": len(p.waves()),
+                    "n_steps": len(p.steps),
+                }
+            )
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(f"{r['workload']:18s} N={r['devices']:4d} "
+              f"plan={r['planner_s']*1e3:8.1f} ms "
+              f"waves={r['n_waves']:3d} steps={r['n_steps']:3d}")
+    worst = max(r["planner_s"] for r in rows)
+    print(f"worst planner time: {worst:.2f}s (paper: <3s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSONs.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments \
+        dryrun_baseline.json dryrun_records.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+from .roofline import analyze_records, PEAK, HBM, ICI
+
+
+def md_roofline(rows: List[Dict], mesh: str, caption: str) -> str:
+    out = [f"### {caption}", ""]
+    out.append("| arch | shape | compute s | memory s | collective s | "
+               "dominant | useful | roofline-MFU |")
+    out.append("|---|---|---:|---:|---:|---|---:|---:|")
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_mfu']*100:.1f}% |"
+        )
+    out.append("")
+    return "\n".join(out)
+
+
+def md_dryrun(records: List[Dict], mesh: str) -> str:
+    out = []
+    out.append("| arch | shape | compile s | temp GB/dev | args GB/dev | "
+               "FLOPs/dev | coll GB/dev (AR/AG/A2A/CP) |")
+    out.append("|---|---|---:|---:|---:|---:|---|")
+    for r in records:
+        if r["mesh"] != mesh:
+            continue
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | FAILED: "
+                       f"{r.get('error','?')[:50]} | | | |")
+            continue
+        m = r.get("memory", {})
+        c = r.get("collectives", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} | "
+            f"{m.get('temp_size_in_bytes', 0)/1e9:.1f} | "
+            f"{m.get('argument_size_in_bytes', 0)/1e9:.1f} | "
+            f"{r.get('hlo_flops', 0):.2e} | "
+            f"{c.get('all-reduce', 0)/1e9:.0f}/"
+            f"{c.get('all-gather', 0)/1e9:.0f}/"
+            f"{c.get('all-to-all', 0)/1e9:.0f}/"
+            f"{c.get('collective-permute', 0)/1e9:.0f} |"
+        )
+    out.append("")
+    return "\n".join(out)
+
+
+def main() -> None:
+    baseline_path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_baseline.json"
+    opt_path = sys.argv[2] if len(sys.argv) > 2 else "dryrun_records.json"
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(opt_path) as f:
+        opt = json.load(f)
+    base_rows = analyze_records(base)
+    opt_rows = analyze_records(opt)
+
+    print("## §Dry-run (optimized configs, single-pod 16×16)\n")
+    print(md_dryrun(opt, "16x16"))
+    print("## §Dry-run (optimized configs, multi-pod 2×16×16)\n")
+    print(md_dryrun(opt, "2x16x16"))
+    print("## §Roofline — paper-faithful BASELINE (single-pod)\n")
+    print(md_roofline(base_rows, "16x16", "baseline 16×16"))
+    print("## §Roofline — OPTIMIZED (single-pod)\n")
+    print(md_roofline(opt_rows, "16x16", "optimized 16×16"))
+
+    n_ok_b = sum(r.get("ok", False) for r in base)
+    n_ok_o = sum(r.get("ok", False) for r in opt)
+    print(f"\nbaseline cells OK: {n_ok_b}/{len(base)}; "
+          f"optimized cells OK: {n_ok_o}/{len(opt)}")
+
+
+if __name__ == "__main__":
+    main()

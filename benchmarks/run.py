@@ -1,0 +1,70 @@
+"""Benchmark driver: one module per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json out.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from . import (
+    bench_breakdown,
+    bench_case_study,
+    bench_dynamicity,
+    bench_end_to_end,
+    bench_estimator,
+    bench_kernels,
+    bench_optimality,
+    bench_planner_cost,
+    roofline,
+)
+
+BENCHES = {
+    "end_to_end": bench_end_to_end,       # Fig. 8
+    "case_study": bench_case_study,       # Fig. 9
+    "breakdown": bench_breakdown,         # Fig. 10
+    "optimality": bench_optimality,       # Fig. 11
+    "planner_cost": bench_planner_cost,   # Fig. 12
+    "estimator": bench_estimator,         # Fig. 4
+    "dynamicity": bench_dynamicity,       # Appendix D analogue
+    "kernels": bench_kernels,             # substrate
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    ap.add_argument("--json", default="bench_results.json")
+    ap.add_argument("--dryrun-records", default="dryrun_records.json")
+    args = ap.parse_args()
+
+    all_rows = []
+    names = [args.only] if args.only else list(BENCHES)
+    for name in names:
+        mod = BENCHES[name]
+        print(f"\n=== {name} " + "=" * (60 - len(name)))
+        t0 = time.perf_counter()
+        mod.main()
+        rows = mod.run()
+        for r in rows:
+            all_rows.append(r)
+        print(f"--- {name} done in {time.perf_counter() - t0:.1f}s")
+
+    if not args.only:
+        print("\n=== roofline " + "=" * 52)
+        rrows = roofline.run(args.dryrun_records)
+        if rrows:
+            print(roofline.format_table(rrows, mesh="16x16"))
+            all_rows.extend({k: v for k, v in r.items()} for r in rrows)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_rows, f, indent=1, default=str)
+        print(f"\n[benchmarks] wrote {len(all_rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

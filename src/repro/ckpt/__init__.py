@@ -1,0 +1,19 @@
+"""Checkpointing, elastic restore, and straggler mitigation."""
+
+from .checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from .remesh import restore_to_mesh
+from .straggler import StragglerDetector
+
+__all__ = [
+    "CheckpointManager",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "restore_to_mesh",
+    "StragglerDetector",
+]

@@ -1,0 +1,209 @@
+"""Sharded npz checkpoints with a JSON manifest: atomic, step-addressed,
+keep-last-k, auto-resumable.
+
+Layout::
+
+    <dir>/step_000123/
+        manifest.json    # step, tree structure, dtypes, shapes, extra meta
+        shard_00000.npz  # flattened leaves, chunked ≤ ``shard_bytes``
+
+Writes go to ``step_XXXX.tmp`` and are atomically renamed, so a crash mid-
+save can never corrupt the latest checkpoint; ``latest_step`` only ever sees
+complete directories.  Arrays are gathered to host before save (on a real
+multi-host pod each host writes its addressable shards; the manifest layout
+is host-count independent, which is what lets :mod:`repro.ckpt.remesh`
+restore onto a different mesh).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+try:  # ml_dtypes ships with jax; bf16/f8 arrays need a view-cast for npz
+    import ml_dtypes
+
+    _ML_DTYPE_NAMES = {
+        np.dtype(ml_dtypes.bfloat16): "bfloat16",
+        np.dtype(ml_dtypes.float8_e4m3fn): "float8_e4m3fn",
+        np.dtype(ml_dtypes.float8_e5m2): "float8_e5m2",
+    }
+    _ML_DTYPE_BY_NAME = {v: k for k, v in _ML_DTYPE_NAMES.items()}
+except ImportError:  # pragma: no cover
+    _ML_DTYPE_NAMES, _ML_DTYPE_BY_NAME = {}, {}
+
+
+def _step_dir(base: str, step: int) -> str:
+    return os.path.join(base, f"step_{step:09d}")
+
+
+def _flatten_with_names(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path) or "leaf"
+        named.append((name, leaf))
+    return named, treedef
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def save_checkpoint(
+    base: str,
+    step: int,
+    tree,
+    *,
+    extra: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+    shard_bytes: int = 1 << 30,
+) -> str:
+    """Atomically save ``tree`` at ``step``; prune to the newest ``keep``."""
+    os.makedirs(base, exist_ok=True)
+    final = _step_dir(base, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    named, _ = _flatten_with_names(tree)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "extra": extra or {},
+        "leaves": [],
+        "shards": [],
+    }
+    shard_idx, shard_cur, shard_size = 0, {}, 0
+    for name, leaf in named:
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = _ML_DTYPE_NAMES.get(arr.dtype, str(arr.dtype))
+        if arr.dtype in _ML_DTYPE_NAMES:  # npz can't hold bf16 — view as u16
+            arr = arr.view(np.uint16)
+        manifest["leaves"].append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": dtype_name,
+                "shard": shard_idx,
+            }
+        )
+        shard_cur[name.replace("/", "%")] = arr
+        shard_size += arr.nbytes
+        if shard_size >= shard_bytes:
+            _write_shard(tmp, shard_idx, shard_cur, manifest)
+            shard_idx, shard_cur, shard_size = shard_idx + 1, {}, 0
+    if shard_cur or not manifest["shards"]:
+        _write_shard(tmp, shard_idx, shard_cur, manifest)
+
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+
+    _prune(base, keep)
+    return final
+
+
+def _write_shard(tmp: str, idx: int, arrays: Dict[str, np.ndarray], manifest):
+    path = os.path.join(tmp, f"shard_{idx:05d}.npz")
+    np.savez(path, **arrays)
+    manifest["shards"].append(os.path.basename(path))
+
+
+def _prune(base: str, keep: int) -> None:
+    steps = sorted(all_steps(base))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(_step_dir(base, s), ignore_errors=True)
+
+
+def all_steps(base: str) -> List[int]:
+    if not os.path.isdir(base):
+        return []
+    out = []
+    for d in os.listdir(base):
+        m = _STEP_RE.match(d)
+        if m and os.path.exists(os.path.join(base, d, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(base: str) -> Optional[int]:
+    steps = all_steps(base)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    base: str, tree_like, step: Optional[int] = None
+) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``tree_like``. Returns (tree, manifest)."""
+    if step is None:
+        step = latest_step(base)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {base}")
+    d = _step_dir(base, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    loaded: Dict[str, np.ndarray] = {}
+    for shard in manifest["shards"]:
+        with np.load(os.path.join(d, shard)) as z:
+            for k in z.files:
+                loaded[k.replace("%", "/")] = z[k]
+    dtypes = {l["name"]: l["dtype"] for l in manifest["leaves"]}
+
+    named, treedef = _flatten_with_names(tree_like)
+    leaves = []
+    for name, like in named:
+        if name not in loaded:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = loaded[name]
+        want_dtype = dtypes.get(name)
+        if want_dtype in _ML_DTYPE_BY_NAME:
+            arr = arr.view(_ML_DTYPE_BY_NAME[want_dtype])
+        want = tuple(like.shape) if hasattr(like, "shape") else None
+        if want is not None and tuple(arr.shape) != want:
+            raise ValueError(
+                f"leaf {name!r}: checkpoint shape {arr.shape} != expected {want}"
+            )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+class CheckpointManager:
+    """Driver-facing wrapper: periodic save, auto-resume, keep-k."""
+
+    def __init__(self, base: str, *, every: int = 50, keep: int = 3):
+        self.base = base
+        self.every = every
+        self.keep = keep
+
+    def maybe_save(self, step: int, tree, extra=None) -> Optional[str]:
+        if self.every > 0 and step % self.every == 0:
+            return save_checkpoint(
+                self.base, step, tree, extra=extra, keep=self.keep
+            )
+        return None
+
+    def restore_latest(self, tree_like):
+        step = latest_step(self.base)
+        if step is None:
+            return None, None
+        tree, manifest = restore_checkpoint(self.base, tree_like, step)
+        return tree, manifest

@@ -1,0 +1,28 @@
+"""Elastic re-mesh restore: load a checkpoint onto a *different* mesh.
+
+Checkpoints store logical (unsharded) arrays, so restoring after losing or
+gaining pods is just re-sharding: build the new mesh, derive the new
+PartitionSpecs from the same name-based rules, and ``device_put`` each leaf.
+This is the restart path for node failures (shrink) and elastic scale-up.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def restore_to_mesh(tree, shardings) -> Any:
+    """Place ``tree`` (host numpy / arrays) onto ``shardings`` (same pytree
+    of NamedSharding, e.g. from repro.parallel.tree_param_shardings)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings
+    )
+
+
+def reshard(tree, old_mesh: Mesh, new_shardings) -> Any:
+    """Live re-shard device arrays from one mesh onto new shardings."""
+    host = jax.tree.map(lambda x: jax.device_get(x), tree)
+    return restore_to_mesh(host, new_shardings)

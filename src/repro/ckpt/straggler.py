@@ -1,0 +1,63 @@
+"""Straggler detection: per-host step-time ring buffer + re-plan trigger.
+
+At 1000+ nodes, slow hosts (thermal throttling, failing HBM, noisy
+neighbors) stretch every synchronous step.  The detector keeps a ring
+buffer of per-host step times, flags hosts whose median exceeds the cluster
+median by ``threshold``×, and invokes a callback — in this framework the
+callback re-runs the Spindle planner with the degraded device set (the
+paper's "plan is regenerated when the input workload changes" hook, §5.5),
+or excludes the host and triggers an elastic re-mesh restore
+(:mod:`repro.ckpt.remesh`).
+"""
+
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class StragglerDetector:
+    n_hosts: int
+    window: int = 32  # ring buffer length (steps)
+    threshold: float = 1.5  # flag hosts slower than threshold × cluster median
+    min_samples: int = 8
+    on_straggler: Optional[Callable[[List[int]], None]] = None
+
+    _times: Dict[int, collections.deque] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._times = {
+            h: collections.deque(maxlen=self.window) for h in range(self.n_hosts)
+        }
+
+    def record(self, host: int, step_seconds: float) -> None:
+        self._times[host].append(step_seconds)
+
+    def record_all(self, step_seconds: Sequence[float]) -> None:
+        for h, t in enumerate(step_seconds):
+            self.record(h, t)
+
+    def medians(self) -> Dict[int, float]:
+        return {
+            h: float(np.median(buf)) if len(buf) >= self.min_samples else float("nan")
+            for h, buf in self._times.items()
+        }
+
+    def stragglers(self) -> List[int]:
+        med = self.medians()
+        vals = [v for v in med.values() if v == v]  # drop NaN
+        if len(vals) < max(2, self.n_hosts // 2):
+            return []
+        cluster = float(np.median(vals))
+        out = [h for h, v in med.items() if v == v and v > self.threshold * cluster]
+        return out
+
+    def check(self) -> List[int]:
+        s = self.stragglers()
+        if s and self.on_straggler is not None:
+            self.on_straggler(s)
+        return s

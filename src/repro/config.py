@@ -1,0 +1,302 @@
+"""Framework configuration system.
+
+``ArchConfig`` describes one architecture (all 10 assigned archs + the
+paper's MT MM workload models lower onto it); ``ShapeConfig`` one input
+shape; ``MeshConfig``/``ParallelConfig`` the distribution; ``TrainConfig``
+the end-to-end driver.  Configs are plain frozen dataclasses so they can be
+hashed into jit cache keys and serialized into checkpoints/manifests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0  # per-expert FFN width
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # physical expert count: pad dead (never-routed, zero-init) experts so
+    # the expert dim divides the model axis and true EP applies — e.g.
+    # qwen2-moe's 60 logical experts padded to 64 (§Perf iteration on the
+    # collective-bound cell). 0 → no padding.
+    pad_to: int = 0
+
+    @property
+    def n_physical(self) -> int:
+        return max(self.pad_to, self.n_experts)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """One architecture.  Field semantics follow the assignment table."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # --- attention details
+    head_dim: int = 0  # 0 → d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    local_window: int = 0  # sliding-window size for local attention blocks
+    # --- family specifics
+    moe: MoEConfig = MoEConfig()
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("rglru","rglru","attn")
+    # ssm
+    n_ssm_heads: int = 0
+    # enc-dec (audio): encoder/decoder depth split; 0 → decoder-only
+    n_enc_layers: int = 0
+    # vlm / audio frontends are stubs per spec: embeddings arrive precomputed
+    frontend_stub_len: int = 0  # positions occupied by stub embeddings
+    # --- numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    opt_dtype: str = "float32"
+    # --- misc
+    tie_embeddings: bool = False
+    notes: str = ""
+    # Per-arch ShardingConfig overrides (e.g. 60 experts don't divide a
+    # 16-way model axis → expert-TP instead of EP). Tuple of (field, value).
+    sharding_defaults: Tuple[Tuple[str, object], ...] = ()
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe.n_experts > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports O(1)-state / windowed decode (long_500k)."""
+        return self.family in ("ssm", "hybrid")
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, dff, V = self.d_model, self.d_ff, self.vocab
+        hd = self.resolved_head_dim
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) + (
+            self.n_heads * hd
+        ) * d
+        if self.is_moe:
+            m = self.moe
+            ffn = m.n_experts * 3 * d * m.d_ff_expert + m.n_shared_experts * 3 * d * (
+                m.d_ff_expert
+            ) + d * m.n_experts  # router
+        elif dff > 0:
+            ffn = 3 * d * dff
+        else:  # xLSTM-style blocks: internal projections ≈ 8·d²
+            ffn = 8 * d * d
+        per_layer = attn + ffn + 2 * d
+        total_layers = self.n_layers + self.n_enc_layers
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        return int(per_layer * total_layers + emb)
+
+    def n_active_params(self) -> int:
+        """Active (per-token) parameter count — MoE activates top-k only."""
+        if not self.is_moe:
+            return self.n_params()
+        d = self.d_model
+        m = self.moe
+        hd = self.resolved_head_dim
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) + (
+            self.n_heads * hd
+        ) * d
+        ffn = (m.top_k + m.n_shared_experts) * 3 * d * m.d_ff_expert + d * m.n_experts
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return int(per_layer * self.n_layers + emb)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned per-arch shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_shapes(arch: "ArchConfig") -> List[str]:
+    """Shape cells for an arch per the spec's skip rules (DESIGN.md §5)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch.sub_quadratic:
+        out.append("long_500k")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mesh / parallelism
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    """Sharding policy knobs (the §Perf hillclimb levers)."""
+
+    fsdp: bool = True  # shard params over the data axis (ZeRO-3)
+    fsdp_over_pod: bool = False  # extend FSDP across the pod axis (DCN)
+    shard_experts: bool = True  # EP over the model axis
+    seq_shard_acts: bool = True  # sequence-shard long activations over model
+    # activation checkpoint policy: "block" (default — recompute each layer
+    # group in backward; without it chunked-attention scan residuals hold
+    # O(S²) fp32 per layer) | "none"
+    remat: str = "block"
+    logits_chunk: int = 0  # 0 = unchunked; else vocab-loss seq chunk size
+    use_pallas: bool = False  # enable Pallas kernels (TPU runtime only)
+    # Megatron-style sequence parallelism for the residual stream: store
+    # layer-boundary activations (and remat carries) sharded over "model"
+    # along the sequence dim; converts the 2 TP all-reduces per layer into
+    # all-gather + reduce-scatter at 1/tp the stored size. §Perf lever for
+    # memory-bound train cells.
+    seq_parallel: bool = False
+    # microbatch gradient accumulation (1 = off): cuts activation/remat
+    # memory by the factor at the cost of per-microbatch collective reps.
+    grad_accum: int = 1
+    # gradient-accumulator dtype ("float32" | "bfloat16"): bf16 halves the
+    # accumulator + transient-grad HBM on the biggest cells.
+    accum_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    arch: str = "qwen3-0.6b"
+    shape: str = "train_4k"
+    steps: int = 100
+    lr: float = 3e-4
+    warmup_steps: int = 10
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    seed: int = 0
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register_arch(cfg: ArchConfig) -> ArchConfig:
+    if cfg.name in _REGISTRY:
+        raise ValueError(f"duplicate arch {cfg.name}")
+    if cfg.family not in FAMILIES:
+        raise ValueError(f"unknown family {cfg.family}")
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    _ensure_registered()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    _ensure_registered()
+    return sorted(_REGISTRY)
+
+
+def _ensure_registered() -> None:
+    if not _REGISTRY:
+        from . import configs  # noqa: F401  (imports register everything)
+
+
+def default_sharding(cfg: ArchConfig, **overrides) -> ShardingConfig:
+    """The arch's default ShardingConfig (its sharding_defaults applied)."""
+    kw = dict(cfg.sharding_defaults)
+    kw.update(overrides)
+    return ShardingConfig(**kw)
+
+
+def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """A smoke-test-sized config of the same family (per-arch smoke tests).
+
+    Shrinks depth/width/vocab/experts while preserving every structural
+    feature (GQA ratio, qk_norm, block pattern, MoE top-k, enc-dec split).
+    """
+    kv_ratio = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    n_heads = 4
+    n_kv = max(n_heads // kv_ratio, 1)
+    moe = cfg.moe
+    if cfg.is_moe:
+        moe = replace(
+            cfg.moe,
+            n_experts=min(cfg.moe.n_experts, 8),
+            top_k=min(cfg.moe.top_k, 2),
+            n_shared_experts=min(cfg.moe.n_shared_experts, 1),
+            d_ff_expert=64,
+            pad_to=0,
+        )
+    pattern_len = max(len(cfg.block_pattern), 1)
+    small = replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=max(2, 2 * pattern_len),
+        n_enc_layers=2 if cfg.n_enc_layers else 0,
+        d_model=64,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        moe=moe,
+        local_window=min(cfg.local_window, 64) if cfg.local_window else 0,
+        frontend_stub_len=16 if cfg.frontend_stub_len else 0,
+        param_dtype="float32",
+        compute_dtype="float32",
+        opt_dtype="float32",
+    )
+    return replace(small, **overrides) if overrides else small

@@ -1,0 +1,35 @@
+"""Assigned architecture configs (importing this package registers all).
+
+Ten architectures from the public pool, each in its own module with the
+exact assignment-table numbers, plus the paper's own MT MM workloads
+(:mod:`repro.core.workloads`) which are TaskGraphs for the planner rather
+than single-model ArchConfigs.
+"""
+
+from . import (  # noqa: F401  — import side-effect: register_arch()
+    deepseek_67b,
+    glm4_9b,
+    llama3_405b,
+    pixtral_12b,
+    qwen2_moe_a2_7b,
+    qwen3_0_6b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_9b,
+    seamless_m4t_medium,
+    xlstm_125m,
+)
+
+from ..config import get_arch, list_archs  # noqa: F401
+
+ASSIGNED = [
+    "qwen2-moe-a2.7b",
+    "qwen3-moe-30b-a3b",
+    "llama3-405b",
+    "qwen3-0.6b",
+    "deepseek-67b",
+    "glm4-9b",
+    "seamless-m4t-medium",
+    "xlstm-125m",
+    "pixtral-12b",
+    "recurrentgemma-9b",
+]

@@ -1,0 +1,37 @@
+"""qwen2-moe-a2.7b — 24L d2048 16H (GQA kv=16) MoE 60e top-4 + 4 shared.
+
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]  moe_intermediate_size=1408; the 4 shared
+experts total 4·1408 = 5632 (= shared_expert_intermediate_size).  60 experts
+do not divide the 16-way model axis; the baseline used expert-TP (hidden dim
+over "model"), which all-reduces the (E,C,d) dispatch buffer every layer —
+the §Perf hillclimb pads 4 dead (zero-init, never-routed) experts so true
+EP applies (EXPERIMENTS.md §Perf cell 1).
+"""
+
+from ..config import ArchConfig, MoEConfig, register_arch
+
+QWEN2_MOE_A2_7B = register_arch(
+    ArchConfig(
+        name="qwen2-moe-a2.7b",
+        family="moe",
+        n_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1408,
+        vocab=151936,
+        head_dim=128,
+        rope_theta=1e6,
+        moe=MoEConfig(
+            n_experts=60,
+            top_k=4,
+            n_shared_experts=4,
+            d_ff_expert=1408,
+            pad_to=64,  # §Perf: 4 dead experts ⇒ EP divides the model axis
+        ),
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        sharding_defaults=(("grad_accum", 8),),
+        notes="4 shared + 60 routed top-4; padded to 64 physical for EP",
+    )
+)

@@ -1,0 +1,25 @@
+"""seamless-m4t-medium — enc-dec 12L+12L d1024 16H (MHA) d_ff=4096 vocab=256206.
+
+[arXiv:2308.11596; hf]  Multimodal enc-dec; the speech frontend is a STUB
+per the assignment spec: ``input_specs()`` provides precomputed frame
+embeddings (B, S_enc, d) with S_enc = seq_len // 4 (DESIGN.md §5).
+"""
+
+from ..config import ArchConfig, register_arch
+
+SEAMLESS_M4T_MEDIUM = register_arch(
+    ArchConfig(
+        name="seamless-m4t-medium",
+        family="audio",
+        n_layers=12,       # decoder depth
+        n_enc_layers=12,   # encoder depth
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=4096,
+        vocab=256206,
+        rope_theta=1e4,
+        frontend_stub_len=1,  # marker: modality frontend is stubbed
+        notes="enc-dec; speech frontend stubbed as precomputed frames",
+    )
+)

@@ -1,0 +1,77 @@
+"""Spindle core: the paper's contribution (execution planner + plan model).
+
+Pipeline:  TaskGraph → contract() → MetaGraph → ScalabilityEstimator →
+allocate_level() → schedule() → place() → ExecutionPlan (→ WaveEngine).
+"""
+
+from .graph import ComponentSpec, FlowSpec, GraphBuilder, OpNode, OpWorkload, TaskGraph
+from .contraction import MetaGraph, MetaOp, contract
+from .estimator import (
+    ParallelConfig,
+    ScalabilityEstimator,
+    ScalingCurve,
+    best_config,
+    enumerate_configs,
+    valid_allocations,
+)
+from .costmodel import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, HardwareSpec, V5E, make_time_fn, op_time
+from .allocator import ASLTuple, LevelAllocation, allocate_level, discretize, solve_continuous
+from .scheduler import Schedule, Wave, WaveEntry, check_schedule, schedule
+from .placement import ClusterSpec, Placement, PlacedEntry, place
+from .plan import ExecutionPlan, PlanStep, plan
+from .simulator import (
+    SimResult,
+    simulate_distmm_mt,
+    simulate_optimus,
+    simulate_plan,
+    simulate_sequential,
+    simulate_spindle,
+)
+
+__all__ = [
+    "ComponentSpec",
+    "FlowSpec",
+    "GraphBuilder",
+    "OpNode",
+    "OpWorkload",
+    "TaskGraph",
+    "MetaGraph",
+    "MetaOp",
+    "contract",
+    "ParallelConfig",
+    "ScalabilityEstimator",
+    "ScalingCurve",
+    "best_config",
+    "enumerate_configs",
+    "valid_allocations",
+    "HardwareSpec",
+    "V5E",
+    "make_time_fn",
+    "op_time",
+    "PEAK_FLOPS_BF16",
+    "HBM_BW",
+    "ICI_BW",
+    "ASLTuple",
+    "LevelAllocation",
+    "allocate_level",
+    "discretize",
+    "solve_continuous",
+    "Schedule",
+    "Wave",
+    "WaveEntry",
+    "check_schedule",
+    "schedule",
+    "ClusterSpec",
+    "Placement",
+    "PlacedEntry",
+    "place",
+    "ExecutionPlan",
+    "PlanStep",
+    "plan",
+    "SimResult",
+    "simulate_plan",
+    "simulate_sequential",
+    "simulate_distmm_mt",
+    "simulate_optimus",
+    "simulate_spindle",
+]

@@ -1,0 +1,236 @@
+"""Resource allocator: MPSP relaxation + bi-point discretization (Spindle §3.3).
+
+Per MetaLevel (MetaOps ``Ṽ_M``, cluster of ``N`` devices):
+
+1. **Continuous optimum** (Theorem 1, Weglarz).  With positive non-increasing
+   ``T_m(n)`` the malleable-project-scheduling optimum has every MetaOp start
+   at 0, run all ``L_m`` operators on a constant real allocation ``n*_m``,
+   and finish together at ``C̃*`` determined by
+
+        T_m(n*_m) · L_m = C̃*   ∀m        Σ_m n*_m = N            (eq. 8)
+
+   found by **bisection** on  g(C) := Σ_m T_m⁻¹(C / L_m) = N      (eq. 9),
+   g being continuous and non-increasing in C.
+
+2. **Bi-point discretization.**  Each real ``n*_m`` is represented by two
+   ASL-tuples ⟨n̄_m, ·, l̄_m⟩, ⟨n̲_m, ·, l̲_m⟩ with n̄/n̲ the closest *valid*
+   integers bracketing n*_m, and l̄/l̲ solving
+
+        l̄ + l̲ = L_m                                             (10a)
+        T_m(n̄)·l̄ + T_m(n̲)·l̲ = C̃*                               (10b)
+
+   l's are then rounded to integers (zero-length tuples dropped; ``n̲ = 0``
+   is the dummy allocation and is dropped after serving (10b)).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .contraction import MetaGraph, MetaOp
+from .estimator import (
+    ParallelConfig,
+    ScalabilityEstimator,
+    ScalingCurve,
+    best_config,
+    valid_allocations,
+)
+
+
+@dataclass
+class ASLTuple:
+    """⟨n, s, l⟩: ``l`` consecutive operators on ``n`` devices from time ``s``.
+
+    ``s`` is filled in by the wavefront scheduler; the allocator leaves it at
+    ``None``.  ``t_per_op`` caches ``T_m(n)`` so downstream stages never
+    re-query the estimator.
+    """
+
+    meta_id: int
+    n: int
+    l: int
+    t_per_op: float
+    config: ParallelConfig
+    s: Optional[float] = None
+
+    @property
+    def duration(self) -> float:
+        return self.t_per_op * self.l
+
+    def __repr__(self) -> str:
+        return (
+            f"ASL(m{self.meta_id} n={self.n} l={self.l}"
+            f" t/op={self.t_per_op:.2e} s={self.s})"
+        )
+
+
+@dataclass
+class LevelAllocation:
+    """Allocator output for one MetaLevel."""
+
+    c_star: float  # theoretical optimum C̃* of the continuous relaxation
+    n_star: Dict[int, float]  # meta_id -> real-valued optimal allocation
+    tuples: Dict[int, List[ASLTuple]]  # meta_id -> up to two ASL-tuples
+
+
+def solve_continuous(
+    metas: Sequence[MetaOp],
+    curves: Dict[int, ScalingCurve],
+    n_devices: int,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 200,
+) -> Tuple[float, Dict[int, float]]:
+    """Bisection on eq. (9): find C̃* with Σ_m T_m⁻¹(C̃*/L_m) = N."""
+    if not metas:
+        return 0.0, {}
+
+    def g(c: float) -> float:
+        total = 0.0
+        for m in metas:
+            n = curves[m.meta_id].inverse(c / m.L)
+            if math.isinf(n):
+                return math.inf
+            total += n
+        return total
+
+    # Bracket: serial lower bound on speed (everything on 1 device, g small)
+    # vs. everything maximally parallel (g large).
+    c_hi = sum(curves[m.meta_id].estimate(1) * m.L for m in metas)
+    c_lo = max(curves[m.meta_id].estimate(n_devices) * m.L for m in metas) / max(
+        len(metas), 1
+    )
+    c_lo = max(c_lo, 1e-12)
+    # Ensure bracket validity: g(c_hi) <= N <= g(c_lo).
+    for _ in range(80):
+        if g(c_hi) <= n_devices:
+            break
+        c_hi *= 2.0
+    for _ in range(80):
+        if g(c_lo) >= n_devices:
+            break
+        c_lo /= 2.0
+    if g(c_lo) < n_devices:
+        # Even at the fastest feasible point the cluster is bigger than the
+        # total parallelizable work: allocate saturation points.
+        n_star = {
+            m.meta_id: float(
+                min(curves[m.meta_id].n_max, n_devices)
+            )
+            for m in metas
+        }
+        c = max(
+            curves[m.meta_id].estimate(n_star[m.meta_id]) * m.L for m in metas
+        )
+        return c, n_star
+
+    for _ in range(max_iter):
+        c_mid = 0.5 * (c_lo + c_hi)
+        val = g(c_mid)
+        if val > n_devices:
+            c_lo = c_mid
+        else:
+            c_hi = c_mid
+        if (c_hi - c_lo) <= tol * max(c_hi, 1e-12):
+            break
+    c_star = c_hi
+    n_star = {
+        m.meta_id: min(
+            float(n_devices), curves[m.meta_id].inverse(c_star / m.L)
+        )
+        for m in metas
+    }
+    # Numerical cleanup: rescale so the total equals N (preserves ratios).
+    total = sum(n_star.values())
+    if total > 0 and abs(total - n_devices) / n_devices > 1e-3:
+        scale = n_devices / total
+        n_star = {k: v * scale for k, v in n_star.items()}
+    return c_star, n_star
+
+
+def bracket_valid(
+    m: MetaOp, n_star: float, n_devices: int
+) -> Tuple[int, int]:
+    """Closest valid integers n̲ ≤ n* ≤ n̄ (n̲ may be the 0 dummy)."""
+    valids = valid_allocations(m, n_devices)
+    lo = 0
+    hi = valids[-1] if valids else 0
+    for v in valids:
+        if v <= n_star:
+            lo = v
+        if v >= n_star:
+            hi = v
+            break
+    if hi < max(lo, 1):
+        hi = max(lo, valids[0] if valids else 1)
+    return lo, hi
+
+
+def discretize(
+    m: MetaOp,
+    curve: ScalingCurve,
+    n_star: float,
+    c_star: float,
+    n_devices: int,
+) -> List[ASLTuple]:
+    """Bi-point discretization of ⟨n*_m, 0, L_m⟩ per conds. (10a)/(10b)."""
+    lo, hi = bracket_valid(m, n_star, n_devices)
+    if lo == hi:
+        cfg = best_config(m, hi)
+        assert cfg is not None
+        return [ASLTuple(m.meta_id, hi, m.L, curve.estimate(hi), cfg)]
+
+    t_hi = curve.estimate(hi)  # faster (more devices)
+    t_lo = curve.estimate(lo) if lo > 0 else math.inf  # slower / dummy
+
+    if lo == 0 or math.isinf(t_lo):
+        # Dummy lower allocation: all L ops run at n̄; (10b) is preserved by
+        # the zero-device tuple which is then ignored (§3.3).
+        cfg = best_config(m, hi)
+        assert cfg is not None
+        return [ASLTuple(m.meta_id, hi, m.L, t_hi, cfg)]
+
+    # Solve l̄·t_hi + l̲·t_lo = C̃*, l̄ + l̲ = L.
+    denom = t_hi - t_lo
+    if abs(denom) < 1e-18:
+        l_hi_f = float(m.L)
+    else:
+        l_hi_f = (c_star - t_lo * m.L) / denom
+    l_hi_f = min(max(l_hi_f, 0.0), float(m.L))
+    l_lo_f = m.L - l_hi_f
+
+    l_hi = int(round(l_hi_f))
+    l_lo = m.L - l_hi  # keep (10a) exact under rounding
+
+    out: List[ASLTuple] = []
+    if l_hi > 0:
+        cfg = best_config(m, hi)
+        assert cfg is not None
+        out.append(ASLTuple(m.meta_id, hi, l_hi, t_hi, cfg))
+    if l_lo > 0:
+        cfg = best_config(m, lo)
+        assert cfg is not None
+        out.append(ASLTuple(m.meta_id, lo, l_lo, t_lo, cfg))
+    if not out:  # L rounded away entirely — never valid, restore full run
+        cfg = best_config(m, hi)
+        assert cfg is not None
+        out.append(ASLTuple(m.meta_id, hi, m.L, t_hi, cfg))
+    return out
+
+
+def allocate_level(
+    metas: Sequence[MetaOp],
+    estimator: ScalabilityEstimator,
+    n_devices: int,
+) -> LevelAllocation:
+    """Full §3.3 pipeline for one MetaLevel."""
+    curves = {m.meta_id: estimator.curve(m) for m in metas}
+    c_star, n_star = solve_continuous(metas, curves, n_devices)
+    tuples: Dict[int, List[ASLTuple]] = {}
+    for m in metas:
+        tuples[m.meta_id] = discretize(
+            m, curves[m.meta_id], n_star[m.meta_id], c_star, n_devices
+        )
+    return LevelAllocation(c_star=c_star, n_star=n_star, tuples=tuples)

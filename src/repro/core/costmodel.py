@@ -1,0 +1,100 @@
+"""Analytic TPU v5e cost model — the profiling source for the estimator.
+
+The paper profiles ``T_m(n)`` on the physical cluster.  Without hardware in
+this container we substitute an analytic roofline-style model grounded in the
+v5e datasheet (DESIGN.md §3.4 documents this substitution):
+
+  * 197 TFLOP/s bf16 per chip (MXU peak),
+  * 819 GB/s HBM bandwidth per chip,
+  * ~50 GB/s/link ICI (ring/torus links),
+  * a fixed per-op dispatch/launch overhead.
+
+Per-operator time under ``ParallelConfig(dp, tp)`` with ``n = dp·tp`` chips:
+
+  t_compute = flops / (n · PEAK · eff)      eff = MXU utilization, saturating
+                                            both in per-chip FLOPs and in
+                                            per-DP-shard tokens (the matmul
+                                            M-dimension): light ops and high
+                                            DP degrees can't fill the
+                                            systolic array — this is what
+                                            makes light MetaOps scale poorly
+                                            (Fig. 4) and what the paper's
+                                            "lightweight audio operator on 16
+                                            GPUs is underutilized or idle"
+                                            describes.
+  t_memory  = bytes_hbm / (n · HBM_BW)
+  t_tp_comm = tp-collective payload / ICI   (0 when tp == 1)
+  T = max(t_compute, t_memory) + t_tp_comm + T_LAUNCH
+
+The max() models compute/memory overlap inside a fused op; TP collectives
+are exposed (they sit on the critical path between layer halves).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .contraction import MetaOp
+from .estimator import ParallelConfig
+
+# v5e hardware constants (also used by the roofline analysis).
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+T_LAUNCH = 4e-6  # fixed per-op overhead, seconds
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+    t_launch: float = T_LAUNCH
+    # per-chip FLOPs at which the MXU reaches ~50% of its asymptotic
+    # efficiency; calibrates how quickly light ops fall off the roofline
+    # (calibrated so heavy towers scale near-linearly while light towers
+    # saturate around 4–8 chips, matching the paper's Fig. 4 shape).
+    mxu_knee_flops: float = 5.0e9
+    mxu_max_eff: float = 0.62  # realistic large-matmul MFU on v5e
+    # per-DP-shard tokens at which the matmul M-dimension reaches ~50%
+    # utilization of the 128-wide systolic rows (with pipelining the knee
+    # sits well above 128).
+    token_knee: float = 768.0
+
+
+V5E = HardwareSpec()
+
+
+def op_time(m: MetaOp, cfg: ParallelConfig, hw: HardwareSpec = V5E) -> float:
+    """Per-operator execution time (seconds) under ``cfg``. See module doc."""
+    n = cfg.n
+    w = m.workload
+    flops_per_chip = w.flops / n
+    tokens_per_shard = max(m.batch_size * max(m.seq_len, 1) / cfg.dp, 1.0)
+    eff = (
+        hw.mxu_max_eff
+        * (flops_per_chip / (flops_per_chip + hw.mxu_knee_flops))
+        * (tokens_per_shard / (tokens_per_shard + hw.token_knee))
+    )
+    eff = max(eff, 1e-3)
+    t_compute = flops_per_chip / (hw.peak_flops * eff)
+    t_memory = w.bytes_hbm / (n * hw.hbm_bw)
+    t_tp = 0.0
+    if cfg.tp > 1 and w.tp_comm_bytes > 0:
+        # ring all-reduce of the per-dp-shard payload over tp chips:
+        # 2·(tp-1)/tp of the payload crosses each link.
+        payload = w.tp_comm_bytes / cfg.dp
+        t_tp = 2.0 * (cfg.tp - 1) / cfg.tp * payload / hw.ici_bw
+    return max(t_compute, t_memory) + t_tp + hw.t_launch
+
+
+def v5e_time_fn(m: MetaOp, cfg: ParallelConfig) -> float:
+    return op_time(m, cfg, V5E)
+
+
+def make_time_fn(hw: HardwareSpec):
+    def fn(m: MetaOp, cfg: ParallelConfig) -> float:
+        return op_time(m, cfg, hw)
+
+    return fn

@@ -1,0 +1,148 @@
+"""Execution plan assembly — the planner driver (Spindle Fig. 2, §3).
+
+``plan()`` runs the full pipeline: contraction → scaling curves → per-level
+allocation → wavefront schedule → device placement, producing an
+:class:`ExecutionPlan` the runtime engine (and the simulator) consume.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .contraction import MetaGraph, contract
+from .costmodel import HardwareSpec, V5E, make_time_fn
+from .estimator import ParallelConfig, ScalabilityEstimator, TimeFn
+from .graph import TaskGraph
+from .placement import ClusterSpec, Placement, place
+from .scheduler import Schedule, check_schedule, schedule
+
+
+@dataclass
+class PlanStep:
+    """One executable unit: a sliced MetaOp on a concrete device group."""
+
+    wave_index: int
+    level: int
+    meta_id: int
+    meta_name: str
+    op_ids: List[int]  # operators of the MetaOp executed in this step
+    devices: Tuple[int, ...]
+    dp: int
+    tp: int
+    start: float
+    duration: float
+    param_group: Optional[str]
+
+
+@dataclass
+class ExecutionPlan:
+    steps: List[PlanStep]
+    makespan: float
+    c_star_total: float
+    n_devices: int
+    planning_seconds: float
+    schedule: Schedule
+    placement: Placement
+    meta_graph: MetaGraph
+
+    # ------------------------------------------------------------------
+    def waves(self) -> Dict[int, List[PlanStep]]:
+        out: Dict[int, List[PlanStep]] = {}
+        for s in self.steps:
+            out.setdefault(s.wave_index, []).append(s)
+        return out
+
+    def param_device_groups(self) -> Dict[str, Tuple[int, ...]]:
+        """The global parameter device-group pool {D_i -> {W_j}} (§3.6 (3)).
+
+        For each param_group, the synchronization group is the union of all
+        devices that ever instantiate it.
+        """
+        groups: Dict[str, set] = {}
+        for s in self.steps:
+            if s.param_group:
+                groups.setdefault(s.param_group, set()).update(s.devices)
+        return {k: tuple(sorted(v)) for k, v in groups.items()}
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "makespan": self.makespan,
+                "c_star_total": self.c_star_total,
+                "n_devices": self.n_devices,
+                "planning_seconds": self.planning_seconds,
+                "steps": [
+                    {
+                        "wave": s.wave_index,
+                        "level": s.level,
+                        "meta": s.meta_id,
+                        "name": s.meta_name,
+                        "ops": s.op_ids,
+                        "devices": list(s.devices),
+                        "dp": s.dp,
+                        "tp": s.tp,
+                        "start": s.start,
+                        "duration": s.duration,
+                        "param_group": s.param_group,
+                    }
+                    for s in self.steps
+                ],
+            },
+            indent=2,
+        )
+
+
+def plan(
+    graph: TaskGraph,
+    cluster: ClusterSpec,
+    *,
+    time_fn: Optional[TimeFn] = None,
+    hw: HardwareSpec = V5E,
+    placement_strategy: str = "spindle",
+    profile_powers_of_two: bool = True,
+) -> ExecutionPlan:
+    """Full Spindle planning pipeline."""
+    t0 = time.perf_counter()
+    mg = contract(graph)
+    est = ScalabilityEstimator(
+        time_fn or make_time_fn(hw),
+        cluster.n_devices,
+        profile_powers_of_two=profile_powers_of_two,
+    )
+    sched = schedule(mg, est, cluster.n_devices)
+    check_schedule(sched, mg, cluster.n_devices)
+    placement = place(sched, mg, cluster, strategy=placement_strategy)
+    t1 = time.perf_counter()
+
+    steps: List[PlanStep] = []
+    for w in sched.waves:
+        for e in w.entries:
+            m = mg.meta_ops[e.meta_id]
+            steps.append(
+                PlanStep(
+                    wave_index=w.index,
+                    level=w.level,
+                    meta_id=e.meta_id,
+                    meta_name=m.name,
+                    op_ids=m.op_ids[e.op_offset : e.op_offset + e.l],
+                    devices=placement.devices_for(w.index, e.meta_id),
+                    dp=e.config.dp,
+                    tp=e.config.tp,
+                    start=e.start,
+                    duration=e.duration,
+                    param_group=m.param_group,
+                )
+            )
+    return ExecutionPlan(
+        steps=steps,
+        makespan=sched.makespan,
+        c_star_total=sched.c_star_total,
+        n_devices=cluster.n_devices,
+        planning_seconds=t1 - t0,
+        schedule=sched,
+        placement=placement,
+        meta_graph=mg,
+    )

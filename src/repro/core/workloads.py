@@ -1,0 +1,323 @@
+"""The paper's MT MM evaluation workloads as TaskGraphs (Spindle §5.1, Tab. 1b).
+
+Three workload families, matching the paper's configuration table:
+
+  * **Multitask-CLIP** — ImageBind-style: per-modality encoder towers joined
+    by a lightweight contrastive cross-modal module.  1.20B params, up to 6
+    modalities / 10 tasks.  Cross-modal workload ≪ encoder workload.
+  * **OFASys** — unified encoder-decoder LM as the cross-modal module, with
+    lightweight per-modality adaptors.  0.66B params, 6 modalities / 7 tasks.
+    Cross-modal ≈ encoders.
+  * **QWen-VAL** — decoder-only LLM cross-modal module dominating the
+    encoders.  9.25B params, 3 modalities / 3 tasks.
+
+Plus ``mt_backbone_suite`` — a multi-task workload assembled from the
+*assigned* architectures (qwen3-0.6b text tower, pixtral-ViT vision tower,
+seamless speech encoder, shared decoder), exercising the planner on the
+assigned families (DESIGN.md §6).
+
+Workload numbers (flops/bytes per layer) are derived from standard
+transformer accounting: train step ≈ 6·params·tokens FLOPs per layer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .graph import ComponentSpec, FlowSpec, GraphBuilder, OpWorkload, TaskGraph
+
+BYTES_BF16 = 2
+
+
+def transformer_layer_workload(
+    d_model: int,
+    d_ff: int,
+    n_heads: int,
+    batch: int,
+    seq: int,
+    *,
+    training: bool = True,
+) -> OpWorkload:
+    """Per-layer workload for a standard transformer block."""
+    tokens = batch * seq
+    params = 4 * d_model * d_model + 3 * d_model * d_ff  # attn + swiglu
+    attn_flops = 4 * tokens * seq * d_model  # QK^T + AV, fwd
+    mm_flops = 2 * tokens * params
+    fwd = mm_flops + attn_flops
+    flops = 3 * fwd if training else fwd  # bwd ≈ 2× fwd
+    act = tokens * d_model * BYTES_BF16
+    bytes_hbm = (params * BYTES_BF16 + 8 * act) * (3 if training else 1)
+    # Megatron TP: 2 all-reduces of the activation per layer (fwd), 2 (bwd).
+    tp_comm = (4 if training else 2) * act
+    return OpWorkload(
+        flops=float(flops),
+        bytes_hbm=float(bytes_hbm),
+        param_bytes=float(params * BYTES_BF16),
+        act_bytes=float(act),
+        tp_comm_bytes=float(tp_comm),
+    )
+
+
+def loss_module_workload(d_model: int, batch: int) -> OpWorkload:
+    """Lightweight contrastive-loss cross-modal module (Multitask-CLIP)."""
+    flops = 6.0 * batch * batch * d_model  # similarity matrix fwd+bwd
+    act = batch * d_model * BYTES_BF16
+    return OpWorkload(
+        flops=flops,
+        bytes_hbm=4.0 * act,
+        param_bytes=float(d_model * BYTES_BF16),
+        act_bytes=float(act),
+        tp_comm_bytes=0.0,
+    )
+
+
+@dataclass(frozen=True)
+class TowerSpec:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    n_heads: int
+    seq: int
+
+
+# Representative modality encoder towers (ImageBind/OFASys-style sizes).
+MODALITY_TOWERS: Dict[str, TowerSpec] = {
+    "text": TowerSpec("text", 12, 768, 3072, 12, 77),
+    "vision": TowerSpec("vision", 24, 1024, 4096, 16, 257),
+    "audio": TowerSpec("audio", 12, 768, 3072, 12, 204),
+    "video": TowerSpec("video", 24, 1024, 4096, 16, 784),
+    "imu": TowerSpec("imu", 6, 512, 2048, 8, 391),
+    "depth": TowerSpec("depth", 12, 768, 3072, 12, 257),
+}
+
+# Task roster: (task name, modality_a, modality_b). CLIP-style tasks pair a
+# modality with text (ImageBind binds everything to vision/text).
+MT_TASKS: List[Tuple[str, str, str]] = [
+    ("img_text", "vision", "text"),
+    ("audio_text", "audio", "text"),
+    ("video_text", "video", "text"),
+    ("depth_text", "depth", "text"),
+    ("imu_text", "imu", "text"),
+    ("audio_vision", "audio", "vision"),
+    ("video_audio", "video", "audio"),
+    ("depth_vision", "depth", "vision"),
+    ("imu_video", "imu", "video"),
+    ("text_text", "text", "text"),
+]
+
+
+def _tower_component(t: TowerSpec, suffix: str = "", *, shared: bool) -> ComponentSpec:
+    def wl(batch: int, seq: int) -> OpWorkload:
+        return transformer_layer_workload(
+            t.d_model, t.d_ff, t.n_heads, batch, seq or t.seq
+        )
+
+    return ComponentSpec(
+        name=f"{t.name}{suffix}",
+        n_layers=t.n_layers,
+        op_type=f"xf[{t.d_model}x{t.d_ff}]s{t.seq}",
+        workload_fn=wl,
+        shared=shared,
+        merge_shared=False,
+        max_tp=min(t.n_heads, 8),
+    )
+
+
+def multitask_clip(n_tasks: int = 4, batch_per_task: int = 64) -> TaskGraph:
+    """Multitask-CLIP (ImageBind structure): towers + contrastive join."""
+    assert 1 <= n_tasks <= len(MT_TASKS)
+    towers = {name: _tower_component(t, shared=True) for name, t in MODALITY_TOWERS.items()}
+
+    def loss_wl(batch: int, seq: int) -> OpWorkload:
+        return loss_module_workload(768, batch)
+
+    comps = list(towers.values()) + [
+        ComponentSpec(
+            name="contrastive",
+            n_layers=1,
+            op_type="contrastive",
+            workload_fn=loss_wl,
+            shared=False,
+            max_tp=1,
+        )
+    ]
+    gb = GraphBuilder(comps)
+    for task, ma, mb in MT_TASKS[:n_tasks]:
+        branches = [[ma]] if ma == mb else [[ma], [mb]]
+        gb.add_flow(
+            FlowSpec(
+                task=task,
+                branches=branches,
+                join=["contrastive"],
+                batch_size=batch_per_task,
+                seq_lens={
+                    ma: MODALITY_TOWERS[ma].seq,
+                    mb: MODALITY_TOWERS[mb].seq,
+                },
+            )
+        )
+    return gb.build()
+
+
+OFASYS_TASKS: List[Tuple[str, str]] = [
+    ("caption", "vision"),
+    ("asr", "audio"),
+    ("vqa", "vision"),
+    ("summ", "text"),
+    ("video_cap", "video"),
+    ("imu_cls", "imu"),
+    ("depth_est", "depth"),
+]
+
+
+def ofasys(n_tasks: int = 4, batch_per_task: int = 32) -> TaskGraph:
+    """OFASys: modality adaptors → shared enc-dec LM (cross-modal ≈ encoders)."""
+    assert 1 <= n_tasks <= len(OFASYS_TASKS)
+    # modality adaptors: full encoder towers (OFASys keeps per-modality
+    # encoders; its unified enc-dec LM is sized so cross-modal ≈ encoders).
+    adaptors = {}
+    for name, t in MODALITY_TOWERS.items():
+        adaptors[name] = _tower_component(t, suffix="_adaptor", shared=True)
+
+    lm = TowerSpec("lm", 12, 1024, 4096, 16, 256)
+
+    def lm_wl(batch: int, seq: int) -> OpWorkload:
+        return transformer_layer_workload(
+            lm.d_model, lm.d_ff, lm.n_heads, batch, seq or lm.seq
+        )
+
+    lm_comp = ComponentSpec(
+        name="encdec_lm",
+        n_layers=lm.n_layers,
+        op_type=f"xf[{lm.d_model}x{lm.d_ff}]s{lm.seq}",
+        workload_fn=lm_wl,
+        shared=True,
+        merge_shared=True,  # unified LM serves all tasks: execution barrier
+        max_tp=8,
+    )
+    gb = GraphBuilder(list(adaptors.values()) + [lm_comp])
+    for task, modality in OFASYS_TASKS[:n_tasks]:
+        gb.add_flow(
+            FlowSpec(
+                task=task,
+                branches=[[f"{modality}_adaptor"]],
+                join=["encdec_lm"],
+                batch_size=batch_per_task,
+                seq_lens={
+                    f"{modality}_adaptor": MODALITY_TOWERS[modality].seq,
+                    "encdec_lm": lm.seq,
+                },
+            )
+        )
+    return gb.build()
+
+
+QWEN_VAL_TASKS: List[Tuple[str, str]] = [
+    ("vl_chat", "vision"),
+    ("al_chat", "audio"),
+    ("text_chat", "text"),
+]
+
+
+def qwen_val(n_tasks: int = 3, batch_per_task: int = 16) -> TaskGraph:
+    """QWen-VAL: big decoder-only LLM dominates; small modality encoders."""
+    assert 1 <= n_tasks <= len(QWEN_VAL_TASKS)
+    enc_towers = {
+        "vision": TowerSpec("vision", 40, 1664, 8192, 16, 257),   # ViT-bigG
+        "audio": TowerSpec("audio", 32, 1280, 5120, 20, 750),     # Whisper-large
+        "text": TowerSpec("text", 12, 768, 3072, 12, 512),
+    }
+    encoders = {
+        name: _tower_component(t, suffix="_enc", shared=True)
+        for name, t in enc_towers.items()
+    }
+    llm = TowerSpec("llm", 32, 4096, 11008, 32, 512)
+
+    def llm_wl(batch: int, seq: int) -> OpWorkload:
+        return transformer_layer_workload(
+            llm.d_model, llm.d_ff, llm.n_heads, batch, seq or llm.seq
+        )
+
+    llm_comp = ComponentSpec(
+        name="decoder_llm",
+        n_layers=llm.n_layers,
+        op_type=f"xf[{llm.d_model}x{llm.d_ff}]s{llm.seq}",
+        workload_fn=llm_wl,
+        shared=True,
+        merge_shared=False,  # per-task batches; params sync via group pool
+        max_tp=8,
+    )
+    gb = GraphBuilder(list(encoders.values()) + [llm_comp])
+    for task, modality in QWEN_VAL_TASKS[:n_tasks]:
+        gb.add_flow(
+            FlowSpec(
+                task=task,
+                branches=[[f"{modality}_enc"]],
+                join=["decoder_llm"],
+                batch_size=batch_per_task,
+                seq_lens={
+                    f"{modality}_enc": enc_towers[modality].seq,
+                    "decoder_llm": llm.seq,
+                },
+            )
+        )
+    return gb.build()
+
+
+def mt_backbone_suite(batch_per_task: int = 8) -> TaskGraph:
+    """Multi-task workload built from the ASSIGNED architectures:
+    qwen3-0.6b text tower + pixtral-ViT vision tower + seamless speech
+    encoder, joined by a shared glm4-9b-like decoder (DESIGN.md §6)."""
+    qwen3 = TowerSpec("qwen3_text", 28, 1024, 3072, 16, 1024)
+    pixvit = TowerSpec("pixtral_vit", 24, 1024, 4096, 16, 1024)
+    seamless = TowerSpec("seamless_speech", 12, 1024, 4096, 16, 1024)
+    glm4 = TowerSpec("glm4_dec", 40, 4096, 13696, 32, 1024)
+
+    comps = [
+        _tower_component(qwen3, shared=True),
+        _tower_component(pixvit, shared=True),
+        _tower_component(seamless, shared=True),
+    ]
+
+    def dec_wl(batch: int, seq: int) -> OpWorkload:
+        return transformer_layer_workload(
+            glm4.d_model, glm4.d_ff, glm4.n_heads, batch, seq or glm4.seq
+        )
+
+    comps.append(
+        ComponentSpec(
+            name="shared_decoder",
+            n_layers=glm4.n_layers,
+            op_type=f"xf[{glm4.d_model}x{glm4.d_ff}]s{glm4.seq}",
+            workload_fn=dec_wl,
+            shared=True,
+            merge_shared=True,
+            max_tp=8,
+        )
+    )
+    gb = GraphBuilder(comps)
+    for task, tower in [
+        ("text_gen", "qwen3_text"),
+        ("vision_chat", "pixtral_vit"),
+        ("speech_chat", "seamless_speech"),
+    ]:
+        gb.add_flow(
+            FlowSpec(
+                task=task,
+                branches=[[tower]],
+                join=["shared_decoder"],
+                batch_size=batch_per_task,
+                seq_lens={tower: 1024, "shared_decoder": glm4.seq},
+            )
+        )
+    return gb.build()
+
+
+WORKLOADS = {
+    "multitask_clip": multitask_clip,
+    "ofasys": ofasys,
+    "qwen_val": qwen_val,
+    "mt_backbone_suite": mt_backbone_suite,
+}

@@ -1,0 +1,10 @@
+"""Deterministic synthetic data pipeline (multi-task, multi-modal)."""
+
+from .pipeline import (
+    DataConfig,
+    SyntheticLM,
+    MultiTaskMixture,
+    shard_batch,
+)
+
+__all__ = ["DataConfig", "SyntheticLM", "MultiTaskMixture", "shard_batch"]

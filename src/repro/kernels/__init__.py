@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots (+ pure-jnp oracles).
+
+flash_attention — causal GQA flash attention (VMEM online-softmax)
+grouped_matmul  — MoE expert grouped matmul with ragged-group skip
+rglru_scan      — chunked linear-recurrence scan (RecurrentGemma)
+"""
+
+from .ops import flash_attention, grouped_matmul, rglru_scan
+from . import ref
+
+__all__ = ["flash_attention", "grouped_matmul", "rglru_scan", "ref"]

@@ -1,0 +1,86 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container) so the kernel
+bodies execute in Python on CPU for validation; on a TPU runtime set
+``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False) to compile through
+Mosaic.  ``ShardingConfig.use_pallas`` gates whether the model layers call
+these instead of the XLA chunked paths.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .moe_gmm import grouped_matmul as _gmm
+from .rglru_scan import rglru_scan as _rglru
+
+
+def _default_interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_diff(q, k, v, causal, block_q, block_k, interpret):
+    return _flash(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k, interpret):
+    out = _flash_diff(q, k, v, causal, block_q, block_k, interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, block_q, block_k, interpret, res, g):
+    # Backward via differentiable reference recompute (XLA). On a TPU
+    # deployment the flash backward kernel would slot in here; numerics are
+    # identical either way and the fwd kernel already avoids the O(S²)
+    # materialization where it matters (activations under remat recompute).
+    from .ref import flash_attention_ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: flash_attention_ref(q_, k_, v_, causal=causal),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash_diff.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash_diff(q, k, v, causal, block_q, block_k, interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret")
+)
+def grouped_matmul(x, w, group_sizes=None, *, block_c: int = 128,
+                   block_f: int = 128, block_d: int = 512,
+                   interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _gmm(
+        x, w, group_sizes, block_c=block_c, block_f=block_f, block_d=block_d,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def rglru_scan(a, b, *, chunk: int = 256, block_d: int = 512,
+               interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rglru(a, b, chunk=chunk, block_d=block_d, interpret=interpret)

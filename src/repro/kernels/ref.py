@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        sm_scale: Optional[float] = None):
+    """q (B,H,Sq,hd); k/v (B,K,Sk,hd). Naive softmax attention."""
+    B, H, Sq, hd = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=1)
+        v = jnp.repeat(v, H // K, axis=1)
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def grouped_matmul_ref(x, w, group_sizes=None):
+    """x (E,C,d) @ w (E,d,f), rows ≥ group_sizes[e] forced to zero."""
+    y = jnp.einsum("ecd,edf->ecf", x, w)
+    if group_sizes is not None:
+        C = x.shape[1]
+        live = jnp.arange(C)[None, :] < group_sizes[:, None]  # (E, C)
+        y = jnp.where(live[..., None], y, 0.0)
+    return y
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t·h_{t-1} + b_t via lax.scan (B,S,D)."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    a_t = a.transpose(1, 0, 2)
+    b_t = b.transpose(1, 0, 2)
+    h0 = jnp.zeros_like(a[:, 0])
+    _, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    return hs.transpose(1, 0, 2)

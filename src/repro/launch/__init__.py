@@ -1,0 +1,16 @@
+"""Launch layer: meshes, dry-run, training and serving drivers.
+
+NOTE: do not import ``dryrun`` from here — it sets XLA_FLAGS at import
+time (512 host devices) and must only be imported as the entry module.
+"""
+
+from .mesh import make_debug_mesh, make_production_mesh
+from .steps import StepSpec, build_step, lower_step
+
+__all__ = [
+    "make_debug_mesh",
+    "make_production_mesh",
+    "StepSpec",
+    "build_step",
+    "lower_step",
+]

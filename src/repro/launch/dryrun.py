@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: for the single-pod ``(16,16)`` mesh and the two-pod ``(2,16,16)``
+mesh, every assigned architecture × its applicable input shapes must
+``.lower().compile()`` cleanly; ``memory_analysis()`` proves the cell fits
+HBM and ``cost_analysis()`` + the optimized-HLO collective parse feed the
+roofline table (EXPERIMENTS.md §Roofline).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --out dryrun.json
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from ..config import SHAPES, applicable_shapes, get_arch
+from .hlo_analysis import analyze as hlo_analyze
+from .mesh import make_production_mesh
+from .steps import build_step, lower_step
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in optimized HLO.
+
+    Matches both sync (``all-reduce(...)``) and async (``all-reduce-start``)
+    forms; ``-done`` ops are skipped (they'd double count).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for coll in _COLLECTIVES:
+            m = re.search(rf"= [^=]*\b{coll}(?:-start)?\(", line)
+            if not m:
+                continue
+            # operands live inside the parens: "dtype[shape] %name, ..."
+            args = line[m.end():]
+            depth, end = 1, 0
+            for i, ch in enumerate(args):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            args = args[:end]
+            for dt, dims in _SHAPE_RE.findall(args):
+                if dt in _DTYPE_BYTES:
+                    out[coll] += _shape_bytes(dt, dims)
+            break
+    return out
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def _memory_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def baseline_overrides(arch: str):
+    """Paper-faithful baseline: strip the §Perf levers (remat=block,
+    no grad accumulation / seq parallelism; qwen2-moe reverts to unpadded
+    expert-TP).  The optimized path is the arch's sharding_defaults."""
+    import dataclasses
+
+    from ..config import ShardingConfig, get_arch
+
+    shcfg = ShardingConfig()
+    cfg = get_arch(arch)
+    if arch == "qwen2-moe-a2.7b":
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, pad_to=0)
+        )
+        shcfg = ShardingConfig(shard_experts=False)
+    return cfg, shcfg
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             shcfg=None, baseline: bool = False,
+             verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile one cell; return the roofline record."""
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": "baseline" if baseline else "optimized",
+    }
+    t0 = time.perf_counter()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        arch_or_cfg = arch
+        if baseline:
+            arch_or_cfg, shcfg = baseline_overrides(arch)
+        spec = build_step(arch_or_cfg, shape, mesh, shcfg=shcfg)
+        with mesh:
+            lowered = lower_step(spec, mesh)
+            compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t0
+        rec["cost"] = _cost_dict(compiled)
+        rec["memory"] = _memory_dict(compiled)
+        hlo = hlo_analyze(compiled.as_text())
+        rec["hlo_flops"] = hlo.flops          # per device, loop-multiplied
+        rec["hlo_bytes"] = hlo.hbm_bytes      # per device, traffic proxy
+        rec["collectives"] = {k: v for k, v in hlo.collective_bytes.items()}
+        cfg = get_arch(arch)
+        shp = SHAPES[shape]
+        n_active = cfg.n_active_params()
+        if shp.kind == "train":
+            tokens = shp.global_batch * shp.seq_len
+            rec["model_flops"] = 6.0 * n_active * tokens
+        elif shp.kind == "prefill":
+            tokens = shp.global_batch * shp.seq_len
+            rec["model_flops"] = 2.0 * n_active * tokens
+        else:  # decode: one token per sequence
+            rec["model_flops"] = 2.0 * n_active * shp.global_batch
+        rec["n_devices"] = mesh.devices.size
+        rec["ok"] = True
+        if verbose:
+            print(f"[dryrun] {arch} × {shape} × {rec['mesh']}: OK "
+                  f"({rec['compile_s']:.1f}s)")
+            print(f"  memory:      {rec['memory']}")
+            print(f"  hlo flops/dev:  {rec['hlo_flops']:.3e}  "
+                  f"(cost_analysis: {rec['cost'].get('flops', 0):.3e})")
+            print(f"  hlo bytes/dev:  {rec['hlo_bytes']:.3e}")
+            print(f"  collectives: "
+                  f"{ {k: v for k, v in rec['collectives'].items() if v} }")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["compile_s"] = time.perf_counter() - t0
+        if verbose:
+            print(f"[dryrun] {arch} × {shape} × {rec['mesh']}: FAIL "
+                  f"{rec['error']}")
+            traceback.print_exc()
+    finally:
+        jax.clear_caches()
+    return rec
+
+
+def run_all(*, multi_pod: bool = False, archs: Optional[List[str]] = None,
+            shapes: Optional[List[str]] = None,
+            baseline: bool = False) -> List[Dict[str, Any]]:
+    from ..configs import ASSIGNED
+
+    records = []
+    for arch in archs or ASSIGNED:
+        cfg = get_arch(arch)
+        for shape in shapes or applicable_shapes(cfg):
+            records.append(
+                run_cell(arch, shape, multi_pod=multi_pod, baseline=baseline)
+            )
+    n_ok = sum(r["ok"] for r in records)
+    print(f"[dryrun] {n_ok}/{len(records)} cells OK "
+          f"({'multi-pod' if multi_pod else 'single-pod'})")
+    return records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful configs (no §Perf levers)")
+    ap.add_argument("--out", default=None, help="write records JSON here")
+    args = ap.parse_args()
+
+    records: List[Dict[str, Any]] = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        if args.all:
+            records += run_all(multi_pod=mp, baseline=args.baseline)
+        else:
+            if not args.arch or not args.shape:
+                ap.error("--arch and --shape required unless --all")
+            records.append(run_cell(args.arch, args.shape, multi_pod=mp,
+                                    baseline=args.baseline))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[dryrun] wrote {len(records)} records to {args.out}")
+    if not all(r["ok"] for r in records):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,304 @@
+"""Static analysis of optimized HLO text: FLOPs, HBM traffic, collectives —
+with *loop multiplicity*.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, so anything
+inside ``lax.scan`` (the layer stack, chunked attention, the chunked loss)
+is undercounted by its trip count.  This module re-derives the roofline
+inputs from ``compiled.as_text()`` directly:
+
+  1. split the module into computations;
+  2. walk the call graph from ENTRY, carrying multiplicity: ``while`` bodies
+     multiply by their trip count (parsed from the loop condition's compare
+     constant — lax.scan lowers to a counted loop), fusions/calls by 1;
+  3. per computation, account
+       * ``dot`` FLOPs: 2 · |result| · contraction size,
+       * collective payload bytes (operand shapes resolved through a symbol
+         table, since operands print as bare ``%names``),
+       * HBM traffic proxy: operand + result bytes of materializing ops
+         (fusion boundaries, dots, collectives, copies) — what actually
+         crosses HBM between fused kernels.
+
+The result feeds EXPERIMENTS.md §Roofline; every number is per-device
+(the partitioned module is the per-device program).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_TOK = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_OPNAME = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_list_bytes(text: str) -> int:
+    """Sum bytes over every dtype[dims] token in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_TOK.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_type_and_op(rhs: str) -> Tuple[str, str, str]:
+    """rhs like ``f32[8,128]{1,0} all-gather(%copy), ...`` →
+    (type_text, op_name, args_text)."""
+    # type is everything up to the op token; ops are lowercase-with-dashes
+    m = re.match(r"^\s*(\(.*?\)|[a-z][a-z0-9]*\[[\d,]*\](?:\{[^}]*\})?|[a-z][a-z0-9]*)\s+([a-z][\w\-]*)\((.*)$", rhs)
+    if not m:
+        return "", "", ""
+    args = m.group(3)
+    depth, end = 1, len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return m.group(1), m.group(2), args[:end]
+
+
+@dataclass
+class Instruction:
+    name: str
+    op: str
+    type_text: str
+    args_text: str
+    raw: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_list_bytes(self.type_text)
+
+    def operand_names(self) -> List[str]:
+        return _OPNAME.findall(self.args_text)
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(rf"{key}=%?([\w.\-]+)", self.raw)
+        return m.group(1) if m else None
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    by_name: Dict[str, Instruction] = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{$", stripped)
+        if header and not stripped.startswith("//") and "=" not in stripped.split("(")[0]:
+            cur = Computation(header.group(2))
+            comps[cur.name] = cur
+            if header.group(1):
+                entry = cur.name
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(stripped)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        ttext, op, args = _result_type_and_op(rhs)
+        if not op:
+            continue
+        ins = Instruction(name=name, op=op, type_text=ttext, args_text=args,
+                          raw=stripped)
+        cur.instructions.append(ins)
+        cur.by_name[name] = ins
+    return comps, entry
+
+
+def _trip_count(while_ins: Instruction, cond: Optional[Computation]) -> int:
+    """Trip count of a counted loop.
+
+    Preferred source: XLA's own ``backend_config={"known_trip_count":
+    {"n":"N"}}`` annotation on the while op.  Fallback: the largest integer
+    constant in the loop-condition computation (lax.scan compares the
+    induction variable against the length)."""
+    m = re.search(r'known_trip_count[^0-9]*(\d+)', while_ins.raw)
+    if m:
+        return max(int(m.group(1)), 1)
+    best = 1
+    if cond is not None:
+        for ins in cond.instructions:
+            if ins.op == "constant":
+                mm = re.search(r"constant\((-?\d+)\)", ins.raw)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+    return max(best, 1)
+
+
+# Ops that materialize an HBM buffer in the scheduled module.  Layout /
+# element-wise ops (broadcast, iota, convert, select, reshape, transpose,
+# slice) are fused into consumers on TPU and excluded — counting them made
+# the memory term ~5-100× too high (see EXPERIMENTS.md §Perf iteration 0).
+_MATERIALIZING = {
+    "fusion", "dot", "convolution", "copy",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "dynamic-slice", "dynamic-update-slice",
+    "gather", "scatter", "reduce", "sort", "concatenate", "pad",
+}
+
+_CHEAP = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+          "after-all", "partition-id", "replica-id", "broadcast", "iota",
+          "convert", "select", "reshape", "transpose", "slice"}
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0  # dot/conv FLOPs, loop-multiplied, per device
+    hbm_bytes: float = 0.0  # materializing-op traffic proxy, per device
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES}
+    )
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    """2 · |result| · contraction_size for one dot."""
+    result_elems = 0
+    for dt, dims in _SHAPE_TOK.findall(ins.type_text):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            result_elems += n
+            break
+    # contraction size from the lhs shape and lhs_contracting_dims
+    ops = ins.operand_names()
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+    if not m or not ops:
+        return 2.0 * result_elems  # degenerate
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs = comp.by_name.get(ops[0])
+    if lhs is None:
+        return 2.0 * result_elems
+    shape_m = _SHAPE_TOK.search(lhs.type_text)
+    if not shape_m:
+        return 2.0 * result_elems
+    dims = [int(x) for x in shape_m.group(2).split(",") if x]
+    k = 1
+    for c in cdims:
+        if c < len(dims):
+            k *= dims[c]
+    return 2.0 * result_elems * k
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = parse_hlo(text)
+    stats = HloStats()
+    if entry is None:
+        return stats
+
+    # accumulate multiplicity per computation by walking the call graph
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float) -> None:
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for ins in comp.instructions:
+            if ins.op == "while":
+                body = ins.attr("body")
+                cond = ins.attr("condition")
+                trips = _trip_count(ins, comps.get(cond) if cond else None)
+                if body:
+                    visit(body, m * trips)
+                if cond:
+                    visit(cond, m * (trips + 1))
+            elif ins.op in ("fusion", "call", "map", "reduce", "scatter",
+                            "sort", "reduce-window", "custom-call"):
+                callee = ins.attr("calls") or ins.attr("to_apply")
+                if callee:
+                    visit(callee, m)
+            elif ins.op == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    c = ins.attr(key)
+                    if c:
+                        visit(c, m)
+                for mm in re.finditer(r"branch_computations=\{([^}]*)\}", ins.raw):
+                    for c in _OPNAME.findall(mm.group(1)):
+                        visit(c, m)
+
+    visit(entry, 1.0)
+
+    for cname, m in mult.items():
+        comp = comps[cname]
+        nested_fusion = cname.startswith("fused_") or ".fused" in cname
+        for ins in comp.instructions:
+            if ins.op in ("dot", "convolution"):
+                stats.flops += m * _dot_flops(ins, comp)
+            base_op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base_op in _COLLECTIVES and not ins.op.endswith("-done"):
+                # payload = operand bytes, resolved via the symbol table
+                payload = 0
+                for op_name in ins.operand_names():
+                    src = comp.by_name.get(op_name)
+                    if src is not None:
+                        payload += src.result_bytes
+                if payload == 0:  # operands may be parameters w/o defs
+                    payload = ins.result_bytes
+                stats.collective_bytes[base_op] += m * payload
+            # HBM traffic proxy: top-level materializing ops only (ops inside
+            # fusion computations execute in registers/VMEM).  Traffic =
+            # result write + operand reads — EXCEPT slicing ops, which touch
+            # only the slice, not the full operand (a dynamic-slice pulling
+            # one layer from the (G,…) stacked params inside the layer scan
+            # must not count the whole stack per iteration):
+            #   dynamic-slice / gather          → 2 × |result|
+            #   dynamic-update-slice (in-place) → 2 × |update operand|
+            if not nested_fusion and ins.op in _MATERIALIZING:
+                if ins.op in ("dynamic-slice", "gather"):
+                    stats.hbm_bytes += m * 2 * ins.result_bytes
+                elif ins.op == "dynamic-update-slice":
+                    ops_ = ins.operand_names()
+                    upd = comp.by_name.get(ops_[1]) if len(ops_) > 1 else None
+                    upd_bytes = upd.result_bytes if upd else ins.result_bytes
+                    stats.hbm_bytes += m * 2 * upd_bytes
+                else:
+                    stats.hbm_bytes += m * ins.result_bytes
+                    for op_name in ins.operand_names():
+                        src = comp.by_name.get(op_name)
+                        if src is not None and src.op != "constant":
+                            stats.hbm_bytes += m * src.result_bytes
+
+    return stats

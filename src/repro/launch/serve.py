@@ -1,0 +1,115 @@
+"""Batched serving driver: continuous prefill + decode over a request queue.
+
+Demonstrates the inference path of every arch family (KV caches for attn,
+recurrent states for ssm/hybrid, cross-attention memories for enc-dec):
+requests arrive with prompts, are prefilled in batches, then decode steps
+run the whole active batch one token at a time (static-batch serving).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --reduced \
+        --requests 8 --prompt-len 32 --gen-len 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config import default_sharding, get_arch, reduced
+from ..models import build_model
+
+
+def serve(
+    arch: str = "qwen3-0.6b",
+    *,
+    reduced_cfg: bool = True,
+    n_requests: int = 8,
+    prompt_len: int = 32,
+    gen_len: int = 16,
+    seed: int = 0,
+    greedy: bool = True,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    if reduced_cfg:
+        cfg = reduced(cfg)
+    model = build_model(cfg, default_sharding(cfg))
+    params = model.init(jax.random.PRNGKey(seed))
+
+    rng = jax.random.PRNGKey(seed + 1)
+    cache_len = prompt_len + gen_len
+    B = n_requests
+    prompts = jax.random.randint(rng, (B, prompt_len), 0, cfg.vocab)
+    batch: Dict[str, Any] = {"tokens": prompts}
+    if cfg.is_encdec:
+        enc_len = max(prompt_len // 4, 1)
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(rng, 1), (B, enc_len, cfg.d_model)
+        )
+    elif cfg.family == "vlm":
+        P = min(cfg.frontend_stub_len, 8)
+        batch["embeds"] = jax.random.normal(
+            jax.random.fold_in(rng, 2), (B, P, cfg.d_model)
+        )
+
+    t0 = time.perf_counter()
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len=cache_len)
+    )(params, batch)
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(
+        lambda p, tok, cache, pos: model.decode_step(p, tok, cache, pos)
+    )
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    prompt_total = prompt_len + (
+        batch.get("embeds").shape[1] if "embeds" in batch else 0
+    )
+    generated: List[jnp.ndarray] = [tok]
+    t0 = time.perf_counter()
+    for i in range(gen_len - 1):
+        logits, cache = decode(params, tok, cache, prompt_total + i)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    out_tokens = jnp.stack(generated, axis=1)
+    if verbose:
+        tps = B * (gen_len - 1) / max(t_decode, 1e-9)
+        print(f"[serve] {arch}: prefill {B}×{prompt_len} in {t_prefill*1e3:.1f} ms; "
+              f"decode {gen_len-1} steps at {tps:.0f} tok/s")
+        print(f"[serve] sample output tokens: {out_tokens[0][:12].tolist()}")
+    return {
+        "arch": arch,
+        "tokens": out_tokens,
+        "prefill_seconds": t_prefill,
+        "decode_seconds": t_decode,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    serve(
+        args.arch,
+        reduced_cfg=args.reduced,
+        n_requests=args.requests,
+        prompt_len=args.prompt_len,
+        gen_len=args.gen_len,
+        seed=args.seed,
+    )
+
+
+if __name__ == "__main__":
+    main()

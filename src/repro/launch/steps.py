@@ -1,0 +1,250 @@
+"""Step builders: (arch, shape, mesh) → jit-ready step fn + specs.
+
+One place defines what each shape cell lowers (the dry-run contract):
+
+  * ``train_4k``    → ``train_step``  (loss + grads + AdamW update)
+  * ``prefill_32k`` → ``prefill_step`` (forward + cache build)
+  * ``decode_32k`` / ``long_500k`` → ``serve_step`` (one token via cache)
+
+Every builder returns ``StepSpec(fn, in_specs, out_specs, example_inputs)``
+with PartitionSpec pytrees resolved against the mesh by the name-based
+rules — ``jax.jit(fn, in_shardings, out_shardings).lower(*inputs)`` is then
+all the dry-run (and the real driver) does.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..config import (
+    ArchConfig,
+    ShapeConfig,
+    ShardingConfig,
+    SHAPES,
+    default_sharding,
+    get_arch,
+)
+from ..models import build_model
+from ..models.layers import dtype_of
+from ..optim import AdamW, warmup_cosine
+from ..parallel import (
+    ShardingRules,
+    tree_batch_specs,
+    tree_cache_specs,
+    tree_param_specs,
+)
+
+
+@dataclass
+class StepSpec:
+    name: str
+    fn: Callable
+    in_specs: Tuple[Any, ...]
+    out_specs: Any
+    in_shapes: Tuple[Any, ...]  # ShapeDtypeStruct pytrees (dry-run inputs)
+    model: Any
+    rules: ShardingRules
+
+
+def make_optimizer(cfg: ArchConfig, *, total_steps: int = 10000) -> AdamW:
+    return AdamW(
+        lr=partial(
+            warmup_cosine, peak_lr=3e-4, warmup_steps=200, total_steps=total_steps
+        ),
+        moment_dtype=dtype_of(cfg.opt_dtype),
+    )
+
+
+def param_and_opt_shapes(model, optimizer):
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+    return params_shape, opt_shape
+
+
+def build_step(
+    arch: str | ArchConfig,
+    shape: str | ShapeConfig,
+    mesh: Mesh,
+    *,
+    shcfg: Optional[ShardingConfig] = None,
+) -> StepSpec:
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    shp = SHAPES[shape] if isinstance(shape, str) else shape
+    shcfg = shcfg or default_sharding(cfg)
+    rules = ShardingRules(mesh, shcfg)
+    model = build_model(cfg, shcfg)
+
+    if shp.kind == "train":
+        return _train_step(model, shp, mesh, rules)
+    if shp.kind == "prefill":
+        return _prefill_step(model, shp, mesh, rules)
+    return _serve_step(model, shp, mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _train_step(model, shp: ShapeConfig, mesh: Mesh, rules: ShardingRules):
+    optimizer = make_optimizer(model.cfg)
+    params_shape, opt_shape = param_and_opt_shapes(model, optimizer)
+    batch_shape = model.input_specs(shp)
+
+    p_specs = tree_param_specs(rules, params_shape)
+    o_specs = tree_param_specs(rules, opt_shape)
+    b_specs = tree_batch_specs(rules, batch_shape)
+    # clamp grad_accum so every microbatch still divides the batch shards
+    # (a ragged microbatch would silently replicate over the data axis)
+    ga = max(rules.cfg.grad_accum, 1)
+    n_batch_shards = rules._axsize(rules.batch)
+    B = shp.global_batch
+    while ga > 1 and (B % ga != 0 or (B // ga) % n_batch_shards != 0):
+        ga -= 1
+
+    from ..parallel.sharding import constrain
+
+    def train_step(params, opt_state, batch):
+        if ga > 1:
+            # microbatch gradient accumulation: activation/remat memory
+            # drops by ga×; grads accumulate in fp32 (§Perf memory lever).
+            # STRIDED split (sample i of microbatch m = global index
+            # i·ga + m) so every microbatch stays evenly sharded over the
+            # data axis — a contiguous split would land each microbatch on
+            # one device row and replicate compute (§Perf cell 2 iter 3).
+            def split(x):
+                x = x.reshape((x.shape[0] // ga, ga) + x.shape[1:])
+                x = jnp.swapaxes(x, 0, 1)
+                return constrain(
+                    x, mesh, None, "batch", *([None] * (x.ndim - 2))
+                )
+
+            micro = jax.tree.map(split, batch)
+
+            from ..models.layers import dtype_of
+            acc_dt = dtype_of(rules.cfg.accum_dtype)
+
+            def body(acc, mb):
+                g_sum, loss_sum = acc
+                (loss, _), g = jax.value_and_grad(
+                    lambda p: model.loss(p, mb, mesh=mesh), has_aux=True
+                )(params)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), g_sum, g
+                )
+                return (g_sum, loss_sum + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params
+            )
+            (g_sum, loss_sum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / ga, g_sum)
+            loss = loss_sum / ga
+            metrics = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, mesh=mesh), has_aux=True
+            )(params)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        return new_params, new_state, loss, metrics
+
+    out_specs = (p_specs, o_specs, P(), {"nll": P(), "aux": P()})
+    return StepSpec(
+        name="train_step",
+        fn=train_step,
+        in_specs=(p_specs, o_specs, b_specs),
+        out_specs=out_specs,
+        in_shapes=(params_shape, opt_shape, batch_shape),
+        model=model,
+        rules=rules,
+    )
+
+
+def _prefill_step(model, shp: ShapeConfig, mesh: Mesh, rules: ShardingRules):
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch_shape = model.input_specs(shp)
+    p_specs = tree_param_specs(rules, params_shape)
+    b_specs = tree_batch_specs(rules, batch_shape)
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(
+            params, batch, mesh=mesh, cache_len=shp.seq_len
+        )
+        return logits, cache
+
+    cache_out = jax.eval_shape(prefill_step, params_shape, batch_shape)[1]
+    c_specs = tree_cache_specs(rules, cache_out)
+    logits_spec = rules.batch_spec("logits", (shp.global_batch, model.cfg.vocab))
+    out_specs = (logits_spec, c_specs)
+    return StepSpec(
+        name="prefill_step",
+        fn=prefill_step,
+        in_specs=(p_specs, b_specs),
+        out_specs=out_specs,
+        in_shapes=(params_shape, batch_shape),
+        model=model,
+        rules=rules,
+    )
+
+
+def _serve_step(model, shp: ShapeConfig, mesh: Mesh, rules: ShardingRules):
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs_in = model.input_specs(shp)
+    token_shape, cache_shape, pos_shape = (
+        specs_in["token"], specs_in["cache"], specs_in["pos"],
+    )
+    p_specs = tree_param_specs(rules, params_shape)
+    c_specs = tree_cache_specs(rules, cache_shape)
+    t_spec = rules.batch_spec("token", token_shape.shape)
+
+    def serve_step(params, token, cache, pos):
+        logits, new_cache = model.decode_step(params, token, cache, pos,
+                                              mesh=mesh)
+        return logits, new_cache
+
+    logits_spec = rules.batch_spec("logits", (shp.global_batch, model.cfg.vocab))
+    out_specs = (logits_spec, c_specs)
+    return StepSpec(
+        name="serve_step",
+        fn=serve_step,
+        in_specs=(p_specs, t_spec, c_specs, P()),
+        out_specs=out_specs,
+        in_shapes=(params_shape, token_shape, cache_shape, pos_shape),
+        model=model,
+        rules=rules,
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def lower_step(spec: StepSpec, mesh: Mesh):
+    """jit with shardings and lower on ShapeDtypeStructs (no allocation).
+
+    Train steps donate (params, opt_state) — the updated pytrees alias the
+    inputs, halving the persistent-state HBM footprint; serve steps donate
+    the cache for the same reason."""
+    to_shard = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    donate = ()
+    if spec.name == "train_step":
+        donate = (0, 1)
+    elif spec.name == "serve_step":
+        donate = (2,)
+    jitted = jax.jit(
+        spec.fn,
+        in_shardings=to_shard(spec.in_specs),
+        out_shardings=to_shard(spec.out_specs),
+        donate_argnums=donate,
+    )
+    with mesh:
+        lowered = jitted.lower(*spec.in_shapes)
+    return lowered

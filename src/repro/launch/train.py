@@ -1,0 +1,222 @@
+"""End-to-end training driver.
+
+Trains any registered arch (full or ``--reduced`` smoke size) on the
+deterministic synthetic LM stream with AdamW, checkpoint/auto-resume,
+straggler detection, and optional int8-compressed cross-pod gradient sync.
+On this CPU container the practical path is ``--reduced`` (the quickstart
+example trains a ~100M-class model for a few hundred steps); on a TPU pod
+the same driver runs the full configs on the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config import (
+    ShapeConfig,
+    ShardingConfig,
+    default_sharding,
+    get_arch,
+    reduced,
+)
+from ..ckpt import CheckpointManager, StragglerDetector
+from ..data import DataConfig, SyntheticLM, shard_batch
+from ..models import build_model
+from ..optim import AdamW, warmup_cosine
+from ..parallel import ShardingRules, batch_axes, tree_param_specs
+from ..parallel.sharding import tree_batch_specs
+from .mesh import make_debug_mesh
+
+
+def make_train_state(model, optimizer, rng, mesh=None, rules=None):
+    params = model.init(rng)
+    opt_state = optimizer.init(params)
+    if mesh is not None and rules is not None:
+        from jax.sharding import NamedSharding
+        p_specs = tree_param_specs(rules, jax.eval_shape(lambda: params))
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, p_specs
+        )
+    return params, opt_state
+
+
+def _make_compressed_dp_step(model, optimizer, mesh):
+    """Pure-DP train step with int8-compressed gradient all-reduce.
+
+    Params replicated; each "data" shard computes grads on its slice of
+    the batch; the DP sync runs as :func:`repro.optim.compressed_mean`
+    (int8 payload + shared max-scale) inside shard_map — 4× less gradient
+    traffic than fp32 all-reduce, the cross-pod/DCN trick from DESIGN.md
+    §8. The optimizer update runs on the synced grads (replicated math)."""
+    from functools import partial as _partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..optim.compress import compressed_mean
+
+    def local_grads(params, b):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: model.loss(p, b), has_aux=True
+        )(params)
+        synced = jax.tree.map(
+            lambda g: compressed_mean(g, "data"), grads
+        )
+        loss = jax.lax.pmean(loss, "data")
+        return synced, loss
+
+    batch_spec = P("data")
+    grads_fn = shard_map(
+        local_grads,
+        mesh=mesh,
+        in_specs=(P(), batch_spec),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def step_fn(params, opt_state, b):
+        grads, loss = grads_fn(params, b)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return step_fn
+
+
+def train(
+    arch: str = "qwen3-0.6b",
+    *,
+    reduced_cfg: bool = True,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 128,
+    lr: float = 3e-4,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    log_every: int = 10,
+    seed: int = 0,
+    stop_at_step: Optional[int] = None,  # simulate a crash/interrupt
+    mesh=None,
+    compress_grads: bool = False,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    if reduced_cfg:
+        cfg = reduced(cfg)
+    shcfg = default_sharding(cfg)
+    model = build_model(cfg, shcfg)
+    optimizer = AdamW(
+        lr=partial(warmup_cosine, peak_lr=lr, warmup_steps=max(steps // 10, 1),
+                   total_steps=steps),
+        moment_dtype=jnp.float32 if reduced_cfg else None or jnp.float32,
+    )
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                  global_batch=batch, seed=seed))
+
+    params, opt_state = make_train_state(
+        model, optimizer, jax.random.PRNGKey(seed)
+    )
+
+    start_step = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, every=ckpt_every, keep=3)
+        restored, manifest = mgr.restore_latest({"params": params,
+                                                 "opt": opt_state})
+        if restored is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = int(manifest["step"]) + 1
+            if verbose:
+                print(f"[train] resumed from step {manifest['step']}")
+
+    straggler = StragglerDetector(n_hosts=max(jax.process_count(), 1))
+
+    if compress_grads and mesh is not None and "data" in mesh.axis_names:
+        step_fn = _make_compressed_dp_step(model, optimizer, mesh)
+    else:
+        @jax.jit
+        def step_fn(params, opt_state, b):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: model.loss(p, b, mesh=mesh), has_aux=True
+            )(params)
+            new_params, new_state = optimizer.update(grads, opt_state, params)
+            return new_params, new_state, loss
+
+    history = []
+    t_start = time.perf_counter()
+    for step in range(start_step, steps):
+        if stop_at_step is not None and step >= stop_at_step:
+            break  # simulated interruption (schedule still sized by `steps`)
+        b = data.batch(step)
+        if mesh is not None:
+            b = shard_batch(b, mesh, batch_axes(mesh))
+        t0 = time.perf_counter()
+        params, opt_state, loss = step_fn(params, opt_state, b)
+        loss = float(loss)
+        dt = time.perf_counter() - t0
+        straggler.record(0, dt)
+        history.append(loss)
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            tok_s = batch * seq / dt
+            print(f"[train] step {step:5d}  loss {loss:.4f}  "
+                  f"{dt*1e3:7.1f} ms  {tok_s:9.0f} tok/s")
+        if mgr:
+            mgr.maybe_save(step, {"params": params, "opt": opt_state},
+                           extra={"loss": loss, "arch": arch})
+        slow = straggler.check()
+        if slow and verbose:
+            print(f"[train] stragglers detected: {slow} — re-plan trigger")
+    wall = time.perf_counter() - t_start
+    if mgr and (steps - 1) % ckpt_every != 0:
+        mgr.maybe_save(steps - 1, {"params": params, "opt": opt_state},
+                       extra={"loss": history[-1] if history else None})
+
+    return {
+        "arch": arch,
+        "steps": steps,
+        "first_loss": history[0] if history else None,
+        "final_loss": history[-1] if history else None,
+        "wall_seconds": wall,
+        "params": params,
+        "history": history,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = train(
+        args.arch,
+        reduced_cfg=args.reduced,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        seed=args.seed,
+    )
+    print(f"[train] done: loss {out['first_loss']:.4f} → {out['final_loss']:.4f} "
+          f"in {out['wall_seconds']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Model substrate: pure-JAX layers + the uniform Model API."""
+
+from .model import Model, build_model
+from .transformer import Transformer, Decoder, chunked_xent
+from .encdec import EncDecTransformer
+
+__all__ = [
+    "Model",
+    "build_model",
+    "Transformer",
+    "Decoder",
+    "EncDecTransformer",
+    "chunked_xent",
+]

@@ -1,0 +1,258 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+The modality frontend is a STUB per the assignment spec: ``frames`` arrive
+as precomputed (B, S_enc, d) embeddings (speech frames after the conformer
+frontend).  The encoder runs non-causal self-attention over them; the
+decoder is a causal LM with per-layer cross-attention into the encoder
+memory.  Both stacks scan over layers.
+
+Decode cache = per-layer causal self-attn KV (standard) + per-layer cross
+K/V computed once from the encoder memory at prefill (the "fixed encoder
+memory" path of :func:`repro.models.attention.attn_decode`).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig, ShardingConfig
+from ..parallel.sharding import constrain
+from .attention import _split_heads, attn_apply, attn_decode, attn_init
+from .layers import (
+    cast_floats,
+    dense_init,
+    dtype_of,
+    embed_init,
+    embed_lookup,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from .transformer import chunked_xent
+
+
+def _enc_layer_init(rng, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dtype
+        ),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "ffn": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(rng, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "self_attn": attn_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dtype
+        ),
+        "norm_x": rmsnorm_init(cfg.d_model, dtype),
+        "cross_attn": attn_init(
+            k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dtype
+        ),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "ffn": mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+@dataclass(frozen=True)
+class EncDecTransformer:
+    cfg: ArchConfig
+    shcfg: ShardingConfig = field(default_factory=ShardingConfig)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.param_dtype)
+        ks = jax.random.split(rng, 6)
+        params = {
+            "frame_proj": dense_init(ks[0], cfg.d_model, cfg.d_model, dtype),
+            "enc_blocks": jax.vmap(
+                lambda k: _enc_layer_init(k, cfg, dtype)
+            )(jax.random.split(ks[1], cfg.n_enc_layers)),
+            "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+            "tok_embed": embed_init(ks[2], cfg.vocab, cfg.d_model, dtype),
+            "dec_blocks": jax.vmap(
+                lambda k: _dec_layer_init(k, cfg, dtype)
+            )(jax.random.split(ks[3], cfg.n_layers)),
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+            "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab, dtype),
+        }
+        return params
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params, frames, mesh=None):
+        """frames: (B, S_enc, d) stub embeddings → encoder memory (B,S_enc,d)."""
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        h = frames.astype(cdt) @ params["frame_proj"].astype(cdt)
+        h = constrain(h, mesh, "batch", None, None)
+
+        def body(h, lp):
+            lp = cast_floats(lp, cdt)
+            h = constrain(h, mesh, "batch", None, None)
+            y = attn_apply(
+                lp["attn"],
+                rmsnorm(lp["norm1"], h),
+                n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim,
+                rope_theta=cfg.rope_theta,
+                causal=False,
+            )
+            h = h + y
+            h = h + mlp_apply(lp["ffn"], rmsnorm(lp["norm2"], h))
+            return h, None
+
+        h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+        return rmsnorm(params["enc_norm"], h)
+
+    # --------------------------------------------------------------- decoder
+    def _dec_layer(self, lp, h, memory, *, return_kv=False):
+        cfg = self.cfg
+        kw = dict(
+            n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta,
+        )
+        y, kv = attn_apply(
+            lp["self_attn"], rmsnorm(lp["norm1"], h), causal=True,
+            return_kv=True, **kw,
+        )
+        h = h + y
+        # cross attention: K/V from the encoder memory
+        mk = _split_heads(memory @ lp["cross_attn"]["wk"], cfg.n_kv_heads,
+                          cfg.resolved_head_dim)
+        mv = _split_heads(memory @ lp["cross_attn"]["wv"], cfg.n_kv_heads,
+                          cfg.resolved_head_dim)
+        y = attn_apply(
+            lp["cross_attn"], rmsnorm(lp["norm_x"], h), causal=False,
+            kv_override=(mk, mv), **{**kw, "rope_theta": 0.0},
+        )
+        h = h + y
+        h = h + mlp_apply(lp["ffn"], rmsnorm(lp["norm2"], h))
+        if return_kv:
+            return h, (kv, (mk, mv))
+        return h, None
+
+    def decode_forward(self, params, tokens, memory, *, return_cache=False,
+                       mesh=None):
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        h = embed_lookup(params["tok_embed"], tokens).astype(cdt)
+        h = constrain(h, mesh, "batch", None, None)
+
+        def body(h, lp):
+            lp = cast_floats(lp, cdt)
+            h = constrain(h, mesh, "batch", None, None)
+            h, kvs = self._dec_layer(lp, h, memory, return_kv=return_cache)
+            return h, kvs
+
+        h, kvs = jax.lax.scan(body, h, params["dec_blocks"])
+        return rmsnorm(params["final_norm"], h), kvs
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch, *, mesh=None):
+        """batch: {frames (B,S_enc,d), tokens (B,S_dec), labels (B,S_dec)}."""
+        memory = self.encode(params, batch["frames"], mesh)
+        h, _ = self.decode_forward(params, batch["tokens"], memory, mesh=mesh)
+        chunk = self.shcfg.logits_chunk or 1024
+        nll = chunked_xent(
+            h, params["lm_head"], batch["labels"], batch.get("mask"),
+            chunk=chunk, mesh=mesh,
+        )
+        return nll, {"nll": nll, "aux": jnp.zeros((), jnp.float32)}
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, params, tokens, frames, *, mesh=None,
+                cache_len: Optional[int] = None, cache_dtype=jnp.bfloat16):
+        """Encode + run decoder prompt. Returns (last logits, cache)."""
+        memory = self.encode(params, frames, mesh)
+        h, kvs = self.decode_forward(params, tokens, memory, return_cache=True,
+                                     mesh=mesh)
+        S = tokens.shape[1]
+        cache_len = cache_len or S
+        (self_kv, cross_kv) = kvs
+
+        def pack_self(x):  # (L,B,S,K,hd) -> (L,B,K,len,hd)
+            x = x.transpose(0, 1, 3, 2, 4).astype(cache_dtype)
+            return jnp.pad(
+                x, ((0, 0), (0, 0), (0, 0), (0, cache_len - x.shape[3]), (0, 0))
+            )
+
+        def pack_cross(x):  # (L,B,S_enc,K,hd) -> (L,B,K,S_enc,hd)
+            return x.transpose(0, 1, 3, 2, 4).astype(cache_dtype)
+
+        cache = {
+            "self_k": pack_self(self_kv[0]),
+            "self_v": pack_self(self_kv[1]),
+            "cross_k": pack_cross(cross_kv[0]),
+            "cross_v": pack_cross(cross_kv[1]),
+        }
+        logits = (h[:, -1] @ params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+        return logits, cache
+
+    def init_cache(self, batch: int, cache_len: int, enc_len: int,
+                   cache_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        return {
+            "self_k": jnp.zeros((L, batch, K, cache_len, hd), cache_dtype),
+            "self_v": jnp.zeros((L, batch, K, cache_len, hd), cache_dtype),
+            "cross_k": jnp.zeros((L, batch, K, enc_len, hd), cache_dtype),
+            "cross_v": jnp.zeros((L, batch, K, enc_len, hd), cache_dtype),
+        }
+
+    def decode_step(self, params, token, cache, pos, *, mesh=None):
+        """token: (B,) → (logits (B,V), new cache)."""
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        x = embed_lookup(params["tok_embed"], token).astype(cdt)[:, None, :]
+        kw = dict(
+            n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta,
+        )
+
+        def body(x, lp_cache):
+            lp, sk, sv, ck, cv = lp_cache
+            lp = cast_floats(lp, cdt)
+            x = constrain(x, mesh, "batch", None, None)
+            y, sk, sv = attn_decode(
+                lp["self_attn"], rmsnorm(lp["norm1"], x), sk, sv, pos, **kw
+            )
+            x = x + y
+            y, _, _ = attn_decode(
+                lp["cross_attn"], rmsnorm(lp["norm_x"], x), ck, cv, pos,
+                cross=True, **{**kw, "rope_theta": 0.0},
+            )
+            x = x + y
+            x = x + mlp_apply(lp["ffn"], rmsnorm(lp["norm2"], x))
+            return x, (sk, sv)
+
+        x, (new_sk, new_sv) = jax.lax.scan(
+            body,
+            x,
+            (
+                params["dec_blocks"],
+                cache["self_k"],
+                cache["self_v"],
+                cache["cross_k"],
+                cache["cross_v"],
+            ),
+        )
+        x = rmsnorm(params["final_norm"], x)[:, 0]
+        logits = (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+        new_cache = dict(cache, self_k=new_sk, self_v=new_sv)
+        return logits, new_cache

@@ -1,0 +1,142 @@
+"""Model factory: ArchConfig → a uniform Model API.
+
+Every assigned architecture is served through this one interface:
+
+  * ``init(rng)``                         → params pytree
+  * ``loss(params, batch, mesh)``         → (scalar, metrics)   [train]
+  * ``prefill(params, batch, mesh)``      → (logits, cache)     [inference]
+  * ``decode_step(params, batch, mesh)``  → (logits, cache)     [serving]
+  * ``init_cache(batch, cache_len)``      → decode cache pytree
+  * ``input_specs(shape)``                → ShapeDtypeStruct stand-ins for
+                                            every model input of that shape
+                                            cell (the dry-run contract: no
+                                            allocation, weak-type correct)
+
+Modality frontends are STUBS per the assignment spec: ``[vlm]`` archs get
+``embeds`` (precomputed patch embeddings) prepended to the token stream,
+``[audio]`` archs get ``frames`` (precomputed speech frames) encoded by the
+encoder stack.  Stub lengths: P = frontend_stub_len (vlm), S_enc = seq//4
+(audio) — recorded in DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig, ShapeConfig, ShardingConfig, SHAPES
+from .encdec import EncDecTransformer
+from .layers import dtype_of
+from .transformer import Transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    shcfg: ShardingConfig = field(default_factory=ShardingConfig)
+
+    @property
+    def impl(self):
+        if self.cfg.is_encdec:
+            return EncDecTransformer(self.cfg, self.shcfg)
+        return Transformer(self.cfg, self.shcfg)
+
+    # ------------------------------------------------------------------ api
+    def init(self, rng):
+        return self.impl.init(rng)
+
+    def loss(self, params, batch, *, mesh=None):
+        return self.impl.loss(params, batch, mesh=mesh)
+
+    def prefill(self, params, batch, *, mesh=None, cache_len=None):
+        if self.cfg.is_encdec:
+            return self.impl.prefill(
+                params, batch["tokens"], batch["frames"], mesh=mesh,
+                cache_len=cache_len,
+            )
+        return self.impl.prefill(
+            params, batch["tokens"], batch.get("embeds"), mesh=mesh,
+            cache_len=cache_len,
+        )
+
+    def init_cache(self, batch: int, cache_len: int, *, enc_len: int = 0,
+                   cache_dtype=jnp.bfloat16):
+        if self.cfg.is_encdec:
+            return self.impl.init_cache(
+                batch, cache_len, enc_len or max(cache_len // 4, 1), cache_dtype
+            )
+        return self.impl.init_cache(batch, cache_len, cache_dtype)
+
+    def decode_step(self, params, token, cache, pos, *, mesh=None):
+        return self.impl.decode_step(params, token, cache, pos, mesh=mesh)
+
+    # ------------------------------------------------------------- dry specs
+    def _stub_len(self, seq_len: int) -> int:
+        if self.cfg.family == "vlm":
+            return min(self.cfg.frontend_stub_len, seq_len // 2)
+        return 0
+
+    def _enc_len(self, seq_len: int) -> int:
+        return max(seq_len // 4, 1)
+
+    def batch_arrays(self, shape: ShapeConfig, rng=None) -> Dict[str, Any]:
+        """Concrete random inputs at ``shape`` (smoke tests / examples)."""
+        specs = self.input_specs(shape)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        leaves, treedef = jax.tree.flatten(specs)
+        keys = jax.random.split(rng, len(leaves))
+
+        def make(s, k):
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                if s.shape == ():  # decode position
+                    return jnp.zeros((), s.dtype)
+                return jax.random.randint(k, s.shape, 0, self.cfg.vocab, s.dtype)
+            return jax.random.normal(k, s.shape, s.dtype)
+
+        return jax.tree.unflatten(treedef, [make(s, k) for s, k in zip(leaves, keys)])
+
+    def input_specs(self, shape: ShapeConfig | str) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for the step lowered at this cell.
+
+        train/prefill → the batch dict; decode → {token, cache, pos}.
+        """
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        cdt = dtype_of(cfg.compute_dtype)
+        sds = jax.ShapeDtypeStruct
+
+        if shape.kind in ("train", "prefill"):
+            if cfg.is_encdec:
+                batch = {
+                    "frames": sds((B, self._enc_len(S), cfg.d_model), cdt),
+                    "tokens": sds((B, S), i32),
+                }
+            else:
+                P = self._stub_len(S)
+                batch = {"tokens": sds((B, S - P), i32)}
+                if P:
+                    batch["embeds"] = sds((B, P, cfg.d_model), cdt)
+            if shape.kind == "train":
+                lab_len = S if cfg.is_encdec else S - self._stub_len(S)
+                batch["labels"] = sds((B, lab_len), i32)
+            return batch
+
+        # decode: one token against a cache of S positions
+        cache = jax.eval_shape(
+            lambda: self.init_cache(B, S, enc_len=self._enc_len(S))
+        )
+        return {
+            "token": sds((B,), i32),
+            "cache": cache,
+            "pos": sds((), i32),
+        }
+
+
+def build_model(cfg: ArchConfig, shcfg: Optional[ShardingConfig] = None) -> Model:
+    return Model(cfg, shcfg or ShardingConfig())

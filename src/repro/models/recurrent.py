@@ -1,0 +1,407 @@
+"""Recurrent sequence-mixing blocks: RG-LRU (RecurrentGemma) and xLSTM.
+
+All blocks are functional (`*_init` / `*_apply` / `*_decode`) and sized from
+an :class:`repro.config.ArchConfig`.  Training paths are parallel over the
+sequence (associative scan for RG-LRU, flash-style chunked parallel form for
+mLSTM, per-token scan only for sLSTM which is inherently sequential);
+decode paths are O(1)-state single-token updates — this is what makes the
+``ssm``/``hybrid`` archs runnable at the ``long_500k`` shape.
+
+Hardware adaptation note (DESIGN.md §3): the original Griffin/xLSTM CUDA
+kernels fuse the gate math into the scan; on TPU we express the recurrences
+with ``lax.associative_scan`` / chunked parallel forms so XLA maps them onto
+the VPU, and provide a Pallas chunked-scan kernel for the RG-LRU hot loop
+(:mod:`repro.kernels.rglru_scan`).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+RGLRU_C = 8.0  # Griffin's fixed gate-sharpness constant
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Real-Gated Linear Recurrent Unit) — Griffin / RecurrentGemma
+# ---------------------------------------------------------------------------
+
+
+def rglru_init(rng, d_rnn: int, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    # Λ init so that a = σ(Λ)^c is uniform in [0.9, 0.999] (Griffin §2.4).
+    u = jax.random.uniform(k1, (d_rnn,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))  # softplus^-1(-log u / c)
+    return {
+        "lam": lam.astype(jnp.float32),
+        "w_r": dense_init(k2, d_rnn, d_rnn, dtype),
+        "w_i": dense_init(k3, d_rnn, d_rnn, dtype),
+    }
+
+
+def _rglru_gates(params, x):
+    """Returns (log_a, gated_input) in fp32. x: (..., d_rnn)."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ params["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ params["w_i"].astype(jnp.float32))
+    # a = exp(-c · r · softplus(Λ));  log_a ≤ 0
+    log_a = -RGLRU_C * r * jax.nn.softplus(params["lam"])
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return log_a, beta * (i * x32)
+
+
+def rglru_apply(params, x, h0: Optional[jnp.ndarray] = None):
+    """Sequence-parallel RG-LRU via associative scan.
+
+    x: (B, S, d_rnn); h0: optional (B, d_rnn) initial state.
+    Returns (y (B,S,d_rnn), h_last (B,d_rnn)).
+    """
+    log_a, b = _rglru_gates(params, x)  # (B,S,d), fp32
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold the initial state into the first input: h1 = a1·h0 + b1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_decode(params, x_t, h):
+    """One-token update. x_t: (B, d_rnn); h: (B, d_rnn) fp32 state."""
+    log_a, b = _rglru_gates(params, x_t[:, None, :])
+    h_new = jnp.exp(log_a[:, 0]) * h + b[:, 0]
+    return h_new.astype(x_t.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (Griffin uses width 4 before the RG-LRU)
+# ---------------------------------------------------------------------------
+
+
+def conv1d_init(rng, d: int, width: int, dtype):
+    scale = 1.0 / math.sqrt(width)
+    return {"w": (jax.random.normal(rng, (width, d)) * scale).astype(dtype)}
+
+
+def conv1d_apply(params, x):
+    """Causal depthwise conv. x: (B, S, d) -> (B, S, d)."""
+    w = params["w"]
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(width):  # width is tiny (4): unrolled taps
+        out = out + pad[:, k : k + x.shape[1], :] * w[k]
+    return out
+
+
+def conv1d_decode(params, x_t, buf):
+    """One-token causal conv. x_t (B,d); buf (B, width-1, d) previous inputs.
+    Returns (y_t (B,d), new_buf)."""
+    w = params["w"]
+    width = w.shape[0]
+    hist = jnp.concatenate([buf, x_t[:, None, :]], axis=1)  # (B, width, d)
+    y = jnp.einsum("bwd,wd->bd", hist.astype(w.dtype), w)
+    return y.astype(x_t.dtype), hist[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Griffin recurrent block: gate ⊙ RG-LRU(conv1d(proj(x)))
+# ---------------------------------------------------------------------------
+
+
+def griffin_block_init(rng, d: int, d_rnn: int, dtype, conv_width: int = 4):
+    ks = jax.random.split(rng, 5)
+    return {
+        "w_x": dense_init(ks[0], d, d_rnn, dtype),
+        "w_gate": dense_init(ks[1], d, d_rnn, dtype),
+        "conv": conv1d_init(ks[2], d_rnn, conv_width, dtype),
+        "rglru": rglru_init(ks[3], d_rnn, dtype),
+        "w_out": dense_init(ks[4], d_rnn, d, dtype),
+    }
+
+
+def griffin_block_apply(params, x, h0=None):
+    """x: (B,S,d) -> (y, state) with state = {"h", "conv"} (decode handoff)."""
+    u_pre = x @ params["w_x"]
+    g = jax.nn.gelu(x @ params["w_gate"])
+    u = conv1d_apply(params["conv"], u_pre)
+    y, h_last = rglru_apply(params["rglru"], u, h0)
+    width = params["conv"]["w"].shape[0]
+    S = x.shape[1]
+    if S >= width - 1:
+        conv_buf = u_pre[:, S - (width - 1):]
+    else:
+        conv_buf = jnp.pad(u_pre, ((0, 0), (width - 1 - S, 0), (0, 0)))
+    state = {"h": h_last, "conv": conv_buf}
+    return (g * y) @ params["w_out"], state
+
+
+def griffin_block_decode(params, x_t, state):
+    """x_t: (B,d); state = {"h": (B,d_rnn) fp32, "conv": (B,w-1,d_rnn)}."""
+    u = x_t @ params["w_x"]
+    g = jax.nn.gelu(x_t @ params["w_gate"])
+    u, conv_buf = conv1d_decode(params["conv"], u, state["conv"])
+    y, h = rglru_decode(params["rglru"], u, state["h"])
+    out = (g * y) @ params["w_out"]
+    return out, {"h": h, "conv": conv_buf}
+
+
+def griffin_state_init(batch: int, d_rnn: int, conv_width: int = 4, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM's matrix-memory LSTM) — flash-style chunked parallel training
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(rng, d: int, n_heads: int, head_dim: int, dtype):
+    ks = jax.random.split(rng, 6)
+    dh = n_heads * head_dim
+    return {
+        "wq": dense_init(ks[0], d, dh, dtype),
+        "wk": dense_init(ks[1], d, dh, dtype),
+        "wv": dense_init(ks[2], d, dh, dtype),
+        "w_if": dense_init(ks[3], d, 2 * n_heads, dtype),  # input+forget gates
+        "wo": dense_init(ks[4], dh, d, dtype),
+        "ogate": dense_init(ks[5], d, dh, dtype),
+    }
+
+
+def _mlstm_qkv_gates(params, x, n_heads: int, head_dim: int):
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ params["wk"]).reshape(B, S, n_heads, head_dim)
+    v = (x @ params["wv"]).reshape(B, S, n_heads, head_dim)
+    gates = (x @ params["w_if"]).astype(jnp.float32).reshape(B, S, 2, n_heads)
+    log_i = gates[:, :, 0]  # pre-activation ĩ: i = exp(ĩ)
+    log_f = jax.nn.log_sigmoid(gates[:, :, 1])  # f = σ(f̃): log f ≤ 0
+    return q, k, v, log_i, log_f
+
+
+def mlstm_parallel(q, k, v, log_i, log_f, *, q_chunk: int = 256):
+    """Stabilized parallel mLSTM (xLSTM eq. 19-21), chunked over queries.
+
+    q,k,v: (B,S,H,hd); log_i/log_f: (B,S,H).  Returns (B,S,H,hd).
+
+    D̃_ts = F_t − F_s + ĩ_s (s ≤ t), F = cumsum(log f).  Uses a flash-style
+    running (m, l, acc) over KV chunks, where m tracks max D̃ (gates only) and
+    l the *signed* weight sum; h_t = acc / max(|l|, exp(−m)).
+    """
+    B, S, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    F = jnp.cumsum(log_f, axis=1)  # (B,S,H) inclusive
+    logi_plus = log_i - F  # ĩ_s − F_s  (so D̃ = F_t + (ĩ_s − F_s))
+
+    qc = min(q_chunk, S)
+    nq = -(-S // qc)
+    pad_q = nq * qc - S
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        F = jnp.pad(F, ((0, 0), (0, pad_q), (0, 0)))
+    kv_c = qc  # square blocks
+    nk = nq
+    k_p = jnp.pad(k, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    li_p = jnp.pad(logi_plus, ((0, 0), (0, pad_q), (0, 0)), constant_values=-1e30)
+
+    qs = q.reshape(B, nq, qc, H, hd).transpose(1, 0, 2, 3, 4)
+    Fs = F.reshape(B, nq, qc, H).transpose(1, 0, 2, 3)
+    ks = k_p.reshape(B, nk, kv_c, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = v_p.reshape(B, nk, kv_c, H, hd).transpose(1, 0, 2, 3, 4)
+    lis = li_p.reshape(B, nk, kv_c, H).transpose(1, 0, 2, 3)
+
+    def q_body(_, qrow):
+        qb, Fb, iq = qrow  # (B,qc,H,hd), (B,qc,H)
+
+        def kv_body(carry, kvrow):
+            m, l, acc = carry
+            kb, vb, lib, ik = kvrow
+
+            def compute(m, l, acc):
+                # D̃ (B,H,qc,kc) = F_t + (ĩ_s − F_s), causal-masked
+                D = Fb.transpose(0, 2, 1)[:, :, :, None] + lib.transpose(0, 2, 1)[
+                    :, :, None, :
+                ]
+                qpos = jnp.arange(qc) + iq * qc
+                kpos = jnp.arange(kv_c) + ik * kv_c
+                mask = kpos[None, :] <= qpos[:, None]
+                D = jnp.where(mask[None, None], D, -1e30)
+                m_new = jnp.maximum(m, jnp.max(D, axis=-1))
+                s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32) * scale
+                w = s * jnp.exp(D - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + jnp.sum(w, axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bhqk,bkhd->bhqd", w, vb.astype(jnp.float32)
+                )
+                return m_new, l_new, acc_new
+
+            live = (ik * kv_c) <= (iq * qc + qc - 1)
+            m, l, acc = jax.lax.cond(
+                live, compute, lambda m, l, a: (m, l, a), m, l, acc
+            )
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, H, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (ks, vs, lis, jnp.arange(nk)))
+        n = jnp.maximum(jnp.abs(l), jnp.exp(-m)) + 1e-6
+        h = acc / n[..., None]
+        return None, h.transpose(0, 2, 1, 3)  # (B,qc,H,hd)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, Fs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * qc, H, hd)
+    return out[:, :S].astype(q.dtype)
+
+
+def mlstm_apply(params, x, *, n_heads: int, head_dim: int,
+                return_state: bool = False):
+    """Full mLSTM block fwd (training/prefill). x: (B,S,d)."""
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(params, x, n_heads, head_dim)
+    h = mlstm_parallel(q, k, v, log_i, log_f)
+    o = jax.nn.sigmoid(x @ params["ogate"])
+    B, S, _ = x.shape
+    y = (o * h.reshape(B, S, -1)) @ params["wo"]
+    if return_state:
+        return y, mlstm_prefill_state(k, v, log_i, log_f)
+    return y
+
+
+def mlstm_prefill_state(k, v, log_i, log_f):
+    """Closed-form (C, n, m) after consuming the whole prefix.
+
+    m_S = max_s (F_S − F_s + ĩ_s);  C = Σ_s e^{F_S−F_s+ĩ_s−m_S} k_s v_sᵀ/√hd.
+    """
+    B, S, H, hd = k.shape
+    scale = 1.0 / math.sqrt(hd)
+    F = jnp.cumsum(log_f, axis=1)  # (B,S,H)
+    w_log = F[:, -1:, :] - F + log_i  # (B,S,H): F_S − F_s + ĩ_s
+    m = jnp.max(w_log, axis=1)  # (B,H)
+    w = jnp.exp(w_log - m[:, None, :]) * scale  # (B,S,H)
+    k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = jnp.einsum("bsh,bshd,bshe->bhde", w, k32, v32)
+    n = jnp.einsum("bsh,bshd->bhd", w, k32)
+    return {"C": C, "n": n, "m": m}
+
+
+def mlstm_state_init(batch: int, n_heads: int, head_dim: int):
+    return {
+        "C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params, x_t, state, *, n_heads: int, head_dim: int):
+    """One-token mLSTM update (xLSTM eq. 19 recurrent form). x_t: (B,d)."""
+    B = x_t.shape[0]
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(
+        params, x_t[:, None, :], n_heads, head_dim
+    )
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # (B,H,hd)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]  # (B,H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_eff = jnp.exp(log_f + m - m_new)[..., None]
+    i_eff = jnp.exp(log_i - m_new)[..., None]
+    k32, v32, q32 = (t.astype(jnp.float32) for t in (k, v, q))
+    scale = 1.0 / math.sqrt(head_dim)
+    C_new = f_eff[..., None] * C + i_eff[..., None] * (
+        k32[..., :, None] * v32[..., None, :]
+    ) * scale
+    n_new = f_eff * n + i_eff * k32 * scale
+    num = jnp.einsum("bhd,bhde->bhe", q32, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q32, n_new)), jnp.exp(-m_new))
+    h = num / (den[..., None] + 1e-6)
+    o = jax.nn.sigmoid(x_t @ params["ogate"])
+    y = (o * h.reshape(B, -1).astype(x_t.dtype)) @ params["wo"]
+    return y, {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM's scalar-memory LSTM with recurrent gates) — sequential scan
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(rng, d: int, n_heads: int, head_dim: int, dtype):
+    ks = jax.random.split(rng, 4)
+    dh = n_heads * head_dim
+    scale_r = 1.0 / math.sqrt(head_dim)
+    return {
+        # input projections for (z, i, f, o)
+        "w_in": dense_init(ks[0], d, 4 * dh, dtype),
+        # block-diagonal recurrent weights per head: (4, H, hd, hd)
+        "r": (jax.random.normal(ks[1], (4, n_heads, head_dim, head_dim)) * scale_r
+              ).astype(dtype),
+        "wo": dense_init(ks[2], dh, d, dtype),
+    }
+
+
+def slstm_scan(params, x, state, *, n_heads: int, head_dim: int):
+    """Sequential sLSTM over (B,S,d). Returns (y, final_state).
+
+    state: dict(c,n,h,m) each (B,H,hd) fp32 (m is (B,H)).
+    Stabilized exponential gating (xLSTM eq. 15-17).
+    """
+    B, S, d = x.shape
+    zifo = (x @ params["w_in"]).reshape(B, S, 4, n_heads, head_dim)
+    r = params["r"].astype(jnp.float32)
+
+    def step(carry, t_in):
+        c, n, h, m = carry
+        pre = t_in.astype(jnp.float32)  # (B,4,H,hd)
+        rec = jnp.einsum("bhd,ghde->bghe", h, r)  # (B,4,H,hd)
+        z = jnp.tanh(pre[:, 0] + rec[:, 0])
+        logi = pre[:, 1] + rec[:, 1]  # ĩ (pre-activation)
+        logf = jax.nn.log_sigmoid(pre[:, 2] + rec[:, 2])
+        o = jax.nn.sigmoid(pre[:, 3] + rec[:, 3])
+        logi_s = jnp.max(logi, axis=-1)  # per-head stabilizer (B,H)
+        m_new = jnp.maximum(jnp.max(logf, axis=-1) + m, logi_s)
+        f_eff = jnp.exp(logf + (m - m_new)[..., None])
+        i_eff = jnp.exp(logi - m_new[..., None])
+        c_new = f_eff * c + i_eff * z
+        n_new = f_eff * n + i_eff
+        h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    init = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), hs = jax.lax.scan(step, init, zifo.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, -1).astype(x.dtype) @ params["wo"]
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_state_init(batch: int, n_heads: int, head_dim: int):
+    return {
+        "c": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        "h": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def slstm_apply(params, x, *, n_heads: int, head_dim: int, state=None):
+    st = state or slstm_state_init(x.shape[0], n_heads, head_dim)
+    y, st = slstm_scan(params, x, st, n_heads=n_heads, head_dim=head_dim)
+    return y, st
+
+
+def slstm_decode(params, x_t, state, *, n_heads: int, head_dim: int):
+    y, st = slstm_scan(
+        params, x_t[:, None, :], state, n_heads=n_heads, head_dim=head_dim
+    )
+    return y[:, 0], st

@@ -1,0 +1,610 @@
+"""Decoder transformer substrate — all 10 assigned archs lower onto this.
+
+Block pattern system: an arch is a repeated ``block_pattern`` of sequence-
+mixing kinds (``attn`` | ``local_attn`` | ``rglru`` | ``mlstm`` | ``slstm``),
+each followed by an FFN sublayer (SwiGLU or MoE) when ``d_ff > 0`` /
+``moe.n_experts > 0`` (xLSTM blocks carry their own projections, ``d_ff=0``).
+
+Layers are executed with **scan-over-groups**: parameters of one pattern
+repetition ("group") are stacked along a leading ``G`` axis and scanned, so
+compile time is O(1) in depth; ``n_layers % len(pattern)`` remainder layers
+run unrolled before the scan.  Three entry points:
+
+  * ``forward``      — (B,S) tokens (+ optional stub embeds) → hidden (B,S,d)
+  * ``prefill``      — forward that also materializes the decode cache
+  * ``decode_step``  — one token through cached states (KV / recurrent)
+
+The loss is a **chunked** vocab-parallel cross-entropy (sequence chunks via
+scan) so the (B,S,V) logits are never materialized — load-bearing at
+V≈152k, S≥4k (see ShardingConfig.logits_chunk).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig, ShardingConfig
+from ..parallel.sharding import constrain
+from . import recurrent as rec
+from .attention import attn_apply, attn_decode, attn_init
+from .layers import (
+    cast_floats,
+    cross_entropy,
+    dense_init,
+    dtype_of,
+    embed_init,
+    embed_lookup,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from .moe import moe_apply, moe_init
+
+DEFAULT_PATTERN = ("attn",)
+
+
+def _sqrt_factor(g: int) -> int:
+    """Largest factor of ``g`` ≤ √g (1 if prime — sqrt-remat degenerates)."""
+    best = 1
+    f = 1
+    while f * f <= g:
+        if g % f == 0:
+            best = f
+        f += 1
+    return best
+
+
+def resolve_pattern(cfg: ArchConfig) -> Tuple[str, ...]:
+    return tuple(cfg.block_pattern) or DEFAULT_PATTERN
+
+
+def _rnn_width(cfg: ArchConfig) -> int:
+    return cfg.d_model  # Griffin: lru_width == d_model for the 9B config
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init/apply for each mixing kind
+# ---------------------------------------------------------------------------
+
+
+def _mix_init(rng, cfg: ArchConfig, kind: str, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    if kind in ("attn", "local_attn"):
+        return attn_init(rng, d, cfg.n_heads, cfg.n_kv_heads, hd, dtype)
+    if kind == "rglru":
+        return rec.griffin_block_init(rng, d, _rnn_width(cfg), dtype)
+    if kind == "mlstm":
+        return rec.mlstm_init(rng, d, cfg.n_heads, hd, dtype)
+    if kind == "slstm":
+        return rec.slstm_init(rng, d, cfg.n_heads, hd, dtype)
+    raise ValueError(f"unknown mixing kind {kind!r}")
+
+
+def _has_ffn(cfg: ArchConfig) -> bool:
+    return cfg.d_ff > 0 or cfg.is_moe
+
+
+def _ffn_init(rng, cfg: ArchConfig, dtype):
+    if cfg.is_moe:
+        return moe_init(rng, cfg, dtype)
+    return mlp_init(rng, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _layer_init(rng, cfg: ArchConfig, kind: str, dtype):
+    k1, k2 = jax.random.split(rng)
+    p = {"norm1": rmsnorm_init(cfg.d_model, dtype), "mix": _mix_init(k1, cfg, kind, dtype)}
+    if _has_ffn(cfg):
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = _ffn_init(k2, cfg, dtype)
+    return p
+
+
+def _mix_apply(p, h, cfg: ArchConfig, kind: str, *, impl: str):
+    """Training/prefill sequence mixing. Returns (y, state_or_None)."""
+    hd = cfg.resolved_head_dim
+    if kind in ("attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else 0
+        y, kv = attn_apply(
+            p,
+            h,
+            n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads,
+            head_dim=hd,
+            rope_theta=cfg.rope_theta,
+            causal=True,
+            qk_norm=cfg.qk_norm,
+            window=window,
+            impl=impl,
+            return_kv=True,
+        )
+        return y, {"k": kv[0], "v": kv[1]}
+    if kind == "rglru":
+        return rec.griffin_block_apply(p, h)
+    if kind == "mlstm":
+        return rec.mlstm_apply(
+            p, h, n_heads=cfg.n_heads, head_dim=hd, return_state=True
+        )
+    if kind == "slstm":
+        y, st = rec.slstm_apply(p, h, n_heads=cfg.n_heads, head_dim=hd)
+        return y, st
+    raise ValueError(kind)
+
+
+def _ffn_apply(p, h, cfg: ArchConfig, mesh):
+    if cfg.is_moe:
+        return moe_apply(p, h, cfg, mesh=mesh)
+    return mlp_apply(p, h), jnp.zeros((), jnp.float32)
+
+
+def _layer_apply(p, h, cfg: ArchConfig, kind: str, mesh, *, impl: str,
+                 seq_dim=None):
+    """One (mix + ffn) layer with pre-norm residuals. Returns (h, aux, state).
+
+    ``seq_dim`` set ⇒ Megatron-SP: the residual stream stays sequence-
+    sharded; each sublayer all-gathers its (normed) input to full sequence
+    and reduce-scatters its output back — explicit constraints so GSPMD
+    emits the all-gather BEFORE the qkv projections instead of fighting the
+    attention-internal reshapes (which devolve into collective-permute
+    storms — EXPERIMENTS.md §Perf cell 2, iteration 2)."""
+    x = rmsnorm(p["norm1"], h)
+    if seq_dim is not None:
+        x = constrain(x, mesh, "batch", None, None)  # all-gather seq
+    y, state = _mix_apply(p["mix"], x, cfg, kind, impl=impl)
+    if seq_dim is not None:
+        y = constrain(y, mesh, "batch", seq_dim, None)  # reduce-scatter
+    h = h + y
+    aux = jnp.zeros((), jnp.float32)
+    if _has_ffn(cfg):
+        x = rmsnorm(p["norm2"], h)
+        if seq_dim is not None:
+            x = constrain(x, mesh, "batch", None, None)
+        y, aux = _ffn_apply(p["ffn"], x, cfg, mesh)
+        if seq_dim is not None:
+            y = constrain(y, mesh, "batch", seq_dim, None)
+        h = h + y
+    return h, aux, state
+
+
+# ---------------------------------------------------------------------------
+# Decode-path per-layer state
+# ---------------------------------------------------------------------------
+
+
+def _state_init(cfg: ArchConfig, kind: str, batch: int, cache_len: int, cache_dtype):
+    hd = cfg.resolved_head_dim
+    if kind == "attn":
+        shape = (batch, cfg.n_kv_heads, cache_len, hd)
+        return {"k": jnp.zeros(shape, cache_dtype), "v": jnp.zeros(shape, cache_dtype)}
+    if kind == "local_attn":
+        w = min(cfg.local_window or cache_len, cache_len)
+        shape = (batch, cfg.n_kv_heads, w, hd)
+        return {"k": jnp.zeros(shape, cache_dtype), "v": jnp.zeros(shape, cache_dtype)}
+    if kind == "rglru":
+        return rec.griffin_state_init(batch, _rnn_width(cfg), dtype=cache_dtype)
+    if kind == "mlstm":
+        return rec.mlstm_state_init(batch, cfg.n_heads, hd)
+    if kind == "slstm":
+        return rec.slstm_state_init(batch, cfg.n_heads, hd)
+    raise ValueError(kind)
+
+
+def _mix_decode(p, x_t, state, pos, cfg: ArchConfig, kind: str):
+    """One-token mixing. x_t: (B, d). Returns (y (B,d), new_state)."""
+    hd = cfg.resolved_head_dim
+    if kind in ("attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else 0
+        y, ck, cv = attn_decode(
+            p,
+            x_t[:, None, :],
+            state["k"],
+            state["v"],
+            pos,
+            n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads,
+            head_dim=hd,
+            rope_theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm,
+            window=window,
+        )
+        return y[:, 0], {"k": ck, "v": cv}
+    if kind == "rglru":
+        return rec.griffin_block_decode(p, x_t, state)
+    if kind == "mlstm":
+        return rec.mlstm_decode(p, x_t, state, n_heads=cfg.n_heads, head_dim=hd)
+    if kind == "slstm":
+        return rec.slstm_decode(p, x_t, state, n_heads=cfg.n_heads, head_dim=hd)
+    raise ValueError(kind)
+
+
+def _layer_decode(p, x_t, state, pos, cfg: ArchConfig, kind: str, mesh):
+    y, new_state = _mix_decode(p["mix"], rmsnorm(p["norm1"], x_t), state, pos, cfg, kind)
+    h = x_t + y
+    if _has_ffn(cfg):
+        y3, _ = _ffn_apply(p["ffn"], rmsnorm(p["norm2"], h[:, None, :]), cfg, mesh)
+        h = h + y3[:, 0]
+    return h, new_state
+
+
+# ---------------------------------------------------------------------------
+# The stacked decoder
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Decoder:
+    """Scan-over-groups decoder stack (no embeddings — see Transformer)."""
+
+    cfg: ArchConfig
+    prefix: str = "blocks"  # param subtree name (sharding rules key off it)
+    attn_impl: str = "chunked"  # "chunked" (XLA) | "pallas" (flash kernel)
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        return resolve_pattern(self.cfg)
+
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.n_layers // len(self.pattern)
+
+    @property
+    def n_rem(self) -> int:
+        return self.cfg.n_layers % len(self.pattern)
+
+    # ----------------------------------------------------------------- init
+    def init(self, rng):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.param_dtype)
+        kg, kr = jax.random.split(rng)
+
+        def group_init(k):
+            ks = jax.random.split(k, len(self.pattern))
+            return {
+                f"p{j}": _layer_init(ks[j], cfg, kind, dtype)
+                for j, kind in enumerate(self.pattern)
+            }
+
+        params: Dict[str, Any] = {}
+        if self.n_groups > 0:
+            params[self.prefix] = jax.vmap(group_init)(
+                jax.random.split(kg, self.n_groups)
+            )
+        for r in range(self.n_rem):
+            params[f"{self.prefix}_rem{r}"] = _layer_init(
+                jax.random.fold_in(kr, r), cfg, self.pattern[r], dtype
+            )
+        return params
+
+    # -------------------------------------------------------------- forward
+    def forward(self, params, h, *, mesh=None, return_cache: bool = False,
+                remat="block", seq_parallel: bool = False):
+        """h: (B,S,d) → (h, aux_loss, cache|None). remat: False|"block"|"sqrt"."""
+        cfg = self.cfg
+        impl = self.attn_impl
+        cdt = dtype_of(cfg.compute_dtype)
+        # Megatron-SP: the carry (= the remat-saved tensor) lives sequence-
+        # sharded over "model"; GSPMD all-gathers into attention and
+        # reduce-scatters out of the FFN.
+        from ..parallel.mesh import MODEL, axis_size
+        sp = (
+            seq_parallel
+            and mesh is not None
+            and h.shape[1] > 1
+            and h.shape[1] % max(axis_size(mesh, MODEL), 1) == 0
+            and axis_size(mesh, MODEL) > 1
+        )
+        seq_dim = MODEL if sp else None
+
+        def group_apply(h, gp):
+            gp = cast_floats(gp, cdt)
+            # re-pin the carry: GSPMD drops batch sharding through the scan
+            h = constrain(h, mesh, "batch", seq_dim, None)
+            aux_total = jnp.zeros((), jnp.float32)
+            states = {}
+            for j, kind in enumerate(self.pattern):
+                h, aux, st = _layer_apply(
+                    gp[f"p{j}"], h, cfg, kind, mesh, impl=impl,
+                    seq_dim=seq_dim,
+                )
+                aux_total = aux_total + aux
+                states[f"p{j}"] = st
+            h = constrain(h, mesh, "batch", seq_dim, None)
+            return h, aux_total, states
+
+        aux_total = jnp.zeros((), jnp.float32)
+        rem_states = []
+        for r in range(self.n_rem):
+            h, aux, st = _layer_apply(
+                cast_floats(params[f"{self.prefix}_rem{r}"], cdt), h, cfg,
+                self.pattern[r], mesh, impl=impl,
+            )
+            aux_total = aux_total + aux
+            rem_states.append(st)
+
+        cache_groups = None
+        if self.n_groups > 0:
+            if return_cache:
+                def scan_body(h, gp):
+                    h, aux, states = group_apply(h, gp)
+                    return h, (aux, states)
+                h, (auxs, cache_groups) = jax.lax.scan(
+                    scan_body, h, params[self.prefix]
+                )
+            else:
+                def scan_body_nc(h, gp):
+                    h, aux, _ = group_apply(h, gp)
+                    return h, aux
+
+                g1 = _sqrt_factor(self.n_groups) if remat == "sqrt" else 0
+                if g1 > 1:
+                    # sqrt-remat: two-level checkpointed scan stores only
+                    # G1 ≈ √G outer carries instead of G — carry memory
+                    # ÷(G/G1) for ~+1 extra fwd recompute (§Perf cell 2).
+                    g2 = self.n_groups // g1
+                    stacked = jax.tree.map(
+                        lambda x: x.reshape((g1, g2) + x.shape[1:]),
+                        params[self.prefix],
+                    )
+
+                    @jax.checkpoint
+                    def outer_body(h, gp_outer):
+                        h, auxs = jax.lax.scan(
+                            jax.checkpoint(scan_body_nc), h, gp_outer
+                        )
+                        return h, jnp.sum(auxs)
+
+                    h, auxs = jax.lax.scan(outer_body, h, stacked)
+                else:
+                    fn = (
+                        jax.checkpoint(scan_body_nc) if remat else scan_body_nc
+                    )
+                    h, auxs = jax.lax.scan(fn, h, params[self.prefix])
+            aux_total = aux_total + jnp.sum(auxs)
+
+        cache = None
+        if return_cache:
+            cache = {"groups": cache_groups, "rem": rem_states}
+        return h, aux_total, cache
+
+    # ------------------------------------------------ prefill cache packing
+    def pack_cache(self, cache, prompt_len: int, cache_len: int,
+                   cache_dtype=jnp.bfloat16):
+        """Convert raw forward states into the decode cache layout."""
+        cfg = self.cfg
+
+        def pack_one(kind, st):
+            if kind in ("attn", "local_attn"):
+                def pk(x):  # (B,S,K,hd) -> (B,K,len,hd)
+                    x = x.transpose(0, 2, 1, 3).astype(cache_dtype)
+                    if kind == "attn":
+                        pad = cache_len - x.shape[2]
+                        return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                    W = min(cfg.local_window or cache_len, cache_len)
+                    S = x.shape[2]
+                    if S >= W:
+                        return jnp.roll(
+                            x[:, :, S - W : S], prompt_len % W, axis=2
+                        )
+                    return jnp.pad(x, ((0, 0), (0, 0), (0, W - S), (0, 0)))
+                return {"k": pk(st["k"]), "v": pk(st["v"])}
+            if kind == "rglru":
+                return {"h": st["h"], "conv": st["conv"].astype(cache_dtype)}
+            return st  # mlstm / slstm states are already in decode layout
+
+        groups = None
+        if cache["groups"] is not None:
+            groups = {
+                f"p{j}": jax.vmap(lambda s, kind=kind: pack_one(kind, s))(
+                    cache["groups"][f"p{j}"]
+                )
+                for j, kind in enumerate(self.pattern)
+            }
+        rem = [
+            pack_one(self.pattern[r], cache["rem"][r]) for r in range(self.n_rem)
+        ]
+        return {"groups": groups, "rem": rem}
+
+    # ---------------------------------------------------------------- cache
+    def init_cache(self, batch: int, cache_len: int, cache_dtype=jnp.bfloat16):
+        def one(kind):
+            return _state_init(self.cfg, kind, batch, cache_len, cache_dtype)
+
+        groups = None
+        if self.n_groups > 0:
+            groups = {
+                f"p{j}": jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x, (self.n_groups,) + x.shape
+                    ).copy(),
+                    one(kind),
+                )
+                for j, kind in enumerate(self.pattern)
+            }
+        rem = [one(self.pattern[r]) for r in range(self.n_rem)]
+        return {"groups": groups, "rem": rem}
+
+    # --------------------------------------------------------------- decode
+    def decode_step(self, params, x_t, cache, pos, *, mesh=None):
+        """x_t: (B,d); cache from init_cache/prefill; pos: scalar position."""
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        new_rem = []
+        for r in range(self.n_rem):
+            x_t, st = _layer_decode(
+                cast_floats(params[f"{self.prefix}_rem{r}"], cdt), x_t,
+                cache["rem"][r], pos, cfg, self.pattern[r], mesh,
+            )
+            new_rem.append(st)
+
+        new_groups = cache["groups"]
+        if self.n_groups > 0:
+            def scan_body(x_t, gp_and_state):
+                gp, states = gp_and_state
+                gp = cast_floats(gp, cdt)
+                x_t = constrain(x_t, mesh, "batch", None)
+                new_states = {}
+                for j, kind in enumerate(self.pattern):
+                    x_t, st = _layer_decode(
+                        gp[f"p{j}"], x_t, states[f"p{j}"], pos, cfg, kind, mesh
+                    )
+                    new_states[f"p{j}"] = st
+                return x_t, new_states
+
+            x_t, new_groups = jax.lax.scan(
+                scan_body, x_t, (params[self.prefix], cache["groups"])
+            )
+        return x_t, {"groups": new_groups, "rem": new_rem}
+
+
+# ---------------------------------------------------------------------------
+# Chunked vocab cross-entropy (never materializes (B,S,V))
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(h, w_head, labels, mask=None, chunk: int = 1024, mesh=None):
+    """h: (B,S,d); w_head: (d,V); labels: (B,S). Mean token NLL (fp32)."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    if S % chunk != 0:  # pad to a whole number of chunks, mask the pad
+        pad = chunk - S % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        pad_mask = jnp.pad(
+            jnp.ones((B, S), jnp.float32), ((0, 0), (0, pad))
+        )
+        mask = pad_mask if mask is None else jnp.pad(
+            mask.astype(jnp.float32), ((0, 0), (0, pad))
+        )
+        S = S + pad
+    nc = S // chunk
+    hs = h.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    ms = (
+        mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+        if mask is not None
+        else jnp.ones((nc, B, chunk), jnp.float32)
+    )
+
+    w_head = w_head.astype(h.dtype)  # bf16 matmul; loss math stays fp32
+
+    @jax.checkpoint  # recompute (B,c,V) logits in backward — never stored
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc, mc = xs
+        hc = constrain(hc, mesh, "batch", None, None)
+        logits = (hc @ w_head).astype(jnp.float32)  # (B,c,V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hs, ls, ms)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Full decoder-only model: embeddings + decoder + head
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Transformer:
+    """Decoder-only LM (also the VLM backbone: stub embeds prepended)."""
+
+    cfg: ArchConfig
+    shcfg: ShardingConfig = field(default_factory=ShardingConfig)
+
+    @property
+    def decoder(self) -> Decoder:
+        return Decoder(
+            self.cfg,
+            attn_impl="pallas" if self.shcfg.use_pallas else "chunked",
+        )
+
+    def init(self, rng):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.param_dtype)
+        k1, k2, k3 = jax.random.split(rng, 3)
+        params = {
+            "tok_embed": embed_init(k1, cfg.vocab, cfg.d_model, dtype),
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        }
+        params.update(self.decoder.init(k2))
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(k3, cfg.d_model, cfg.vocab, dtype)
+        return params
+
+    def head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["tok_embed"].T
+        return params["lm_head"]
+
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens, embeds=None, mesh=None):
+        cdt = dtype_of(self.cfg.compute_dtype)
+        h = embed_lookup(params["tok_embed"], tokens).astype(cdt)
+        if embeds is not None:
+            h = jnp.concatenate([embeds.astype(cdt), h], axis=1)
+        return constrain(h, mesh, "batch", None, None)
+
+    def forward(self, params, tokens, embeds=None, *, mesh=None,
+                return_cache: bool = False):
+        h = self._embed(params, tokens, embeds, mesh)
+        remat_mode = self.shcfg.remat if self.shcfg.remat != "none" else False
+        h, aux, cache = self.decoder.forward(
+            params, h, mesh=mesh, return_cache=return_cache,
+            remat=(remat_mode if not return_cache else False),
+            seq_parallel=self.shcfg.seq_parallel and not return_cache,
+        )
+        h = rmsnorm(params["final_norm"], h)
+        return h, aux, cache
+
+    def loss(self, params, batch, *, mesh=None):
+        """batch: {tokens (B,S), labels (B,S), [embeds (B,P,d)], [mask]}."""
+        h, aux, _ = self.forward(
+            params, batch["tokens"], batch.get("embeds"), mesh=mesh
+        )
+        P = 0 if batch.get("embeds") is None else batch["embeds"].shape[1]
+        h_txt = h[:, P:] if P else h
+        chunk = self.shcfg.logits_chunk or 1024
+        nll = chunked_xent(
+            h_txt, self.head(params), batch["labels"], batch.get("mask"),
+            chunk=chunk, mesh=mesh,
+        )
+        loss = nll + self.cfg.moe.router_aux_weight * aux
+        return loss, {"nll": nll, "aux": aux}
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens, embeds=None, *, mesh=None,
+                cache_len: Optional[int] = None, cache_dtype=jnp.bfloat16):
+        """Forward + cache build. Returns (last-position logits, cache)."""
+        h, _, cache = self.forward(
+            params, tokens, embeds, mesh=mesh, return_cache=True
+        )
+        prompt_len = h.shape[1]
+        cache = self.decoder.pack_cache(
+            cache, prompt_len, cache_len or prompt_len, cache_dtype
+        )
+        head = self.head(params).astype(h.dtype)
+        logits = (h[:, -1] @ head).astype(jnp.float32)
+        return logits, cache
+
+    def init_cache(self, batch: int, cache_len: int, cache_dtype=jnp.bfloat16):
+        return self.decoder.init_cache(batch, cache_len, cache_dtype)
+
+    def decode_step(self, params, token, cache, pos, *, mesh=None):
+        """token: (B,) int32; pos: scalar. Returns (logits (B,V), cache)."""
+        cdt = dtype_of(self.cfg.compute_dtype)
+        x = embed_lookup(params["tok_embed"], token).astype(cdt)
+        x, cache = self.decoder.decode_step(params, x, cache, pos, mesh=mesh)
+        x = rmsnorm(params["final_norm"], x[:, None, :])[:, 0]
+        logits = (x @ self.head(params).astype(x.dtype)).astype(jnp.float32)
+        return logits, cache

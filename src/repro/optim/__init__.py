@@ -1,0 +1,17 @@
+"""Optimizer substrate: AdamW with dtype policies, clipping, schedules,
+gradient accumulation, and int8-compressed gradient synchronization."""
+
+from .adamw import AdamW, OptState, adamw
+from .schedule import warmup_cosine
+from .compress import int8_compress, int8_decompress, compressed_mean, ErrorFeedback
+
+__all__ = [
+    "AdamW",
+    "OptState",
+    "adamw",
+    "warmup_cosine",
+    "int8_compress",
+    "int8_decompress",
+    "compressed_mean",
+    "ErrorFeedback",
+]

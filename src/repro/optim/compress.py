@@ -1,0 +1,77 @@
+"""int8-compressed gradient synchronization with error feedback.
+
+A distributed-optimization trick for DCN-crossing gradient sync (the "pod"
+axis): gradients are quantized to int8 with a per-tensor fp32 scale before
+the all-reduce, cutting cross-pod bytes 4× vs fp32 / 2× vs bf16; the
+quantization residual is carried in an error-feedback buffer so the scheme
+is unbiased over time (EF-SGD).  Used by the train driver when
+``--compress-grads`` is set and by the WaveEngine's parameter device-group
+sync for groups spanning islands.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (float) → (int8 values, fp32 scale). Symmetric per-tensor scaling."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32))
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_mean(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Mean over a mesh axis with int8 payload (inside shard_map/pmap).
+
+    Quantize → psum int32 (the wire format; int8 payloads sum without
+    overflow in int32 across ≤2²³ participants) → dequantize with the
+    max-scale so the sum is conservative, → divide by axis size.
+    """
+    q, scale = int8_compress(x)
+    # all participants must agree on one scale: use the max
+    scale = jax.lax.pmax(scale, axis_name)
+    # re-quantize against the shared scale for exactness
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale), -127, 127
+    ).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale / n.astype(jnp.float32)
+
+
+class ErrorFeedback:
+    """Error-feedback wrapper: ``sync(g + e)`` and carry the residual.
+
+    State is a pytree of residuals matching the grads; ``apply`` returns
+    (synced_grads, new_state).
+    """
+
+    @staticmethod
+    def init(grads):
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads, residual, sync_fn):
+        """sync_fn: lossy sync of one array (e.g. compressed_mean closure)."""
+        def one(g, e):
+            target = g.astype(jnp.float32) + e
+            synced = sync_fn(target)
+            return synced.astype(g.dtype), target - synced
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(residual)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (
+            treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]),
+        )

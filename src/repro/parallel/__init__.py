@@ -1,0 +1,26 @@
+"""Parallelism substrate: mesh axes, sharding rules, collectives."""
+
+from .mesh import AxisNames, DATA, MODEL, POD, axis_size, batch_axes, make_mesh, model_axis
+from .sharding import (
+    ShardingRules,
+    tree_batch_specs,
+    tree_cache_specs,
+    tree_param_shardings,
+    tree_param_specs,
+)
+
+__all__ = [
+    "AxisNames",
+    "DATA",
+    "MODEL",
+    "POD",
+    "axis_size",
+    "batch_axes",
+    "make_mesh",
+    "model_axis",
+    "ShardingRules",
+    "tree_batch_specs",
+    "tree_cache_specs",
+    "tree_param_shardings",
+    "tree_param_specs",
+]

@@ -1,0 +1,43 @@
+"""Mesh axis conventions.
+
+Production meshes are ``(data, model)`` single-pod and ``(pod, data, model)``
+multi-pod.  The batch dimension shards over ``("pod","data")`` (DP), model
+parallel dims (TP heads / FFN, EP experts, sequence sharding) over
+``"model"``.  FSDP parameter sharding rides the ``"data"`` axis (ICI) and
+optionally extends over ``"pod"`` (DCN) — see ShardingConfig.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+POD = "pod"
+DATA = "data"
+MODEL = "model"
+
+AxisNames = Tuple[str, ...]
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """Build a mesh over the available devices (CPU hosts or TPU chips)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Mesh axes the batch dimension shards over."""
+    names = mesh.axis_names
+    out = tuple(a for a in (POD, DATA) if a in names)
+    return out or (names[0],)
+
+
+def model_axis(mesh: jax.sharding.Mesh) -> Optional[str]:
+    return MODEL if MODEL in mesh.axis_names else None
+
+
+def axis_size(mesh: jax.sharding.Mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.devices.shape[mesh.axis_names.index(name)]

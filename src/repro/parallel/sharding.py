@@ -1,0 +1,277 @@
+"""Name-based sharding rules: parameter-path → PartitionSpec.
+
+Every model parameter lives at a path like ``blocks/attn/wq``; the rules
+below map path suffixes to logical layouts, resolved against a concrete mesh
+(a dim only shards if its size divides the axis size — GSPMD can pad, but
+padded shards waste HBM, so we fall back to replication for ragged dims like
+2 KV heads on a 16-way model axis).
+
+Layout summary (MaxText-style):
+  * batch dims of activations → ("pod","data")
+  * attention heads / FFN hidden / experts → "model"
+  * FSDP: parameter dim 0 additionally sharded over "data"
+    (and optionally "pod") when ShardingConfig.fsdp is on.
+  * vocab embedding: vocab dim over "model" (Megatron vocab-parallel).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..config import ShardingConfig
+from .mesh import DATA, MODEL, POD, axis_size, batch_axes
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    cfg: ShardingConfig
+
+    # ------------------------------------------------------------- helpers
+    def _axsize(self, axes) -> int:
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= axis_size(self.mesh, a)
+        return n
+
+    def _fits(self, dim: int, axes) -> bool:
+        s = self._axsize(axes)
+        return s > 1 and dim % s == 0
+
+    @property
+    def fsdp_axes(self) -> Tuple[str, ...]:
+        if not self.cfg.fsdp:
+            return ()
+        axes = [DATA] if DATA in self.mesh.axis_names else []
+        if self.cfg.fsdp_over_pod and POD in self.mesh.axis_names:
+            axes.insert(0, POD)
+        return tuple(axes)
+
+    @property
+    def batch(self) -> Tuple[str, ...]:
+        return batch_axes(self.mesh)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # --------------------------------------------------------- param rules
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        """PartitionSpec for a parameter at ``path`` with ``shape``.
+
+        Parameters stacked over a scan dimension carry a leading layer dim
+        (never sharded); rules below address the trailing dims.
+        """
+        parts = path.split("/")
+        leaf = parts[-1]
+        stacked = 1 if "blocks" in parts or "enc_blocks" in parts or "dec_blocks" in parts else 0
+        dims = shape[stacked:]
+        nd = len(dims)
+        spec: list = [None] * len(shape)
+
+        def set_dim(i: int, axes) -> None:
+            spec[stacked + i] = axes if not isinstance(axes, tuple) else axes
+
+        model_ok = lambda i: self._fits(dims[i], MODEL)
+
+        if leaf in ("tok_embed", "pos_embed"):
+            # (vocab, d): vocab-parallel over model
+            if model_ok(0):
+                set_dim(0, MODEL)
+        elif leaf == "lm_head":
+            # (d, vocab): vocab over model
+            if model_ok(nd - 1):
+                set_dim(nd - 1, MODEL)
+        elif leaf in ("wq", "wk", "wv"):
+            # (d, heads*hd) — heads over model
+            if model_ok(nd - 1):
+                set_dim(nd - 1, MODEL)
+        elif leaf == "wo":
+            # (heads*hd, d) — heads over model on dim 0
+            if model_ok(0):
+                set_dim(0, MODEL)
+        elif leaf in ("w_gate", "w_up"):
+            if model_ok(nd - 1):
+                set_dim(nd - 1, MODEL)
+        elif leaf == "w_down":
+            if model_ok(0):
+                set_dim(0, MODEL)
+        elif leaf in ("we_gate", "we_up", "we_down"):
+            # expert-stacked (E, d_in, d_out): EP over model on the expert dim
+            if self.cfg.shard_experts and self._fits(dims[0], MODEL):
+                set_dim(0, MODEL)
+            elif not self.cfg.shard_experts:
+                # TP fallback: shard expert-ffn hidden dim instead
+                hid = nd - 1 if leaf != "we_down" else 1
+                if model_ok(hid):
+                    set_dim(hid, MODEL)
+        elif leaf == "router":
+            pass  # (d, E) small — replicate
+        elif leaf in ("w_in", "w_out", "w_a", "w_x", "w_r", "w_i", "w_f", "w_z", "w_oproj"):
+            # recurrent-block projections: shard the wide dim over model
+            wide = int(np.argmax(dims))
+            if model_ok(wide):
+                set_dim(wide, MODEL)
+        # norms / gates / biases / scalars stay replicated
+
+        # FSDP: shard the first not-yet-sharded trailing dim over data axes.
+        fa = self.fsdp_axes
+        if fa:
+            fsdp_size = self._axsize(fa)
+            for i in range(nd):
+                if spec[stacked + i] is None and dims[i] % fsdp_size == 0 and dims[i] >= fsdp_size:
+                    spec[stacked + i] = fa if len(fa) > 1 else fa[0]
+                    break
+        return P(*spec)
+
+    def param_sharding(self, path: str, shape: Tuple[int, ...]) -> NamedSharding:
+        return self.named(self.param_spec(path, shape))
+
+    # ----------------------------------------------------- activation rules
+    def act_btd(self) -> P:
+        """(batch, seq, d) activations."""
+        return P(self.batch, None, None)
+
+    def act_btd_seqsharded(self) -> P:
+        """(batch, seq, d) with sequence sharding over model (long contexts)."""
+        if self.cfg.seq_shard_acts:
+            return P(self.batch, MODEL, None)
+        return P(self.batch, None, None)
+
+    def tokens(self) -> P:
+        return P(self.batch, None)
+
+    def logits(self) -> P:
+        return P(self.batch, None, MODEL)
+
+    def kv_cache(self) -> P:
+        """(layers, batch, heads, seq, hd): batch over DP, heads over model."""
+        return P(None, self.batch, MODEL, None, None)
+
+    def rnn_state(self) -> P:
+        """(layers, batch, ...) recurrent state: batch over DP."""
+        return P(None, self.batch, None)
+
+    def scalar(self) -> P:
+        return P()
+
+
+    # ------------------------------------------------------------ batch rules
+    def batch_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        """PartitionSpec for one batch-dict leaf (tokens/labels/embeds/frames)."""
+        spec: list = [None] * len(shape)
+        if shape and self._fits(shape[0], self.batch):
+            spec[0] = self.batch if len(self.batch) > 1 else self.batch[0]
+        return P(*spec)
+
+    # ------------------------------------------------------------ cache rules
+    def cache_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        """PartitionSpec for one decode-cache leaf.
+
+        Layouts: stacked KV (G|L, B, K, S, hd), rem KV (B, K, S, hd),
+        recurrent states (G?, B, ...).  Batch shards over DP; for KV the
+        head dim shards over "model" when divisible, else the sequence dim
+        (flash-decode style split-KV); recurrent state widths shard over
+        "model" when divisible.
+        """
+        parts = path.split("/")
+        leaf = parts[-1]
+        stacked = 1 if (
+            "groups" in parts or leaf.startswith(("self_", "cross_"))
+        ) else 0
+        spec: list = [None] * len(shape)
+        dims = shape[stacked:]
+        if not dims:
+            return P(*spec)
+
+        def set_dim(i: int, axes) -> None:
+            spec[stacked + i] = axes
+
+        # batch dim
+        if self._fits(dims[0], self.batch):
+            set_dim(0, self.batch if len(self.batch) > 1 else self.batch[0])
+
+        if leaf in ("k", "v") or leaf.startswith(("self_", "cross_")):
+            # (B, K, S, hd)
+            if len(dims) >= 4:
+                if self._fits(dims[1], MODEL):
+                    set_dim(1, MODEL)
+                elif self._fits(dims[2], MODEL):
+                    set_dim(2, MODEL)
+        elif leaf in ("C",):  # (B, H, hd, hd)
+            if len(dims) >= 2 and self._fits(dims[1], MODEL):
+                set_dim(1, MODEL)
+        elif leaf in ("n", "m", "c", "h") and len(dims) >= 2:
+            if self._fits(dims[1], MODEL):
+                set_dim(1, MODEL)
+        elif leaf == "conv" and len(dims) >= 3:
+            if self._fits(dims[2], MODEL):
+                set_dim(2, MODEL)
+        return P(*spec)
+
+
+def constrain(x, mesh: Optional[Mesh], *spec_dims) -> "jax.Array":
+    """``with_sharding_constraint`` guard: no-op when mesh is None.
+
+    ``spec_dims`` are PartitionSpec entries; "batch" expands to the mesh's
+    batch axes.  GSPMD drops the data sharding through vocab-sharded
+    embedding gathers and scan carries unless re-pinned at layer
+    boundaries — these constraints are load-bearing for the dry-run
+    (DESIGN.md §7)."""
+    if mesh is None or getattr(mesh, "empty", False):
+        return x
+    dims = tuple(
+        (batch_axes(mesh) if d == "batch" else d) for d in spec_dims
+    )
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*dims))
+    )
+
+
+def tree_batch_specs(rules: ShardingRules, batch_shape):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_shape)
+    specs = [
+        rules.batch_spec("/".join(_key_str(k) for k in path), leaf.shape)
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_cache_specs(rules: ShardingRules, cache_shape):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = [
+        rules.cache_spec("/".join(_key_str(k) for k in path), leaf.shape)
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_param_specs(rules: ShardingRules, params_shape) -> "jax.tree_util.PyTreeDef":
+    """Map a params shape-pytree (from eval_shape) to a PartitionSpec pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        specs.append(rules.param_spec(name, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_param_shardings(rules: ShardingRules, params_shape):
+    specs = tree_param_specs(rules, params_shape)
+    return jax.tree.map(lambda s: rules.named(s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

@@ -1,0 +1,13 @@
+"""Runtime engine: wave-by-wave execution of Spindle plans on real models."""
+
+from .engine import WaveEngine
+from .mtmodel import ExecComponent, ExecFlow, MTModel, tiny_multitask_clip, tiny_ofasys
+
+__all__ = [
+    "WaveEngine",
+    "ExecComponent",
+    "ExecFlow",
+    "MTModel",
+    "tiny_multitask_clip",
+    "tiny_ofasys",
+]

@@ -1,0 +1,269 @@
+"""WaveEngine — executes a Spindle ExecutionPlan on a real MTModel (§3.6).
+
+The four runtime steps of the paper map onto JAX as follows:
+
+  (1) **Localization** — every PlanStep (a sliced MetaOp on a fixed device
+      group) becomes a pure segment function over the owning component
+      instance's params; on a multi-device runtime it is dispatched onto the
+      step's sub-mesh (async dispatch ⇒ steps of one wave run concurrently
+      on disjoint groups — the SPMD-engine analogue of per-group NCCL
+      streams, DESIGN.md §3).
+  (2) **Intra-task data dependency** — inter-wave data flow is the engine
+      moving the producer's output activation to the consumer's device
+      group (``device_put`` resharding = the paper's copy/shard/concat/
+      send/recv transmission ops).
+  (3) **Inter-task model dependency** — the **parameter device-group pool**
+      ``{D_i → {W_j}}`` from the plan; gradients of a shared instance
+      accumulate across all its per-task uses (realized as Σ over uses here,
+      = the group all-reduce on hardware; optionally int8-compressed for
+      island-crossing groups via repro.optim.compress).
+  (4) **Training step** — forward wave-by-wave under ``jax.vjp`` (closures
+      kept per step), backward in reverse wave order, group-wise gradient
+      sync, optimizer update.
+
+Numerical contract (tested): ``loss_and_grads`` ≡ ``jax.value_and_grad`` of
+``MTModel.reference_loss`` for ANY planner-produced plan.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.contraction import MetaOp
+from ..core.plan import ExecutionPlan, PlanStep
+from .mtmodel import ExecComponent, MTModel
+
+
+@dataclass
+class _StepRecord:
+    step: PlanStep
+    meta_id: int
+    inst: str
+    kind: str  # entry | mid | loss
+    pred_order: List[int]  # meta_ids whose activations were inputs (entry)
+    vjp_fn: Any
+    is_loss: bool
+    out_like: Any = None  # output array (placement template for cotangents)
+
+
+class WaveEngine:
+    def __init__(self, model: MTModel, plan: ExecutionPlan, *,
+                 distributed: bool = False):
+        self.model = model
+        self.plan = plan
+        self.mg = plan.meta_graph
+        self.distributed = distributed and jax.device_count() > 1
+        self._preds = self.mg.predecessors()
+        self._succs = {m: set() for m in self.mg.meta_ops}
+        for src, dsts in self.mg.edges.items():
+            for d in dsts:
+                self._succs[src].add(d)
+        # meta → (instance, component, task string)
+        self.meta_info: Dict[int, Tuple[str, str, str]] = {}
+        for mid, m in self.mg.meta_ops.items():
+            inst, comp, _, task = model.op_info[m.op_ids[0]]
+            self.meta_info[mid] = (inst, comp, m.task)
+        # flow-order task list (merged-batch concat order)
+        self.flow_order = [f.task for f in model.flows]
+
+    # ------------------------------------------------------------------
+    def param_device_groups(self) -> Dict[str, Tuple[int, ...]]:
+        return self.plan.param_device_groups()
+
+    # ------------------------------------------------------------------
+    def _layer_range(self, step: PlanStep) -> Tuple[int, int]:
+        m = self.mg.meta_ops[step.meta_id]
+        first = m.op_ids.index(step.op_ids[0])
+        return first, first + len(step.op_ids)
+
+    def _entry_inputs(self, mid: int, acts, batches):
+        """Gather (ordered pred ids, input arrays, entry closure args)."""
+        inst, comp, task = self.meta_info[mid]
+        c = self.model.components[comp]
+        preds = sorted(self._preds[mid])
+        pred_comps = [self.meta_info[p][1] for p in preds]
+        return preds, pred_comps, c
+
+    def _put(self, x, step: PlanStep):
+        """Move an activation onto the step's device group (flow transmission)."""
+        if not self.distributed:
+            return x
+        devs = [d for d in step.devices if d < jax.device_count()]
+        if not devs:
+            return x
+        if len(devs) == 1:
+            return jax.device_put(x, jax.devices()[devs[0]])
+        mesh = jax.sharding.Mesh(
+            np.array([jax.devices()[d] for d in devs]), ("dp",)
+        )
+        spec = jax.sharding.PartitionSpec(
+            "dp" if x.ndim and x.shape[0] % len(devs) == 0 else None
+        )
+        return jax.device_put(x, jax.sharding.NamedSharding(mesh, spec))
+
+    # ------------------------------------------------------------------
+    def loss_and_grads(self, params, batches):
+        """Wave-by-wave fwd + reverse-wave bwd. Returns (loss, grads)."""
+        model = self.model
+        acts: Dict[int, Any] = {}
+        losses: Dict[int, Any] = {}
+        records: List[_StepRecord] = []
+
+        waves = self.plan.waves()
+        for widx in sorted(waves):
+            for step in waves[widx]:
+                mid = step.meta_id
+                inst, comp, task = self.meta_info[mid]
+                c = model.components[comp]
+                lo, hi = self._layer_range(step)
+                m = self.mg.meta_ops[mid]
+                terminal = not self._succs[mid]
+                is_loss_step = terminal and hi == m.L and c.kind in (
+                    "contrastive", "decoder"
+                )
+
+                if lo == 0:
+                    preds, pred_comps, _ = self._entry_inputs(mid, acts, batches)
+                    pred_acts = [self._put(acts[p], step) for p in preds]
+                    fn = self._make_entry_fn(
+                        mid, c, inst, preds, pred_comps, lo, hi,
+                        is_loss_step, batches,
+                    )
+                    out, vjp = jax.vjp(fn, params[inst], *pred_acts)
+                    rec = _StepRecord(step, mid, inst, "entry", preds, vjp,
+                                      is_loss_step, out_like=out)
+                else:
+                    h_in = self._put(acts[mid], step)
+                    fn = self._make_mid_fn(mid, c, inst, lo, hi, is_loss_step,
+                                           batches)
+                    out, vjp = jax.vjp(fn, params[inst], h_in)
+                    rec = _StepRecord(step, mid, inst, "mid", [], vjp,
+                                      is_loss_step, out_like=out)
+                records.append(rec)
+                if is_loss_step:
+                    losses[mid] = out
+                else:
+                    acts[mid] = out
+
+        n_losses = len(losses)
+
+        def _local(x):
+            """Bring a cross-group value to the default device (transmission
+            op for scalars/cotangents crossing device groups)."""
+            if not self.distributed:
+                return x
+            return jax.tree.map(
+                lambda a: jax.device_put(a, jax.devices()[0]), x
+            )
+
+        total = sum(_local(l) for l in losses.values()) / n_losses
+
+        # ---------------- backward: reverse wave order ----------------
+        grads = {k: jax.tree.map(jnp.zeros_like, v) for k, v in params.items()}
+        cot: Dict[int, Any] = {}
+
+        def _acc(a, b):
+            return jax.tree.map(lambda x, y: x + _same_place(y, x), a, b)
+
+        def _same_place(y, like):
+            if not self.distributed:
+                return y
+            try:
+                return jax.device_put(y, like.sharding)
+            except Exception:  # noqa: BLE001 — fall back to default device
+                return jax.device_put(y, jax.devices()[0])
+
+        for rec in reversed(records):
+            mid = rec.meta_id
+            if rec.is_loss:
+                g_out = jnp.asarray(1.0 / n_losses, jnp.float32)
+            else:
+                if mid not in cot:
+                    continue  # activation never used (defensive)
+                g_out = cot.pop(mid)
+            if self.distributed:
+                g_out = jax.tree.map(
+                    lambda g, o: _same_place(g, o), g_out, rec.out_like
+                ) if rec.out_like is not None else g_out
+            pulls = rec.vjp_fn(g_out)
+            d_params, d_ins = pulls[0], pulls[1:]
+            grads[rec.inst] = _acc(grads[rec.inst], d_params)
+            if rec.kind == "mid":
+                (d_h,) = d_ins
+                cot[mid] = _acc(cot[mid], d_h) if mid in cot else d_h
+            else:
+                for p, d in zip(rec.pred_order, d_ins):
+                    cot[p] = _acc(cot[p], d) if p in cot else d
+        return total, grads
+
+    # ------------------------------------------------------------------
+    def _tasks_of(self, task_str: str) -> List[str]:
+        ts = task_str.split("+")
+        return sorted(ts, key=self.flow_order.index)
+
+    def _make_entry_fn(self, mid, c: ExecComponent, inst, preds, pred_comps,
+                       lo, hi, is_loss, batches):
+        model = self.model
+        _, _, task_str = self.meta_info[mid]
+        tasks = self._tasks_of(task_str)
+        preds_by_task: Dict[str, List[int]] = {t: [] for t in tasks}
+        for p in preds:
+            pt = self.meta_info[p][2]
+            preds_by_task.setdefault(pt, []).append(p)
+
+        def fn(inst_params, *pred_acts):
+            by_id = dict(zip(preds, pred_acts))
+            if c.kind == "contrastive":
+                inputs = {pc: by_id[p] for p, pc in zip(preds, pred_comps)}
+                return model.loss_op(inst_params, c, inputs, batches[tasks[0]])
+            # entry per task (merged components concat the union batch)
+            hs = []
+            for t in tasks:
+                inputs = {
+                    self.meta_info[p][1]: by_id[p] for p in preds_by_task[t]
+                }
+                hs.append(model.entry(inst_params, c, inputs, batches[t]))
+            h = hs[0] if len(hs) == 1 else jnp.concatenate(hs, axis=0)
+            for lp in inst_params["layers"][lo:hi]:
+                h = model.apply_layer(c, lp, h)
+            if is_loss:
+                labels = jnp.concatenate(
+                    [batches[t]["labels"] for t in tasks], axis=0
+                ) if len(tasks) > 1 else batches[tasks[0]]["labels"]
+                return model.loss_op(
+                    inst_params, c, {}, {"labels": labels}, h=h
+                )
+            return h
+
+        return fn
+
+    def _make_mid_fn(self, mid, c: ExecComponent, inst, lo, hi, is_loss,
+                     batches):
+        model = self.model
+        _, _, task_str = self.meta_info[mid]
+        tasks = self._tasks_of(task_str)
+
+        def fn(inst_params, h):
+            for lp in inst_params["layers"][lo:hi]:
+                h = model.apply_layer(c, lp, h)
+            if is_loss:
+                labels = jnp.concatenate(
+                    [batches[t]["labels"] for t in tasks], axis=0
+                ) if len(tasks) > 1 else batches[tasks[0]]["labels"]
+                return model.loss_op(inst_params, c, {}, {"labels": labels}, h=h)
+            return h
+
+        return fn
+
+    # ------------------------------------------------------------------
+    def train_step(self, params, opt_state, batches, optimizer):
+        """One full §3.6 iteration: fwd+bwd wave-by-wave, group sync, update."""
+        loss, grads = self.loss_and_grads(params, batches)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        return new_params, new_state, loss

@@ -1,0 +1,417 @@
+"""Executable MT MM models — the real-JAX counterpart of a TaskGraph.
+
+The planner (:mod:`repro.core`) works on *workload* graphs; the runtime
+engine executes *this*: components with actual parameters and layer
+functions, wired per task exactly like :class:`repro.core.graph.GraphBuilder`
+flows.  The same spec builds both, so PlanStep.op_ids map 1:1 onto layer
+indices here.
+
+Component kinds:
+  * ``tower``       — modality encoder: (B, S, d_in) stub embeddings →
+                      pre-norm (attn + SwiGLU) layers at width d.
+  * ``decoder``     — causal LM join: tokens (B, S) + prefix conditioning
+                      (sum of pooled, projected branch outputs added to every
+                      position); final op computes the LM loss.
+  * ``contrastive`` — CLIP-style join: two pooled branch embeddings →
+                      symmetric InfoNCE loss (single op).
+
+Sharing semantics mirror the paper (§2.1/§3.6): ``shared=True`` components
+use ONE parameter instance across all activating tasks (the parameter
+device-group pool synchronizes their gradients); ``merge_shared=True``
+additionally merges the data flows into one chain over the union batch
+(the execution-barrier case).
+
+``reference_loss`` executes the whole model as one program — the numerical
+contract the WaveEngine must match.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.graph import ComponentSpec, FlowSpec, GraphBuilder, OpWorkload, TaskGraph
+from ..core.workloads import transformer_layer_workload, loss_module_workload
+from ..models.attention import attn_apply, attn_init
+from ..models.layers import (
+    cross_entropy,
+    dense_init,
+    embed_init,
+    embed_lookup,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+
+@dataclass(frozen=True)
+class ExecComponent:
+    name: str
+    kind: str  # tower | decoder | contrastive
+    n_layers: int
+    d_model: int
+    n_heads: int = 4
+    d_ff: int = 0  # 0 → 4·d
+    d_in: int = 0  # 0 → d_model (input/stub width)
+    vocab: int = 0  # decoders only
+    shared: bool = False
+    merge_shared: bool = False
+    max_tp: int = 4
+
+    @property
+    def ff(self) -> int:
+        return self.d_ff or 4 * self.d_model
+
+
+@dataclass(frozen=True)
+class ExecFlow:
+    task: str
+    branches: Tuple[Tuple[str, ...], ...]
+    join: Tuple[str, ...]
+    batch_size: int
+    seq_lens: Mapping[str, int] = field(default_factory=dict)
+
+    def seq_for(self, comp: str, default: int = 16) -> int:
+        return int(self.seq_lens.get(comp, default))
+
+
+class MTModel:
+    """Executable multi-task multi-modal model + its planner TaskGraph."""
+
+    def __init__(self, components: Sequence[ExecComponent], flows: Sequence[ExecFlow]):
+        self.components = {c.name: c for c in components}
+        self.flows = list(flows)
+        self._validate()
+        self._build_graph()
+
+    def _validate(self) -> None:
+        # merged components serve the union batch: every activating task
+        # must agree on the sequence length (pad upstream, like OFASys)
+        for c in self.components.values():
+            if not c.merge_shared:
+                continue
+            seqs = {
+                f.seq_for(c.name)
+                for f in self.flows
+                if c.name in (n for br in f.branches for n in br)
+                or c.name in f.join
+            }
+            if len(seqs) > 1:
+                raise ValueError(
+                    f"merged component {c.name!r} sees unequal sequence "
+                    f"lengths {sorted(seqs)}; pad tasks to a common length"
+                )
+
+    # ------------------------------------------------------------ graph link
+    def _build_graph(self) -> None:
+        """Build the planner TaskGraph and the op → (instance, layer) map."""
+        specs = []
+        for c in self.components.values():
+            def wl(batch, seq, c=c):
+                if c.kind == "contrastive":
+                    return loss_module_workload(c.d_model, batch)
+                return transformer_layer_workload(
+                    c.d_model, c.ff, c.n_heads, batch, max(seq, 1)
+                )
+
+            specs.append(
+                ComponentSpec(
+                    name=c.name,
+                    n_layers=c.n_layers,
+                    op_type=f"{c.kind}[{c.d_model}x{c.ff}]",
+                    workload_fn=wl,
+                    shared=c.shared,
+                    merge_shared=c.merge_shared,
+                    max_tp=c.max_tp,
+                )
+            )
+        gb = GraphBuilder(specs)
+        for f in self.flows:
+            gb.add_flow(
+                FlowSpec(
+                    task=f.task,
+                    branches=[list(b) for b in f.branches],
+                    join=list(f.join),
+                    batch_size=f.batch_size,
+                    seq_lens=dict(f.seq_lens),
+                )
+            )
+        self.graph: TaskGraph = gb.build()
+
+        # op_id → (instance, component, layer_idx, task)
+        # Chains were built in ascending op_id order per (task, component).
+        chains: Dict[Tuple[str, str], List[int]] = {}
+        for op_id in sorted(self.graph.nodes):
+            n = self.graph.nodes[op_id]
+            chains.setdefault((n.task, n.component), []).append(op_id)
+        self.op_info: Dict[int, Tuple[str, str, int, str]] = {}
+        for (task, comp), ops in chains.items():
+            c = self.components[comp]
+            inst = comp if (c.shared or c.merge_shared) else f"{task}:{comp}"
+            for layer, op_id in enumerate(ops):
+                self.op_info[op_id] = (inst, comp, layer, task)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> Dict[str, Any]:
+        """One param subtree per component *instance*."""
+        params: Dict[str, Any] = {}
+        instances = sorted({info[0] for info in self.op_info.values()})
+        for i, inst in enumerate(instances):
+            comp = inst.split(":")[-1]
+            c = self.components[comp]
+            params[inst] = self._component_init(
+                jax.random.fold_in(rng, i), c, inst
+            )
+        return params
+
+    def _in_dims(self, comp: str) -> Dict[str, int]:
+        """Predecessor-component → its output width (for in-projections)."""
+        dims = {}
+        for f in self.flows:
+            seqs = [list(b) for b in f.branches] + [list(f.join)]
+            for chain in seqs:
+                for a, b in zip(chain, chain[1:]):
+                    if b == comp:
+                        dims[a] = self.components[a].d_model
+            if comp in f.join and f.join and f.join[0] == comp:
+                for b in f.branches:
+                    if b:
+                        dims[b[-1]] = self.components[b[-1]].d_model
+        return dims
+
+    def _component_init(self, rng, c: ExecComponent, inst: str):
+        ks = jax.random.split(rng, c.n_layers + 4)
+        p: Dict[str, Any] = {}
+        if c.kind == "contrastive":
+            dims = self._in_dims(c.name)
+            p["proj"] = {
+                src: dense_init(jax.random.fold_in(ks[0], j), d, c.d_model,
+                                jnp.float32)
+                for j, (src, d) in enumerate(sorted(dims.items()))
+            }
+            p["logit_scale"] = jnp.asarray(math.log(10.0), jnp.float32)
+            return p
+        if c.kind == "decoder":
+            p["tok_embed"] = embed_init(ks[0], c.vocab or 256, c.d_model, jnp.float32)
+            p["lm_head"] = dense_init(ks[1], c.d_model, c.vocab or 256, jnp.float32)
+            dims = self._in_dims(c.name)
+            p["prefix_proj"] = {
+                src: dense_init(jax.random.fold_in(ks[2], j), d, c.d_model,
+                                jnp.float32)
+                for j, (src, d) in enumerate(sorted(dims.items()))
+            }
+        if c.kind == "tower" and c.d_in and c.d_in != c.d_model:
+            p["in_proj"] = dense_init(ks[2], c.d_in, c.d_model, jnp.float32)
+        p["layers"] = [
+            self._layer_init(ks[3 + l], c) for l in range(c.n_layers)
+        ]
+        p["final_norm"] = rmsnorm_init(c.d_model, jnp.float32)
+        return p
+
+    def _layer_init(self, rng, c: ExecComponent):
+        k1, k2 = jax.random.split(rng)
+        hd = c.d_model // c.n_heads
+        return {
+            "norm1": rmsnorm_init(c.d_model, jnp.float32),
+            "attn": attn_init(k1, c.d_model, c.n_heads, c.n_heads, hd, jnp.float32),
+            "norm2": rmsnorm_init(c.d_model, jnp.float32),
+            "mlp": mlp_init(k2, c.d_model, c.ff, jnp.float32),
+        }
+
+    # --------------------------------------------------------------- layers
+    def apply_layer(self, c: ExecComponent, lp, h):
+        hd = c.d_model // c.n_heads
+        y = attn_apply(
+            lp["attn"], rmsnorm(lp["norm1"], h),
+            n_heads=c.n_heads, n_kv=c.n_heads, head_dim=hd,
+            rope_theta=1e4, causal=(c.kind == "decoder"), impl="naive",
+        )
+        h = h + y
+        return h + mlp_apply(lp["mlp"], rmsnorm(lp["norm2"], h))
+
+    def entry(self, inst_params, c: ExecComponent, inputs: Dict[str, Any],
+              task_inputs: Dict[str, Any]):
+        """Input activation for layer 0 of a component instance.
+
+        ``inputs``: predecessor-component → (B, S, d) activation.
+        ``task_inputs``: this task's raw batch dict."""
+        if c.kind == "tower":
+            if inputs:  # chained tower: previous component's output
+                (src, h), = list(inputs.items())
+                if "in_proj" in inst_params:
+                    h = h @ inst_params["in_proj"]
+                return h
+            x = task_inputs[c.name]  # (B, S, d_in) stub embeddings
+            if "in_proj" in inst_params:
+                x = x @ inst_params["in_proj"]
+            return x
+        if c.kind == "decoder":
+            h = embed_lookup(inst_params["tok_embed"], task_inputs["tokens"])
+            prefix = jnp.zeros((h.shape[0], c.d_model), jnp.float32)
+            for src, act in sorted(inputs.items()):
+                pooled = jnp.mean(act, axis=1)  # (B, d_src)
+                prefix = prefix + pooled @ inst_params["prefix_proj"][src]
+            return h + prefix[:, None, :]
+        raise ValueError(c.kind)
+
+    def loss_op(self, inst_params, c: ExecComponent, inputs: Dict[str, Any],
+                task_inputs: Dict[str, Any], h=None):
+        """Terminal op: compute this task's scalar loss."""
+        if c.kind == "contrastive":
+            items = sorted(inputs.items())
+            assert len(items) == 2, "contrastive join needs exactly 2 branches"
+            (sa, ha), (sb, hb) = items
+            za = jnp.mean(ha, axis=1) @ inst_params["proj"][sa]
+            zb = jnp.mean(hb, axis=1) @ inst_params["proj"][sb]
+            za = za / (jnp.linalg.norm(za, axis=-1, keepdims=True) + 1e-6)
+            zb = zb / (jnp.linalg.norm(zb, axis=-1, keepdims=True) + 1e-6)
+            logits = za @ zb.T * jnp.exp(inst_params["logit_scale"])
+            labels = jnp.arange(za.shape[0])
+            return 0.5 * (
+                cross_entropy(logits, labels) + cross_entropy(logits.T, labels)
+            )
+        if c.kind == "decoder":
+            h = rmsnorm(inst_params["final_norm"], h)
+            logits = h @ inst_params["lm_head"]
+            return cross_entropy(logits, task_inputs["labels"])
+        raise ValueError(c.kind)
+
+    # ------------------------------------------------------------- reference
+    def reference_loss(self, params, batches: Dict[str, Dict[str, Any]]):
+        """Single-program execution of the full MT MM model.
+
+        ``batches``: task → batch dict.  Returns mean task loss — the
+        numerical contract for the WaveEngine.  Merged components process
+        the union batch exactly like the engine does (concat in task order).
+        """
+        # per-task branch outputs
+        losses = []
+        merged_inputs: Dict[str, List[Tuple[str, str, Any, Any]]] = {}
+        for f in self.flows:
+            ti = batches[f.task]
+            branch_out: Dict[str, Any] = {}
+            for branch in f.branches:
+                h, prev = None, None
+                for comp in branch:
+                    c = self.components[comp]
+                    inst = comp if (c.shared or c.merge_shared) else f"{f.task}:{comp}"
+                    ip = params[inst]
+                    h = self.entry(ip, c, {} if prev is None else {prev: h}, ti)
+                    for lp in ip["layers"]:
+                        h = self.apply_layer(c, lp, h)
+                    prev = comp
+                if branch:
+                    branch_out[branch[-1]] = h
+            # join
+            if not f.join:
+                continue
+            jname = f.join[0]
+            jc = self.components[jname]
+            if jc.merge_shared:
+                merged_inputs.setdefault(jname, []).append(
+                    (f.task, jname, branch_out, ti)
+                )
+                continue
+            inst = jname if jc.shared else f"{f.task}:{jname}"
+            ip = params[inst]
+            if jc.kind == "contrastive":
+                losses.append(self.loss_op(ip, jc, branch_out, ti))
+            else:
+                h = self.entry(ip, jc, branch_out, ti)
+                for lp in ip["layers"]:
+                    h = self.apply_layer(jc, lp, h)
+                losses.append(self.loss_op(ip, jc, branch_out, ti, h=h))
+
+        # merged joins: union batch in flow order (the execution barrier)
+        for jname, uses in merged_inputs.items():
+            jc = self.components[jname]
+            ip = params[jname]
+            hs, tis = [], []
+            for task, _, branch_out, ti in uses:
+                hs.append(self.entry(ip, jc, branch_out, ti))
+                tis.append(ti)
+            h = jnp.concatenate(hs, axis=0)
+            for lp in ip["layers"]:
+                h = self.apply_layer(jc, lp, h)
+            labels = jnp.concatenate([t["labels"] for t in tis], axis=0)
+            losses.append(
+                self.loss_op(ip, jc, {}, {"labels": labels}, h=h)
+            )
+        return jnp.mean(jnp.stack(losses))
+
+
+# ---------------------------------------------------------------------------
+# Canned demo models (small versions of the paper's three workloads)
+# ---------------------------------------------------------------------------
+
+
+def tiny_multitask_clip(n_tasks: int = 3, batch: int = 4, d: int = 32,
+                        layers: Tuple[int, int] = (3, 2)) -> Tuple[MTModel, Dict]:
+    """Small Multitask-CLIP: per-modality towers + shared contrastive joins."""
+    towers = {
+        "vision": ExecComponent("vision", "tower", layers[0], d * 2, 4, shared=True),
+        "text": ExecComponent("text", "tower", layers[1], d, 4, shared=True),
+        "audio": ExecComponent("audio", "tower", layers[1], d, 4, shared=True),
+    }
+    pairs = [("img_text", "vision", "text"), ("audio_text", "audio", "text"),
+             ("audio_vision", "audio", "vision")][:n_tasks]
+    loss_c = ExecComponent("contrastive", "contrastive", 1, d, shared=False)
+    flows, seqs = [], {"vision": 9, "text": 5, "audio": 7}
+    for task, ma, mb in pairs:
+        flows.append(
+            ExecFlow(task, ((ma,), (mb,)), ("contrastive",), batch,
+                     {ma: seqs[ma], mb: seqs[mb]})
+        )
+    model = MTModel(list(towers.values()) + [loss_c], flows)
+    batches = _demo_batches(model)
+    return model, batches
+
+
+def tiny_ofasys(n_tasks: int = 3, batch: int = 4, d: int = 32) -> Tuple[MTModel, Dict]:
+    """Small OFASys: modality adaptors → ONE merged decoder (barrier case)."""
+    comps = [
+        ExecComponent("vis_ad", "tower", 2, d, 4, shared=True),
+        ExecComponent("aud_ad", "tower", 3, d + 16, 4, shared=True),
+        ExecComponent("txt_ad", "tower", 1, d, 4, shared=True),
+        ExecComponent("lm", "decoder", 3, d, 4, vocab=97, shared=True,
+                      merge_shared=True),
+    ]
+    tasks = [("caption", "vis_ad"), ("asr", "aud_ad"), ("summ", "txt_ad")][:n_tasks]
+    flows = [
+        ExecFlow(t, ((ad,),), ("lm",), batch, {ad: 6, "lm": 8})
+        for t, ad in tasks
+    ]
+    model = MTModel(comps, flows)
+    return model, _demo_batches(model)
+
+
+def _demo_batches(model: MTModel, seed: int = 0) -> Dict[str, Dict[str, Any]]:
+    out = {}
+    for i, f in enumerate(model.flows):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        b: Dict[str, Any] = {}
+        for branch in f.branches:
+            comp = branch[0]
+            c = model.components[comp]
+            if c.kind == "tower":
+                b[comp] = jax.random.normal(
+                    jax.random.fold_in(key, hash(comp) & 0xFFFF),
+                    (f.batch_size, f.seq_for(comp), c.d_in or c.d_model),
+                )
+        for jn in f.join:
+            c = model.components[jn]
+            if c.kind == "decoder":
+                S = f.seq_for(jn)
+                toks = jax.random.randint(
+                    jax.random.fold_in(key, 1), (f.batch_size, S + 1), 0,
+                    c.vocab or 256,
+                )
+                b["tokens"], b["labels"] = toks[:, :-1], toks[:, 1:]
+        out[f.task] = b
+    return out

@@ -1,0 +1,149 @@
+"""Resource allocator (§3.3) + wavefront scheduler (§3.4) invariants."""
+
+import math
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    ClusterSpec,
+    MetaOp,
+    OpWorkload,
+    ScalabilityEstimator,
+    V5E,
+    allocate_level,
+    check_schedule,
+    contract,
+    make_time_fn,
+    schedule,
+    solve_continuous,
+)
+from repro.core.workloads import WORKLOADS
+
+
+def _metas(specs):
+    """specs: list of (L, flops, batch). Returns independent MetaOps."""
+    out = []
+    for i, (L, flops, batch) in enumerate(specs):
+        out.append(
+            MetaOp(
+                meta_id=i, op_type=f"ty{i}", task=f"t{i}", component="c",
+                op_ids=list(range(L)),
+                workload=OpWorkload(flops=flops, bytes_hbm=flops / 20,
+                                    param_bytes=1e7, act_bytes=1e5,
+                                    tp_comm_bytes=1e5),
+                batch_size=batch, seq_len=64, param_group=None, max_tp=4,
+            )
+        )
+    return out
+
+
+def _est(n):
+    return ScalabilityEstimator(make_time_fn(V5E), n)
+
+
+# -------------------------------------------------------------- §3.3 Theorem 1
+
+
+def test_continuous_solution_equalizes_completion():
+    """Thm 1: all MetaOps finish together at C̃* and allocations sum to N."""
+    N = 16
+    metas = _metas([(8, 2e12, 16), (12, 5e11, 16), (4, 8e12, 16)])
+    est = _est(N)
+    curves = {m.meta_id: est.curve(m) for m in metas}
+    c_star, n_star = solve_continuous(metas, curves, N)
+    total = sum(n_star.values())
+    assert total == pytest.approx(N, rel=2e-2)
+    for m in metas:
+        t_m = curves[m.meta_id].estimate(n_star[m.meta_id]) * m.L
+        assert t_m == pytest.approx(c_star, rel=5e-2)
+
+
+def test_bipoint_discretization_conditions():
+    """Conds (10a)/(10b): lengths partition L_m; duration ≈ C̃*."""
+    N = 16
+    metas = _metas([(10, 2e12, 16), (20, 6e11, 16), (6, 4e12, 16)])
+    alloc = allocate_level(metas, _est(N), N)
+    for m in metas:
+        tuples = alloc.tuples[m.meta_id]
+        assert 1 <= len(tuples) <= 2
+        assert sum(t.l for t in tuples) == m.L  # (10a) exact
+        dur = sum(t.duration for t in tuples)
+        assert dur <= alloc.c_star * 1.6 + 1e-9  # (10b) up to l-rounding bias
+        for t in tuples:
+            assert t.n >= 1
+            assert t.config.dp * t.config.tp == t.n
+
+
+def test_dummy_allocation_dropped():
+    """n* < 1 for a tiny op next to a huge one → single wide tuple survives."""
+    N = 8
+    metas = _metas([(1, 1e8, 8), (32, 9e12, 8)])
+    alloc = allocate_level(metas, _est(N), N)
+    for m in metas:
+        assert all(t.n >= 1 for t in alloc.tuples[m.meta_id])
+
+
+# -------------------------------------------------------------- §3.4 scheduler
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+@pytest.mark.parametrize("n_devices", [8, 16, 32])
+def test_schedule_invariants_paper_workloads(name, n_devices):
+    mg = contract(WORKLOADS[name]())
+    sched = schedule(mg, _est(n_devices), n_devices)
+    check_schedule(sched, mg, n_devices)  # capacity/disjoint/complete/deps
+    assert sched.makespan > 0
+    # #waves ≤ 2 · #MetaOps (§5.5 complexity analysis)
+    assert len(sched.waves) <= 2 * len(mg.meta_ops) + len(mg.levels())
+
+
+def test_waves_fill_devices():
+    """Within each wave, device usage is maximized (≥ the widest head or full)."""
+    mg = contract(WORKLOADS["multitask_clip"](n_tasks=4))
+    N = 16
+    sched = schedule(mg, _est(N), N)
+    for w in sched.waves:
+        used = sum(e.n for e in w.entries)
+        assert used <= N
+        # a wave is either well-packed or blocked by indivisible remainder
+        assert used >= N // 2 or len(w.entries) >= 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    specs=st.lists(
+        st.tuples(
+            st.integers(1, 24),           # L
+            st.floats(1e9, 1e13),         # flops
+            st.sampled_from([4, 8, 16]),  # batch
+        ),
+        min_size=1,
+        max_size=6,
+    ),
+    n_devices=st.sampled_from([4, 8, 16]),
+)
+def test_schedule_invariants_random_levels(specs, n_devices):
+    """Property: any single-level instance schedules validly & completely."""
+    from repro.core.contraction import MetaGraph
+
+    metas = _metas(specs)
+    mg = MetaGraph()
+    for m in metas:
+        m.level = 0
+        mg.meta_ops[m.meta_id] = m
+        mg.edges[m.meta_id] = set()
+    sched = schedule(mg, _est(n_devices), n_devices)
+    check_schedule(sched, mg, n_devices)
+
+
+def test_makespan_lower_bounded_by_cstar():
+    """C̃* is a valid lower bound (Fig. 11's reference)."""
+    mg = contract(WORKLOADS["ofasys"]())
+    N = 16
+    sched = schedule(mg, _est(N), N)
+    assert sched.makespan >= sched.c_star_total * (1 - 1e-6)
+    # near-optimality: within 2× on the paper workloads (paper shows ≤7%;
+    # our analytic cost model is harsher on tiny ops)
+    assert sched.makespan <= sched.c_star_total * 2.0

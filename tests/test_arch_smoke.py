@@ -1,0 +1,95 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + no NaNs (assignment requirement §f)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import ShapeConfig, default_sharding, get_arch, reduced
+from repro.configs import ASSIGNED
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_smoke(arch):
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg, default_sharding(cfg))
+    params = model.init(jax.random.PRNGKey(0))
+    shape = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+    batch = model.batch_arrays(shape)
+
+    def loss_fn(p):
+        return model.loss(p, batch)
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True)
+    )(params)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+    # gradients flow to every parameter leaf
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    nonzero = sum(bool(jnp.any(g != 0)) for g in flat)
+    assert nonzero >= len(flat) * 0.7, f"{arch}: too many dead gradients"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_prefill_smoke(arch):
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg, default_sharding(cfg))
+    params = model.init(jax.random.PRNGKey(0))
+    shape = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="prefill")
+    batch = model.batch_arrays(shape)
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len=40)
+    )(params, batch)
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert cache is not None
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_step_smoke(arch):
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg, default_sharding(cfg))
+    params = model.init(jax.random.PRNGKey(0))
+    B, L = 2, 24
+    cache = model.init_cache(B, L)
+    tok = jnp.array([1, 2], jnp.int32)
+    logits, cache2 = jax.jit(
+        lambda p, t, c: model.decode_step(p, t, c, 0)
+    )(params, tok, cache)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_input_specs_cover_all_shapes(arch):
+    from repro.config import SHAPES, applicable_shapes
+
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    for shape in applicable_shapes(cfg):
+        specs = model.input_specs(shape)
+        leaves = jax.tree.leaves(specs)
+        assert leaves, f"{arch}/{shape}: empty input specs"
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+
+def test_exact_assignment_numbers():
+    """Spot-check the assignment table is transcribed exactly."""
+    a = get_arch("llama3-405b")
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.d_ff, a.vocab) \
+        == (126, 16384, 128, 8, 53248, 128256)
+    b = get_arch("qwen3-moe-30b-a3b")
+    assert (b.n_layers, b.moe.n_experts, b.moe.top_k, b.d_ff) == (48, 128, 8, 768)
+    c = get_arch("qwen2-moe-a2.7b")
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.n_shared_experts) == (60, 4, 4)
+    d = get_arch("recurrentgemma-9b")
+    assert d.n_layers == 38 and d.n_kv_heads == 1 and d.block_pattern == (
+        "rglru", "rglru", "local_attn")
+    e = get_arch("seamless-m4t-medium")
+    assert e.n_enc_layers == 12 and e.vocab == 256206
+    assert get_arch("xlstm-125m").d_ff == 0

@@ -1,0 +1,105 @@
+"""Scalability estimator (§3.2): piecewise α–β fitting + inverse (property)."""
+
+import math
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import assume, given, settings
+
+from repro.core import (
+    MetaOp,
+    OpWorkload,
+    ParallelConfig,
+    ScalabilityEstimator,
+    ScalingCurve,
+    V5E,
+    make_time_fn,
+    op_time,
+    valid_allocations,
+)
+
+
+def _meta(batch=16, seq=128, flops=1e12, max_tp=8):
+    return MetaOp(
+        meta_id=0, op_type="x", task="t", component="c", op_ids=[0],
+        workload=OpWorkload(flops=flops, bytes_hbm=flops / 20,
+                            param_bytes=1e8, act_bytes=1e6,
+                            tp_comm_bytes=1e6),
+        batch_size=batch, seq_len=seq, param_group=None, max_tp=max_tp,
+    )
+
+
+def test_curve_exact_at_profiled_points():
+    ns = [1, 2, 4, 8]
+    ts = [8.0, 4.5, 2.5, 1.5]
+    c = ScalingCurve(ns=ns, ts=ts, configs=[ParallelConfig(dp=n) for n in ns])
+    for n, t in zip(ns, ts):
+        assert c.estimate(n) == pytest.approx(t, rel=1e-9)
+
+
+def test_curve_monotone_coercion():
+    """Noisy upward bumps are clipped so T(n) is non-increasing (Thm 1 precond)."""
+    c = ScalingCurve(ns=[1, 2, 4], ts=[4.0, 5.0, 2.0],
+                     configs=[ParallelConfig(dp=n) for n in [1, 2, 4]])
+    assert c.ts == [4.0, 4.0, 2.0]
+    prev = math.inf
+    for n in [1.0, 1.5, 2.0, 3.0, 4.0, 8.0]:
+        t = c.estimate(n)
+        assert t <= prev + 1e-12
+        prev = t
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ts=st.lists(st.floats(0.1, 100.0), min_size=2, max_size=6),
+    t_query=st.floats(0.05, 200.0),
+)
+def test_inverse_is_galois_connection(ts, t_query):
+    """inverse(t) = min{n : T(n) ≤ t} — checked against a grid scan."""
+    ns = [2**k for k in range(len(ts))]
+    c = ScalingCurve(ns=ns, ts=sorted(ts, reverse=True),
+                     configs=[ParallelConfig(dp=n) for n in ns])
+    n_inv = c.inverse(t_query)
+    if math.isinf(n_inv):
+        assert c.estimate(ns[-1]) > t_query
+        return
+    assert c.estimate(n_inv) <= t_query * (1 + 1e-6)
+    # any smaller n is never faster than the solution point (flat segments
+    # make "strictly slower" too strong)
+    for frac in [0.5, 0.9]:
+        n_smaller = n_inv * frac
+        if n_smaller >= 1e-9:
+            assert c.estimate(n_smaller) >= min(
+                t_query, c.estimate(n_inv)
+            ) * (1 - 1e-6)
+
+
+def test_estimator_grid_and_cache():
+    est = ScalabilityEstimator(make_time_fn(V5E), 16)
+    m = _meta()
+    curve = est.curve(m)
+    assert curve.ns[0] >= 1 and curve.ns[-1] <= 16
+    assert est.curve(m) is curve  # cached
+
+
+def test_valid_allocations_divisibility():
+    m = _meta(batch=6, max_tp=2)
+    valids = valid_allocations(m, 8)
+    # n=5: dp·tp with tp≤2 → dp∈{5} doesn't divide 6 → 5 (with tp=1) invalid
+    assert 5 not in valids
+    assert 1 in valids and 2 in valids and 3 in valids and 6 in valids
+
+
+def test_cost_model_scaling_shape():
+    """Heavy ops scale near-linearly; light ops saturate (Fig. 4 shape)."""
+    heavy = _meta(flops=1e13, batch=64, seq=512)
+    light = _meta(flops=1e9, batch=4, seq=16)
+    t_fn = make_time_fn(V5E)
+    sp_heavy = op_time(heavy, ParallelConfig(dp=1)) / op_time(
+        heavy, ParallelConfig(dp=8)
+    )
+    sp_light = op_time(light, ParallelConfig(dp=1)) / op_time(
+        light, ParallelConfig(dp=4)
+    )
+    assert sp_heavy > 5.0  # near-linear
+    assert sp_light < 2.5  # saturating

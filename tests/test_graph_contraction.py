@@ -1,0 +1,145 @@
+"""Graph builder + §3.1 contraction invariants (unit + property tests)."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    ComponentSpec,
+    FlowSpec,
+    GraphBuilder,
+    MetaGraph,
+    OpNode,
+    OpWorkload,
+    TaskGraph,
+    contract,
+)
+from repro.core.workloads import WORKLOADS, multitask_clip, ofasys, qwen_val
+
+
+def _wl(f=1e9):
+    return OpWorkload(flops=f, bytes_hbm=f / 10, param_bytes=1e6, act_bytes=1e5)
+
+
+def chain_graph(lengths, types):
+    """Linear graph of segments: lengths[i] ops of types[i]."""
+    g = TaskGraph(tasks=["t"])
+    op_id = 0
+    prev = None
+    for L, ty in zip(lengths, types):
+        for _ in range(L):
+            g.add_node(OpNode(op_id, ty, "t", f"c{ty}", _wl(), 4, 16))
+            if prev is not None:
+                g.add_edge(prev, op_id)
+            prev = op_id
+            op_id += 1
+    return g
+
+
+# ---------------------------------------------------------------- unit tests
+
+
+def test_contract_single_chain():
+    g = chain_graph([5], ["a"])
+    mg = contract(g)
+    assert len(mg.meta_ops) == 1
+    (m,) = mg.meta_ops.values()
+    assert m.L == 5 and m.level == 0
+
+
+def test_contract_heterogeneous_chain():
+    g = chain_graph([3, 4, 2], ["a", "b", "a"])
+    mg = contract(g)
+    assert sorted(m.L for m in mg.meta_ops.values()) == [2, 3, 4]
+    levels = [m.level for m in sorted(mg.meta_ops.values(), key=lambda m: m.op_ids[0])]
+    assert levels == [0, 1, 2]
+
+
+def test_contract_requires_unique_degree():
+    """A fan-out point must break the chain even with identical op types."""
+    g = chain_graph([2], ["a"])
+    # add two consumers of op 1 with same type
+    g.add_node(OpNode(2, "a", "t", "ca", _wl(), 4, 16))
+    g.add_node(OpNode(3, "a", "t", "ca", _wl(), 4, 16))
+    g.add_edge(1, 2)
+    g.add_edge(1, 3)
+    mg = contract(g)
+    # ops 0-1 contract; 2 and 3 are separate MetaOps (in-degree rule)
+    assert len(mg.meta_ops) == 3
+
+
+def test_levels_no_intra_level_deps():
+    for name, maker in WORKLOADS.items():
+        mg = contract(maker())
+        preds = mg.predecessors()
+        for mid, m in mg.meta_ops.items():
+            for p in preds[mid]:
+                assert mg.meta_ops[p].level < m.level, f"{name}: level violation"
+
+
+def test_paper_workloads_structure():
+    g = multitask_clip(n_tasks=4)
+    mg = contract(g)
+    # 4 tasks: ≤4 tower MetaOps (shared towers replicated per task)
+    # + 4 contrastive ops
+    tasks = {m.task for m in mg.meta_ops.values()}
+    assert len(tasks) >= 4
+    g2 = ofasys(n_tasks=4)
+    mg2 = contract(g2)
+    merged = [m for m in mg2.meta_ops.values() if "+" in m.task]
+    assert merged, "ofasys must have a merged (barrier) LM chain"
+    assert merged[0].batch_size == 4 * 32  # union batch
+
+
+def test_graph_validate_rejects_cycles():
+    g = chain_graph([2], ["a"])
+    g.edges[1].add(0)
+    with pytest.raises(ValueError):
+        g.validate()
+
+
+# ------------------------------------------------------------ property tests
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    lengths=st.lists(st.integers(1, 6), min_size=1, max_size=5),
+    n_types=st.integers(1, 3),
+)
+def test_contraction_preserves_ops(lengths, n_types):
+    types = [f"ty{i % n_types}" for i in range(len(lengths))]
+    g = chain_graph(lengths, types)
+    mg = contract(g)
+    covered = sorted(op for m in mg.meta_ops.values() for op in m.op_ids)
+    assert covered == sorted(g.nodes)  # partition: every op exactly once
+    # chain segments of equal adjacent type must merge
+    merged_expected = []
+    for L, ty in zip(lengths, types):
+        if merged_expected and merged_expected[-1][1] == ty:
+            merged_expected[-1][0] += L
+        else:
+            merged_expected.append([L, ty])
+    assert sorted(m.L for m in mg.meta_ops.values()) == sorted(
+        L for L, _ in merged_expected
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_random_dag_levels(seed):
+    """Random DAGs: contraction yields valid MetaGraph with consistent levels."""
+    import random
+
+    r = random.Random(seed)
+    g = TaskGraph(tasks=["t"])
+    n = r.randint(2, 20)
+    for i in range(n):
+        g.add_node(OpNode(i, f"ty{r.randint(0, 2)}", "t", "c", _wl(), 4, 16))
+    for j in range(1, n):
+        for i in range(j):
+            if r.random() < 0.2:
+                g.add_edge(i, j)
+    mg = contract(g)
+    mg.validate()
+    covered = sorted(op for m in mg.meta_ops.values() for op in m.op_ids)
+    assert covered == list(range(n))

@@ -1,0 +1,99 @@
+"""Device placement (§3.5) + end-to-end planner (§3 pipeline)."""
+
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    contract,
+    place,
+    plan,
+    simulate_distmm_mt,
+    simulate_optimus,
+    simulate_plan,
+    simulate_sequential,
+    simulate_spindle,
+)
+from repro.core.workloads import WORKLOADS
+
+
+CLUSTER = ClusterSpec(n_devices=16, island_size=8, mem_bytes=16e9)
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_plan_end_to_end(name):
+    p = plan(WORKLOADS[name](), CLUSTER)
+    assert p.steps, "plan must contain steps"
+    assert p.makespan > 0
+    assert p.planning_seconds < 30.0
+    # every step's devices are valid, disjoint within a wave
+    for widx, steps in p.waves().items():
+        used = []
+        for s in steps:
+            assert len(s.devices) == s.dp * s.tp
+            assert all(0 <= d < CLUSTER.n_devices for d in s.devices)
+            used.extend(s.devices)
+        assert len(used) == len(set(used)), f"wave {widx}: device overlap"
+
+
+def test_placement_capacity_and_memory():
+    g = WORKLOADS["multitask_clip"](n_tasks=4)
+    p = plan(g, CLUSTER)
+    assert all(v >= 0 for v in p.placement.mem_high_water.values())
+    # Spindle placement keeps devices under the HBM budget on this workload
+    over = [d for d, v in p.placement.mem_high_water.items()
+            if v > CLUSTER.mem_bytes]
+    assert not over, f"devices over memory budget: {over}"
+
+
+def test_spindle_placement_beats_sequential_comm():
+    """Fig. 10 ablation: locality-aware placement ⇒ less inter-island flow.
+
+    Memory pressure removed (huge HBM) so both strategies are compared on
+    pure communication; with real HBM budgets Spindle deliberately trades
+    locality for memory balance (§3.5) while 'sequential' would just OOM."""
+    from repro.core.plan import plan as mkplan
+
+    big = ClusterSpec(n_devices=16, island_size=8, mem_bytes=1e13)
+    weighted = {}
+    for name in WORKLOADS:
+        g = WORKLOADS[name]()
+        costs = {}
+        for strat in ("spindle", "sequential"):
+            pl = mkplan(g, big, placement_strategy=strat).placement
+            costs[strat] = 8 * pl.interwave_bytes_inter + pl.interwave_bytes_intra
+        weighted[name] = costs
+        # never meaningfully worse on any workload
+        assert costs["spindle"] <= costs["sequential"] * 1.10 + 1e-6, name
+    # and strictly better on most (the Fig. 10 claim)
+    wins = sum(
+        c["spindle"] < c["sequential"] * 0.999 for c in weighted.values()
+    )
+    assert wins >= len(weighted) // 2, weighted
+
+
+def test_param_device_groups_cover_shared():
+    g = WORKLOADS["ofasys"]()
+    p = plan(g, CLUSTER)
+    groups = p.param_device_groups()
+    assert groups, "shared components must register device groups"
+    for name, devs in groups.items():
+        assert devs == tuple(sorted(set(devs)))
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_spindle_beats_baselines(name):
+    """Fig. 8: Spindle ≤ sequential & ≤ DistMM-MT makespan (analytic sim)."""
+    g = WORKLOADS[name]()
+    res_sp, _ = simulate_spindle(g, CLUSTER)
+    res_seq = simulate_sequential(g, CLUSTER)
+    res_dm = simulate_distmm_mt(g, CLUSTER)
+    assert res_sp.makespan <= res_seq.makespan * 1.02
+    assert res_sp.makespan <= res_dm.makespan * 1.05
+    assert 0 < res_sp.avg_flops_utilization <= 1.0
+
+
+def test_utilization_improves_over_sequential():
+    g = WORKLOADS["multitask_clip"](n_tasks=4)
+    res_sp, _ = simulate_spindle(g, CLUSTER)
+    res_seq = simulate_sequential(g, CLUSTER)
+    assert res_sp.avg_flops_utilization >= res_seq.avg_flops_utilization

@@ -1,0 +1,107 @@
+"""Name-based sharding rules: divisibility safety + layout intent."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ShardingConfig, default_sharding, get_arch
+from repro.parallel import ShardingRules
+from repro.parallel.sharding import constrain
+
+
+class FakeMesh:
+    """Shape-only stand-in so rules are testable without 256 devices."""
+
+    def __init__(self, shape, axes):
+        import numpy as np
+
+        self.axis_names = tuple(axes)
+        self.devices = np.empty(shape, dtype=object)
+        self.empty = False
+
+
+def _rules(shape=(16, 16), axes=("data", "model"), **kw):
+    return ShardingRules(FakeMesh(shape, axes), ShardingConfig(**kw))
+
+
+def test_attention_param_specs():
+    r = _rules()
+    # stacked (G, d, H·hd): heads shard over model, then FSDP on d
+    spec = r.param_spec("blocks/p0/mix/wq", (28, 1024, 2048))
+    assert spec == P(None, "data", "model")
+    spec = r.param_spec("blocks/p0/mix/wo", (28, 2048, 1024))
+    assert spec == P(None, "model", "data")
+
+
+def test_vocab_parallel_embedding():
+    r = _rules()
+    assert r.param_spec("tok_embed", (151936, 1024)) == P("model", "data")
+    # indivisible vocab (seamless 256206) falls back off the model axis
+    spec = r.param_spec("tok_embed", (256206, 1024))
+    assert spec[0] != "model"
+
+
+def test_expert_parallel_vs_expert_tp():
+    r = _rules()
+    # 128 experts divide 16 → EP on the expert dim
+    assert r.param_spec("blocks/p0/ffn/we_gate", (48, 128, 2048, 768))[1] == "model"
+    # 60 experts don't; with shard_experts=False we shard the hidden dim
+    r2 = _rules(shard_experts=False)
+    spec = r2.param_spec("blocks/p0/ffn/we_gate", (24, 60, 2048, 1408))
+    assert spec[1] is None and spec[3] == "model"
+
+
+def test_norms_replicated():
+    r = _rules()
+    spec = r.param_spec("blocks/p0/norm1/scale", (28, 1024))
+    assert spec == P(None, None) or all(
+        s in (None, "data") for s in spec
+    )
+
+
+def test_ragged_dims_never_sharded():
+    r = _rules()
+    for shape in [(28, 1024, 7), (28, 30, 9)]:
+        spec = r.param_spec("blocks/p0/mix/wq", shape)
+        # nothing raggedly sharded: every sharded dim divides the axis size
+        for dim, s in zip(shape, spec):
+            if s == "model":
+                assert dim % 16 == 0
+            if s == "data":
+                assert dim % 16 == 0
+
+
+def test_cache_specs_kv_heads_vs_seq():
+    r = _rules()
+    # kv heads divide 16 → heads sharded
+    spec = r.cache_spec("groups/p0/k", (28, 128, 16, 32768, 128))
+    assert spec[2] == "model"
+    # kv=8 doesn't divide 16 → fall back to sequence sharding (flash-decode)
+    spec = r.cache_spec("groups/p0/k", (28, 128, 8, 32768, 128))
+    assert spec[2] is None and spec[3] == "model"
+
+
+def test_batch_spec_divisibility():
+    r = _rules()
+    assert r.batch_spec("tokens", (256, 4096))[0] in ("data", ("data",))
+    assert r.batch_spec("tokens", (1, 524288))[0] is None  # batch 1
+
+
+def test_multipod_batch_axes():
+    r = _rules(shape=(2, 16, 16), axes=("pod", "data", "model"))
+    assert r.batch == ("pod", "data")
+    assert r.batch_spec("tokens", (256, 4096))[0] == ("pod", "data")
+
+
+def test_fsdp_over_pod_optional():
+    r = _rules(shape=(2, 16, 16), axes=("pod", "data", "model"),
+               fsdp_over_pod=True)
+    assert r.fsdp_axes == ("pod", "data")
+    spec = r.param_spec("blocks/p0/mix/wq", (28, 1024, 2048))
+    assert spec[1] == ("pod", "data")
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert constrain(x, None, "batch", None) is x

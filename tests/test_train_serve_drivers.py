@@ -1,0 +1,41 @@
+"""End-to-end driver tests: train descends, resume is exact, serve decodes."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.serve import serve
+from repro.launch.train import train
+
+
+def test_train_loss_decreases():
+    out = train("qwen3-0.6b", reduced_cfg=True, steps=120, batch=16, seq=64,
+                lr=3e-3, verbose=False, seed=0)
+    first = sum(out["history"][:10]) / 10
+    last = sum(out["history"][-10:]) / 10
+    assert last < first - 0.04, f"no learning: {first:.3f} → {last:.3f}"
+
+
+def test_train_resume_exact(tmp_path):
+    """Checkpoint/restart reproduces the uninterrupted run exactly
+    (deterministic data ⇒ bitwise-matching loss trajectory)."""
+    ck = str(tmp_path / "ck")
+    full = train("xlstm-125m", reduced_cfg=True, steps=20, batch=4, seq=32,
+                 verbose=False, seed=1)
+    # interrupted run: same 20-step schedule, killed after step 9's save
+    train("xlstm-125m", reduced_cfg=True, steps=20, batch=4, seq=32,
+          ckpt_dir=ck, ckpt_every=9, verbose=False, seed=1, stop_at_step=10)
+    resumed = train("xlstm-125m", reduced_cfg=True, steps=20, batch=4, seq=32,
+                    ckpt_dir=ck, ckpt_every=9, verbose=False, seed=1)
+    assert resumed["history"][-1] == pytest.approx(full["history"][-1],
+                                                   rel=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "recurrentgemma-9b",
+                                  "seamless-m4t-medium"])
+def test_serve_generates(arch):
+    out = serve(arch, reduced_cfg=True, n_requests=2, prompt_len=8,
+                gen_len=4, verbose=False)
+    toks = out["tokens"]
+    assert toks.shape == (2, 4)
+    assert bool(jnp.all(toks >= 0))
