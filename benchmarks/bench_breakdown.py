@@ -63,8 +63,8 @@ def run() -> List[Dict]:
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(rows=None) -> None:
+    rows = run() if rows is None else rows
     print(f"{'workload':20s} {'placement':11s} {'compute':>9s} {'sync':>8s} "
           f"{'interwave':>10s} {'iw %':>6s}")
     for r in rows:

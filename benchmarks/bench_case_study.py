@@ -48,8 +48,8 @@ def run(n_bins: int = 16) -> List[Dict]:
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(rows=None) -> None:
+    rows = run() if rows is None else rows
     for r in rows:
         bar = "".join(
             " ▁▂▃▄▅▆▇█"[min(int(u * 9 / 0.65), 8)] for u in r["util_curve"]

@@ -2,15 +2,20 @@
 
 Tasks are added/completed over time (the paper §1: "the proportion of
 different data modalities in MT workloads may shift over time").  We
-compare three policies on a task-count trajectory:
+compare four policies on a task-count trajectory:
 
-  * ``replan``   — Spindle re-plans at every shift (the paper's hook),
-  * ``stale``    — keep the plan built for the initial task set; removed
-                   tasks leave holes, added tasks run sequentially after,
-  * ``sequential`` — the workload-unaware baseline throughout.
+  * ``replan``      — Spindle re-plans from scratch at every shift (the
+                      paper's hook),
+  * ``incremental`` — Spindle replans through the PlanCache: identical
+                      workloads hit the cache outright, shifted workloads
+                      reuse cached scaling curves and any unchanged
+                      MetaLevels (repro.core.plancache),
+  * ``stale``       — keep the plan built for the initial task set; removed
+                      tasks leave holes, added tasks run sequentially after,
+  * ``sequential``  — the workload-unaware baseline throughout.
 
-Reported: total simulated time over the trajectory and the re-plan
-overhead (planner wall time is < 0.2 s per shift, §Fig. 12).
+Reported: total simulated time over the trajectory, per-policy planner wall
+time per shift (< 0.2 s per shift, §Fig. 12), and the cache hit rate.
 """
 
 from __future__ import annotations
@@ -18,7 +23,13 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from repro.core import ClusterSpec, simulate_sequential, simulate_spindle
+from repro.core import (
+    ClusterSpec,
+    PlanCache,
+    plan,
+    simulate_plan,
+    simulate_sequential,
+)
 from repro.core.workloads import multitask_clip
 
 TRAJECTORY = [4, 6, 6, 3, 5, 2]  # active task count per phase
@@ -29,20 +40,30 @@ def run() -> List[Dict]:
     cluster = ClusterSpec(n_devices=16, island_size=8, mem_bytes=96e9)
     rows = []
 
-    # replan policy: plan per phase
-    t_replan, plan_overhead = 0.0, 0.0
+    # replan policy: full plan per phase
+    t_replan, replan_overhead = 0.0, 0.0
     for k in TRAJECTORY:
         g = multitask_clip(k)
         t0 = time.perf_counter()
-        res, _ = simulate_spindle(g, cluster)
-        plan_overhead += time.perf_counter() - t0
-        t_replan += res.makespan * ITERS_PER_PHASE
+        p = plan(g, cluster)
+        replan_overhead += time.perf_counter() - t0
+        t_replan += simulate_plan(p, cluster).makespan * ITERS_PER_PHASE
+
+    # incremental policy: plan through the PlanCache (exact hits + per-level
+    # reuse + memoized scaling curves); correctness falls back to full replan
+    cache = PlanCache()
+    t_inc, inc_overhead = 0.0, 0.0
+    for k in TRAJECTORY:
+        g = multitask_clip(k)
+        t0 = time.perf_counter()
+        p = plan(g, cluster, cache=cache)
+        inc_overhead += time.perf_counter() - t0
+        t_inc += simulate_plan(p, cluster).makespan * ITERS_PER_PHASE
 
     # stale policy: the first phase's per-task time, applied to every phase
     # (removed tasks leave idle allocations; added tasks run sequentially)
     g0 = multitask_clip(TRAJECTORY[0])
-    res0, _ = simulate_spindle(g0, cluster)
-    per_iter0 = res0.makespan
+    per_iter0 = simulate_plan(plan(g0, cluster), cluster).makespan
     t_stale = 0.0
     for k in TRAJECTORY:
         extra = 0.0
@@ -58,24 +79,34 @@ def run() -> List[Dict]:
         res = simulate_sequential(multitask_clip(k), cluster)
         t_seq += res.makespan * ITERS_PER_PHASE
 
+    n = len(TRAJECTORY)
     rows.append({
         "bench": "dynamicity",
         "trajectory": TRAJECTORY,
         "replan_total_s": t_replan,
+        "incremental_total_s": t_inc,
         "stale_total_s": t_stale,
         "sequential_total_s": t_seq,
-        "replan_overhead_s": plan_overhead,
+        "replan_overhead_s": replan_overhead,
+        "incremental_overhead_s": inc_overhead,
+        "replan_per_shift_s": replan_overhead / n,
+        "incremental_per_shift_s": inc_overhead / n,
+        "cache": cache.stats.as_dict(),
         "speedup_vs_stale": t_stale / t_replan,
         "speedup_vs_sequential": t_seq / t_replan,
     })
     return rows
 
 
-def main() -> None:
-    r = run()[0]
+def main(rows=None) -> None:
+    r = (run() if rows is None else rows)[0]
     print(f"task trajectory {r['trajectory']} × {ITERS_PER_PHASE} iters/phase")
     print(f"  re-plan each shift : {r['replan_total_s']:8.2f} s "
-          f"(+{r['replan_overhead_s']*1e3:.0f} ms total planner time)")
+          f"(+{r['replan_per_shift_s']*1e3:.1f} ms planner/shift)")
+    print(f"  incremental (cache): {r['incremental_total_s']:8.2f} s "
+          f"(+{r['incremental_per_shift_s']*1e3:.1f} ms planner/shift, "
+          f"hit rate {r['cache']['hit_rate']:.0%}, "
+          f"{r['cache']['levels_reused']} levels reused)")
     print(f"  stale initial plan : {r['stale_total_s']:8.2f} s "
           f"({r['speedup_vs_stale']:.2f}x slower)")
     print(f"  sequential baseline: {r['sequential_total_s']:8.2f} s "

@@ -59,8 +59,8 @@ def run() -> List[Dict]:
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(rows=None) -> None:
+    rows = run() if rows is None else rows
     print(f"{'case':22s} {'N':>3s} {'seq':>9s} {'distmm':>9s} {'optimus':>9s} "
           f"{'spindle':>9s} {'speedup':>8s}")
     for r in rows:

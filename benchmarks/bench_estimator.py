@@ -82,8 +82,8 @@ def run() -> List[Dict]:
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(rows=None) -> None:
+    rows = run() if rows is None else rows
     print(f"{'MetaOp':28s} {'piecewise err':>14s} {'single α–β err':>15s} "
           f"{'ς(16)':>6s}")
     seen = set()

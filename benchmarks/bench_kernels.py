@@ -76,8 +76,8 @@ def run() -> List[Dict]:
     return rows
 
 
-def main() -> None:
-    for r in run():
+def main(rows=None) -> None:
+    for r in (run() if rows is None else rows):
         print(f"{r['kernel']:16s} {r['shape']:26s} "
               f"kernel {r['t_kernel_us']:10.0f} us  ref {r['t_ref_us']:10.0f} us  "
               f"max_err {r['max_err']:.2e}")

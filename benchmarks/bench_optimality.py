@@ -42,8 +42,8 @@ def run() -> List[Dict]:
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(rows=None) -> None:
+    rows = run() if rows is None else rows
     print(f"{'workload':18s} {'tasks':>5s} {'N':>3s} {'makespan':>10s} "
           f"{'C*':>10s} {'dev %':>7s}")
     for r in rows:

@@ -1,14 +1,22 @@
 """Benchmark driver: one module per paper table/figure + the roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json out.json]
+
+Besides the aggregate ``--json`` dump, every bench writes a
+machine-readable ``BENCH_<name>.json`` at the repo root
+(schema: ``{"bench": ..., "rows": [...], "seconds": ...}``) so the perf
+trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import sys
 import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 from . import (
     bench_breakdown,
@@ -34,6 +42,17 @@ BENCHES = {
 }
 
 
+def write_bench_json(name: str, rows, seconds: float) -> pathlib.Path:
+    """Write the per-bench perf-trajectory record at the repo root."""
+    out = REPO_ROOT / f"BENCH_{name}.json"
+    with open(out, "w") as f:
+        json.dump(
+            {"bench": name, "rows": rows, "seconds": seconds},
+            f, indent=1, default=str,
+        )
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
@@ -47,11 +66,13 @@ def main() -> None:
         mod = BENCHES[name]
         print(f"\n=== {name} " + "=" * (60 - len(name)))
         t0 = time.perf_counter()
-        mod.main()
-        rows = mod.run()
+        rows = mod.run()  # single execution; main() only renders the rows
+        seconds = time.perf_counter() - t0
+        mod.main(rows)
         for r in rows:
             all_rows.append(r)
-        print(f"--- {name} done in {time.perf_counter() - t0:.1f}s")
+        out = write_bench_json(name, rows, seconds)
+        print(f"--- {name} done in {seconds:.1f}s -> {out.name}")
 
     if not args.only:
         print("\n=== roofline " + "=" * 52)

@@ -234,3 +234,36 @@ def allocate_level(
             m, curves[m.meta_id], n_star[m.meta_id], c_star, n_devices
         )
     return LevelAllocation(c_star=c_star, n_star=n_star, tuples=tuples)
+
+
+def allocate_balanced(
+    metas: Sequence[MetaOp],
+    estimator: ScalabilityEstimator,
+    n_devices: int,
+) -> LevelAllocation:
+    """Balanced-share allocation (DistMM-MT-style, one tuple per MetaOp).
+
+    Solves the same continuous optimum as :func:`allocate_level` but skips
+    bi-point dissection: each MetaOp gets the single largest valid allocation
+    ≤ its real-valued share (rounded UP to the smallest valid width when the
+    share is below it), and runs all ``L_m`` operators at that constant
+    width.  Σ n_m ≤ N is therefore NOT guaranteed — levels with more MetaOps
+    than their shares can fit still round up to ≥1 device each — so
+    consumers must pack entries into capacity-respecting waves (as
+    ``TaskSequentialSchedulerStage`` does); the tuples are not directly a
+    one-wave schedule.  This is the intra-task heterogeneity-aware (but
+    wave-unaware) allocator the DistMM-MT baseline pipeline plugs into the
+    scheduler hook.
+    """
+    curves = {m.meta_id: estimator.curve(m) for m in metas}
+    c_star, n_star = solve_continuous(metas, curves, n_devices)
+    tuples: Dict[int, List[ASLTuple]] = {}
+    for m in metas:
+        lo, hi = bracket_valid(m, n_star[m.meta_id], n_devices)
+        n = lo if lo > 0 else hi  # floor to the valid share; ≥ smallest valid
+        cfg = best_config(m, n)
+        assert cfg is not None
+        tuples[m.meta_id] = [
+            ASLTuple(m.meta_id, n, m.L, curves[m.meta_id].estimate(n), cfg)
+        ]
+    return LevelAllocation(c_star=c_star, n_star=n_star, tuples=tuples)

@@ -228,15 +228,34 @@ class ScalabilityEstimator:
         n_devices: int,
         *,
         profile_powers_of_two: bool = True,
+        curve_memo: Optional[Dict[Tuple, ScalingCurve]] = None,
     ):
         self.time_fn = time_fn
         self.n_devices = n_devices
         self.profile_powers_of_two = profile_powers_of_two
         self._cache: Dict[int, ScalingCurve] = {}
+        # Optional cross-plan memo keyed by MetaOp *identity* (not meta_id),
+        # shared between estimator instances so incremental replans skip
+        # re-profiling unchanged MetaOps (repro.core.plancache wires this).
+        self._memo = curve_memo
+
+    def _memo_key(self, m: MetaOp) -> Tuple:
+        w = m.workload
+        return (
+            m.op_type, m.batch_size, m.seq_len, m.max_tp,
+            w.flops, w.bytes_hbm, w.param_bytes, w.act_bytes, w.tp_comm_bytes,
+            self.n_devices, self.profile_powers_of_two,
+        )
 
     def curve(self, m: MetaOp) -> ScalingCurve:
         if m.meta_id in self._cache:
             return self._cache[m.meta_id]
+        if self._memo is not None:
+            key = self._memo_key(m)
+            hit = self._memo.get(key)
+            if hit is not None:
+                self._cache[m.meta_id] = hit
+                return hit
         grid = valid_allocations(
             m, self.n_devices, powers_of_two=self.profile_powers_of_two
         )
@@ -258,6 +277,8 @@ class ScalabilityEstimator:
             cfgs.append(best_c)
         curve = ScalingCurve(ns=ns, ts=ts, configs=cfgs)
         self._cache[m.meta_id] = curve
+        if self._memo is not None:
+            self._memo[self._memo_key(m)] = curve
         return curve
 
     def curves(self, mg: MetaGraph) -> Dict[int, ScalingCurve]:

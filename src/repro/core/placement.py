@@ -98,6 +98,14 @@ def _flow_volume(m: MetaOp) -> float:
     return m.workload.act_bytes
 
 
+# Wave-ordered placement strategies selectable via ``place(strategy=...)``
+# (and, at the pipeline layer, via LocalityPlacementStage).  Keys here place
+# entries wave by wave over a shared free-device pool; planners whose waves
+# overlap in time (e.g. optimus task blocks) use a dedicated PlacementStage
+# in repro.core.pipeline instead.
+PLACEMENT_STRATEGIES = ("spindle", "sequential")
+
+
 def place(
     sched: Schedule,
     mg: MetaGraph,
@@ -112,6 +120,11 @@ def place(
     the Fig. 10 ablation baseline (assign consecutive device ranges in entry
     order, ignoring locality/memory).
     """
+    if strategy not in PLACEMENT_STRATEGIES:
+        raise ValueError(
+            f"unknown placement strategy {strategy!r}; "
+            f"choose from {PLACEMENT_STRATEGIES}"
+        )
     pl = Placement()
     mem = {d: 0.0 for d in range(cluster.n_devices)}  # high-water per device
     # Last placement of each MetaOp (for data-flow locality & param reuse).

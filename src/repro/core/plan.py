@@ -1,23 +1,26 @@
 """Execution plan assembly — the planner driver (Spindle Fig. 2, §3).
 
-``plan()`` runs the full pipeline: contraction → scaling curves → per-level
-allocation → wavefront schedule → device placement, producing an
-:class:`ExecutionPlan` the runtime engine (and the simulator) consume.
+``plan()`` is the front door of the planning subsystem: it resolves a
+:class:`repro.core.pipeline.PlannerPipeline` by name (``spindle`` plus the
+``sequential`` / ``distmm_mt`` / ``optimus`` baselines) and runs its staged
+contraction → scaling curves → per-level allocation → schedule → device
+placement flow, producing an :class:`ExecutionPlan` the runtime engine (and
+the simulator) consume.  :func:`assemble_plan` is the shared final stage that
+flattens any (MetaGraph, Schedule, Placement) triple into concrete steps.
 """
 
 from __future__ import annotations
 
 import json
-import time
-from dataclasses import asdict, dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
-from .contraction import MetaGraph, contract
-from .costmodel import HardwareSpec, V5E, make_time_fn
-from .estimator import ParallelConfig, ScalabilityEstimator, TimeFn
+from .contraction import MetaGraph
+from .costmodel import HardwareSpec, V5E
+from .estimator import TimeFn
 from .graph import TaskGraph
-from .placement import ClusterSpec, Placement, place
-from .scheduler import Schedule, check_schedule, schedule
+from .placement import ClusterSpec, Placement
+from .scheduler import Schedule
 
 
 @dataclass
@@ -47,6 +50,8 @@ class ExecutionPlan:
     schedule: Schedule
     placement: Placement
     meta_graph: MetaGraph
+    planner: str = "spindle"  # registry name of the pipeline that built it
+    signature: Optional[str] = None  # workload signature (plancache key)
 
     # ------------------------------------------------------------------
     def waves(self) -> Dict[int, List[PlanStep]]:
@@ -70,6 +75,8 @@ class ExecutionPlan:
     def to_json(self) -> str:
         return json.dumps(
             {
+                "planner": self.planner,
+                "signature": self.signature,
                 "makespan": self.makespan,
                 "c_star_total": self.c_star_total,
                 "n_devices": self.n_devices,
@@ -95,28 +102,16 @@ class ExecutionPlan:
         )
 
 
-def plan(
-    graph: TaskGraph,
+def assemble_plan(
+    mg: MetaGraph,
+    sched: Schedule,
+    placement: Placement,
     cluster: ClusterSpec,
+    planning_seconds: float,
     *,
-    time_fn: Optional[TimeFn] = None,
-    hw: HardwareSpec = V5E,
-    placement_strategy: str = "spindle",
-    profile_powers_of_two: bool = True,
+    planner: str = "spindle",
 ) -> ExecutionPlan:
-    """Full Spindle planning pipeline."""
-    t0 = time.perf_counter()
-    mg = contract(graph)
-    est = ScalabilityEstimator(
-        time_fn or make_time_fn(hw),
-        cluster.n_devices,
-        profile_powers_of_two=profile_powers_of_two,
-    )
-    sched = schedule(mg, est, cluster.n_devices)
-    check_schedule(sched, mg, cluster.n_devices)
-    placement = place(sched, mg, cluster, strategy=placement_strategy)
-    t1 = time.perf_counter()
-
+    """Flatten (MetaGraph, Schedule, Placement) into executable PlanSteps."""
     steps: List[PlanStep] = []
     for w in sched.waves:
         for e in w.entries:
@@ -141,8 +136,52 @@ def plan(
         makespan=sched.makespan,
         c_star_total=sched.c_star_total,
         n_devices=cluster.n_devices,
-        planning_seconds=t1 - t0,
+        planning_seconds=planning_seconds,
         schedule=sched,
         placement=placement,
         meta_graph=mg,
+        planner=planner,
     )
+
+
+def plan(
+    graph: TaskGraph,
+    cluster: ClusterSpec,
+    *,
+    time_fn: Optional[TimeFn] = None,
+    hw: HardwareSpec = V5E,
+    planner: str = "spindle",
+    placement_strategy: str = "spindle",
+    profile_powers_of_two: bool = True,
+    cache: Optional["PlanCache"] = None,
+) -> ExecutionPlan:
+    """Build an ExecutionPlan via the named planner pipeline.
+
+    ``planner`` selects a registered :class:`PlannerPipeline` strategy
+    (``spindle`` | ``sequential`` | ``distmm_mt`` | ``optimus``).  When a
+    :class:`repro.core.plancache.PlanCache` is supplied, planning goes
+    through the cache: exact workload-signature hits return the stored plan
+    and near-misses replan incrementally (unchanged MetaLevels reuse their
+    cached allocation/schedule).
+    """
+    from .pipeline import get_pipeline  # local import: avoids module cycle
+
+    if cache is not None:
+        from .plancache import plan_cached
+
+        return plan_cached(
+            graph,
+            cluster,
+            cache,
+            planner=planner,
+            time_fn=time_fn,
+            hw=hw,
+            placement_strategy=placement_strategy,
+            profile_powers_of_two=profile_powers_of_two,
+        )
+    pipe = get_pipeline(
+        planner,
+        placement_strategy=placement_strategy,
+        profile_powers_of_two=profile_powers_of_two,
+    )
+    return pipe.plan(graph, cluster, time_fn=time_fn, hw=hw)

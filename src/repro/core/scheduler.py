@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .allocator import ASLTuple, LevelAllocation, allocate_level
 from .contraction import MetaGraph, MetaOp
@@ -76,6 +76,15 @@ class Schedule:
     makespan: float = 0.0
     c_star_total: float = 0.0  # Σ per-level C̃* — the Fig.11 reference bound
     level_allocs: List[LevelAllocation] = field(default_factory=list)
+    # Strategy-specific side channel (e.g. the optimus task-block map) read
+    # by the paired placement stage; see repro.core.pipeline.
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+
+# Signature shared by allocate_level and its strategy alternatives
+# (repro.core.allocator.allocate_balanced); the scheduler below and the
+# PlannerPipeline wire the selected allocator through this hook.
+AllocateFn = Callable[[Sequence[MetaOp], ScalabilityEstimator, int], LevelAllocation]
 
 
 # --------------------------------------------------------------------------
@@ -334,13 +343,15 @@ def schedule(
     mg: MetaGraph,
     estimator: ScalabilityEstimator,
     n_devices: int,
+    *,
+    allocate_fn: AllocateFn = allocate_level,
 ) -> Schedule:
     """Allocate + schedule every MetaLevel, merged sequentially (§3.4)."""
     sched = Schedule()
     t_now = 0.0
     widx = 0
     for level, metas in enumerate(mg.levels()):
-        alloc = allocate_level(metas, estimator, n_devices)
+        alloc = allocate_fn(metas, estimator, n_devices)
         sched.level_allocs.append(alloc)
         sched.c_star_total += alloc.c_star
         waves, t_now = schedule_level(

@@ -1,17 +1,19 @@
-"""Plan simulator + baseline planners (Spindle §5 competitors).
+"""Plan simulator (Spindle §5 evaluation quantities).
 
-Simulates any schedule on the analytic cluster model to report makespan,
-FLOPs-based utilization (the paper measures "FLOPs per second", Fig. 1/9),
-per-device occupancy, and inter-wave communication time — the quantities
-behind the paper's Fig. 8/9/10 evaluation.  Four planners are provided:
+Simulates any :class:`ExecutionPlan` on the analytic cluster model to report
+makespan, FLOPs-based utilization (the paper measures "FLOPs per second",
+Fig. 1/9), per-device occupancy, and inter-wave communication time — the
+quantities behind the paper's Fig. 8/9/10 evaluation.
 
-  * ``spindle``        — the real planner (:func:`repro.core.plan.plan`).
-  * ``sequential``     — Megatron-LM / DeepSpeed-style temporal decoupling:
-                         every MetaOp serially occupies the whole cluster.
-  * ``distmm_mt``      — DistMM-MT: per-task intra-task tower allocation,
-                         tasks executed sequentially.
-  * ``optimus``        — Spindle-Optimus: workload-aware *task-level*
-                         allocation by iterated marginal gain (Optimus).
+Planner strategies live in :mod:`repro.core.pipeline`; the ``simulate_*``
+helpers below are thin adapters that build a plan through the registered
+pipeline of the same name and convert it to a :class:`SimResult`, so the
+simulator and ``plan(..., planner=...)`` share one code path:
+
+  * ``spindle``        — the real planner (wavefront scheduling).
+  * ``sequential``     — Megatron-LM / DeepSpeed-style temporal decoupling.
+  * ``distmm_mt``      — DistMM-MT per-task balanced tower allocation.
+  * ``optimus``        — Spindle-Optimus task-level marginal-gain blocks.
 """
 
 from __future__ import annotations
@@ -20,16 +22,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .contraction import MetaGraph, MetaOp, contract
-from .costmodel import HardwareSpec, V5E, make_time_fn
-from .estimator import (
-    ParallelConfig,
-    ScalabilityEstimator,
-    ScalingCurve,
-    best_config,
-    valid_allocations,
-)
+from .costmodel import HardwareSpec, V5E
 from .graph import TaskGraph
+from .pipeline import get_pipeline
 from .placement import ClusterSpec
 from .plan import ExecutionPlan, plan as spindle_plan
 
@@ -111,11 +106,18 @@ class SimResult:
 
 
 # --------------------------------------------------------------------------
-# Simulating a Spindle ExecutionPlan (with placement-aware comm costs)
+# Simulating an ExecutionPlan (with placement-aware comm costs)
 # --------------------------------------------------------------------------
 
 
-def simulate_plan(p: ExecutionPlan, cluster: ClusterSpec) -> SimResult:
+def simulate_plan(
+    p: ExecutionPlan, cluster: ClusterSpec, *, include_comm: bool = True
+) -> SimResult:
+    """Convert a plan (from ANY registered pipeline) into a SimResult.
+
+    ``include_comm`` adds the placement's inter-wave transmission time to
+    the makespan; the baseline planners ignore data movement (they model
+    idealized competitors, matching the paper's comparison)."""
     steps = []
     for s in p.steps:
         m = p.meta_graph.meta_ops[s.meta_id]
@@ -128,12 +130,14 @@ def simulate_plan(p: ExecutionPlan, cluster: ClusterSpec) -> SimResult:
                 meta_id=s.meta_id,
             )
         )
-    comm = (
-        p.placement.interwave_bytes_intra / cluster.intra_island_bw
-        + p.placement.interwave_bytes_inter / cluster.inter_island_bw
-    )
+    comm = 0.0
+    if include_comm:
+        comm = (
+            p.placement.interwave_bytes_intra / cluster.intra_island_bw
+            + p.placement.interwave_bytes_inter / cluster.inter_island_bw
+        )
     return SimResult(
-        name="spindle",
+        name=p.planner,
         makespan=p.makespan + comm,
         n_devices=cluster.n_devices,
         steps=steps,
@@ -143,132 +147,40 @@ def simulate_plan(p: ExecutionPlan, cluster: ClusterSpec) -> SimResult:
 
 
 # --------------------------------------------------------------------------
-# Baseline planners (all consume the same MetaGraph + scaling curves)
+# Named planner adapters (one code path: the pipeline registry)
 # --------------------------------------------------------------------------
 
 
-def _make_estimator(cluster: ClusterSpec, hw: HardwareSpec, time_fn=None):
-    return ScalabilityEstimator(
-        time_fn or make_time_fn(hw), cluster.n_devices, profile_powers_of_two=True
-    )
+def simulate_planner(
+    name: str,
+    graph: TaskGraph,
+    cluster: ClusterSpec,
+    hw: HardwareSpec = V5E,
+    time_fn=None,
+) -> SimResult:
+    """Plan ``graph`` with the named registered pipeline and simulate it."""
+    p = get_pipeline(name).plan(graph, cluster, hw=hw, time_fn=time_fn)
+    # Baselines are idealized (no data-movement modelling); only the spindle
+    # plan carries a meaningful placement comm estimate.
+    return simulate_plan(p, cluster, include_comm=(name == "spindle"))
 
 
 def simulate_sequential(
     graph: TaskGraph, cluster: ClusterSpec, hw: HardwareSpec = V5E, time_fn=None
 ) -> SimResult:
-    """Megatron/DeepSpeed baseline: MetaOps serial, whole cluster each.
-
-    Workload-unaware: every MetaOp is parallelized over as many devices as
-    its divisibility constraints admit (the paper's "DeepSpeed needs to
-    parallelize it on the whole cluster ... causing the kernel to be
-    underutilized or even idle").
-    """
-    mg = contract(graph)
-    est = _make_estimator(cluster, hw, time_fn)
-    N = cluster.n_devices
-    t = 0.0
-    steps: List[SimStep] = []
-    for level in mg.levels():
-        for m in level:
-            curve = est.curve(m)
-            n = max(v for v in valid_allocations(m, N) if v <= N)
-            dur = curve.estimate(n) * m.L
-            steps.append(SimStep(t, t + dur, N, m.workload.flops * m.L, m.meta_id))
-            t += dur
-    return SimResult("sequential", t, N, steps)
+    return simulate_planner("sequential", graph, cluster, hw, time_fn)
 
 
 def simulate_distmm_mt(
     graph: TaskGraph, cluster: ClusterSpec, hw: HardwareSpec = V5E, time_fn=None
 ) -> SimResult:
-    """DistMM-MT: tasks sequential; within a task, concurrent towers get
-    balanced resource shares (intra-task heterogeneity awareness only)."""
-    from .allocator import allocate_level
-
-    mg = contract(graph)
-    est = _make_estimator(cluster, hw, time_fn)
-    N = cluster.n_devices
-    tasks: Dict[str, List[MetaOp]] = {}
-    for m in mg.meta_ops.values():
-        tasks.setdefault(m.task.split("+")[0], []).append(m)
-
-    t = 0.0
-    steps: List[SimStep] = []
-    for task in sorted(tasks):
-        by_level: Dict[int, List[MetaOp]] = {}
-        for m in tasks[task]:
-            by_level.setdefault(m.level, []).append(m)
-        for level in sorted(by_level):
-            group = by_level[level]
-            alloc = allocate_level(group, est, N)
-            dur = 0.0
-            for m in group:
-                tuples = alloc.tuples[m.meta_id]
-                d_m = sum(a.duration for a in tuples)
-                n_m = max((a.n for a in tuples), default=1)
-                steps.append(
-                    SimStep(t, t + d_m, n_m, m.workload.flops * m.L, m.meta_id)
-                )
-                dur = max(dur, d_m)
-            t += dur
-    return SimResult("distmm_mt", t, N, steps)
+    return simulate_planner("distmm_mt", graph, cluster, hw, time_fn)
 
 
 def simulate_optimus(
     graph: TaskGraph, cluster: ClusterSpec, hw: HardwareSpec = V5E, time_fn=None
 ) -> SimResult:
-    """Spindle-Optimus: task-level greedy marginal-gain allocation; tasks run
-    concurrently on fixed disjoint task-level device blocks."""
-    mg = contract(graph)
-    est = _make_estimator(cluster, hw, time_fn)
-    N = cluster.n_devices
-    tasks: Dict[str, List[MetaOp]] = {}
-    for m in mg.meta_ops.values():
-        tasks.setdefault(m.task.split("+")[0], []).append(m)
-    names = sorted(tasks)
-
-    def task_time(task: str, n: int) -> float:
-        if n <= 0:
-            return math.inf
-        total = 0.0
-        for m in sorted(tasks[task], key=lambda m: m.level):
-            n_eff = max([v for v in valid_allocations(m, N) if v <= n] or [0])
-            if n_eff == 0:
-                return math.inf
-            total += est.curve(m).estimate(n_eff) * m.L
-        return total
-
-    alloc = {t: 1 for t in names}
-    free = N - len(names)
-    if free < 0:
-        res = simulate_sequential(graph, cluster, hw, time_fn)
-        res.name = "optimus"
-        return res
-    cur = {t: task_time(t, alloc[t]) for t in names}
-    while free > 0:
-        best_t, best_gain = None, 0.0
-        for t in names:
-            t_next = task_time(t, alloc[t] + 1)
-            gain = (cur[t] - t_next) / 1.0
-            if gain > best_gain:
-                best_t, best_gain = t, gain
-        if best_t is None:
-            break
-        alloc[best_t] += 1
-        free -= 1
-        cur[best_t] = task_time(best_t, alloc[best_t])
-
-    steps: List[SimStep] = []
-    for task in names:
-        n = alloc[task]
-        t = 0.0
-        for m in sorted(tasks[task], key=lambda m: m.level):
-            n_eff = max([v for v in valid_allocations(m, N) if v <= n] or [1])
-            dur = est.curve(m).estimate(n_eff) * m.L
-            steps.append(SimStep(t, t + dur, n, m.workload.flops * m.L, m.meta_id))
-            t += dur
-    makespan = max(cur.values()) if cur else 0.0
-    return SimResult("optimus", makespan, N, steps)
+    return simulate_planner("optimus", graph, cluster, hw, time_fn)
 
 
 def simulate_spindle(

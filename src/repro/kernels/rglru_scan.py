@@ -23,6 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# CompilerParams was named TPUCompilerParams before jax 0.5; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _scan_kernel(
     a_ref,  # (1, chunk, bd)
@@ -76,7 +79,7 @@ def rglru_scan(
         out_specs=pl.BlockSpec((1, ch, bd), lambda ib, idb, ic: (ib, ic, idb)),
         out_shape=jax.ShapeDtypeStruct((B, ns * ch, ndb * bd), a.dtype),
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -216,6 +216,46 @@ def run_all(*, multi_pod: bool = False, archs: Optional[List[str]] = None,
     return records
 
 
+def run_planner_dry(workload: str, *, planners: Optional[List[str]] = None,
+                    n_devices: int = 16,
+                    verbose: bool = True) -> List[Dict[str, Any]]:
+    """Planner dry-run: build ExecutionPlans for ``workload`` through every
+    requested PlannerPipeline strategy (no compilation/hardware involved) and
+    record plan shape + planning cost — the planning analogue of the compile
+    dry-run below."""
+    from ..core.pipeline import available_planners, get_pipeline
+    from ..core.placement import ClusterSpec
+    from ..core.workloads import WORKLOADS
+
+    if workload not in WORKLOADS:
+        raise SystemExit(
+            f"[dryrun] unknown workload {workload!r}; "
+            f"choose from {sorted(WORKLOADS)}"
+        )
+    graph = WORKLOADS[workload]()
+    cluster = ClusterSpec(n_devices=n_devices, island_size=8, mem_bytes=96e9)
+    records = []
+    for name in planners or available_planners():
+        p = get_pipeline(name).plan(graph, cluster)
+        rec = {
+            "workload": workload,
+            "planner": name,
+            "n_devices": n_devices,
+            "n_waves": len(p.waves()),
+            "n_steps": len(p.steps),
+            "makespan_s": p.makespan,
+            "planning_s": p.planning_seconds,
+            "ok": True,
+        }
+        records.append(rec)
+        if verbose:
+            print(f"[dryrun] plan {workload} × {name:10s}: "
+                  f"{rec['n_waves']:3d} waves {rec['n_steps']:3d} steps  "
+                  f"makespan {rec['makespan_s']*1e3:8.2f} ms  "
+                  f"planned in {rec['planning_s']*1e3:6.1f} ms")
+    return records
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default=None)
@@ -225,8 +265,27 @@ def main() -> None:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--baseline", action="store_true",
                     help="paper-faithful configs (no §Perf levers)")
+    ap.add_argument("--plan", default=None, metavar="WORKLOAD",
+                    help="planner dry-run for an MT workload "
+                         "(multitask_clip | ofasys | qwen_val | ...)")
+    ap.add_argument("--planner", default=None,
+                    help="restrict --plan to one strategy")
+    ap.add_argument("--devices", type=int, default=16,
+                    help="cluster size for --plan")
     ap.add_argument("--out", default=None, help="write records JSON here")
     args = ap.parse_args()
+
+    if args.plan:
+        records = run_planner_dry(
+            args.plan,
+            planners=[args.planner] if args.planner else None,
+            n_devices=args.devices,
+        )
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(records, f, indent=1)
+            print(f"[dryrun] wrote {len(records)} records to {args.out}")
+        return
 
     records: List[Dict[str, Any]] = []
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

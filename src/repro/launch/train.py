@@ -37,6 +37,40 @@ from ..parallel.sharding import tree_batch_specs
 from .mesh import make_debug_mesh
 
 
+def plan_preview(
+    workload: str,
+    *,
+    planner: str = "spindle",
+    n_devices: int = 16,
+    island_size: int = 8,
+    verbose: bool = True,
+):
+    """Build an ExecutionPlan for a named MT workload via the PlannerPipeline.
+
+    The training driver uses this to print (and return) the wavefront plan a
+    multi-task run would execute on a real cluster — same registry/stages as
+    ``repro.core.plan`` and the simulator (DESIGN.md §9)."""
+    from ..core.pipeline import get_pipeline
+    from ..core.placement import ClusterSpec
+    from ..core.workloads import WORKLOADS
+
+    if workload not in WORKLOADS:
+        raise SystemExit(
+            f"[train] unknown --plan-workload {workload!r}; "
+            f"choose from {sorted(WORKLOADS)}"
+        )
+    graph = WORKLOADS[workload]()
+    cluster = ClusterSpec(n_devices=n_devices, island_size=island_size,
+                          mem_bytes=96e9)
+    p = get_pipeline(planner).plan(graph, cluster)
+    if verbose:
+        print(f"[plan] {workload} via {planner!r}: "
+              f"{len(p.waves())} waves / {len(p.steps)} steps, "
+              f"makespan {p.makespan*1e3:.1f} ms/iter "
+              f"(planned in {p.planning_seconds*1e3:.0f} ms)")
+    return p
+
+
 def make_train_state(model, optimizer, rng, mesh=None, rules=None):
     params = model.init(rng)
     opt_state = optimizer.init(params)
@@ -108,7 +142,12 @@ def train(
     mesh=None,
     compress_grads: bool = False,
     verbose: bool = True,
+    plan_workload: Optional[str] = None,
+    planner: str = "spindle",
 ) -> Dict[str, Any]:
+    mt_plan = None
+    if plan_workload:
+        mt_plan = plan_preview(plan_workload, planner=planner, verbose=verbose)
     cfg = get_arch(arch)
     if reduced_cfg:
         cfg = reduced(cfg)
@@ -188,6 +227,7 @@ def train(
         "wall_seconds": wall,
         "params": params,
         "history": history,
+        "mt_plan": mt_plan,
     }
 
 
@@ -202,6 +242,10 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-workload", default=None,
+                    help="also plan this MT workload via the PlannerPipeline")
+    ap.add_argument("--planner", default="spindle",
+                    help="planner strategy for --plan-workload")
     args = ap.parse_args()
     out = train(
         args.arch,
@@ -213,6 +257,8 @@ def main() -> None:
         ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every,
         seed=args.seed,
+        plan_workload=args.plan_workload,
+        planner=args.planner,
     )
     print(f"[train] done: loss {out['first_loss']:.4f} → {out['final_loss']:.4f} "
           f"in {out['wall_seconds']:.1f}s")

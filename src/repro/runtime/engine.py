@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -56,9 +57,18 @@ class WaveEngine:
     def __init__(self, model: MTModel, plan: ExecutionPlan, *,
                  distributed: bool = False):
         self.model = model
+        self.distributed = distributed and jax.device_count() > 1
+        # Step-closure cache, keyed by plan-id-independent step identity
+        # (instance, component, layer range, predecessor roles) — survives
+        # rebind() so replanned plans reuse closures for unchanged steps.
+        self._fn_cache: Dict[Tuple, Callable] = {}
+        self._bind(plan)
+
+    # ------------------------------------------------------------------
+    def _bind(self, plan: ExecutionPlan) -> None:
+        """Derive all plan-dependent lookup structures."""
         self.plan = plan
         self.mg = plan.meta_graph
-        self.distributed = distributed and jax.device_count() > 1
         self._preds = self.mg.predecessors()
         self._succs = {m: set() for m in self.mg.meta_ops}
         for src, dsts in self.mg.edges.items():
@@ -67,10 +77,33 @@ class WaveEngine:
         # meta → (instance, component, task string)
         self.meta_info: Dict[int, Tuple[str, str, str]] = {}
         for mid, m in self.mg.meta_ops.items():
-            inst, comp, _, task = model.op_info[m.op_ids[0]]
+            inst, comp, _, task = self.model.op_info[m.op_ids[0]]
             self.meta_info[mid] = (inst, comp, m.task)
         # flow-order task list (merged-batch concat order)
-        self.flow_order = [f.task for f in model.flows]
+        self.flow_order = [f.task for f in self.model.flows]
+
+    def rebind(self, plan: ExecutionPlan) -> Dict[str, int]:
+        """Swap in a replanned/cached plan for the SAME model.
+
+        Only the cheap plan-derived lookups are rebuilt; the per-step
+        closures in ``_fn_cache`` are keyed independently of MetaOp
+        numbering, so steps whose (instance, layer range, inputs) identity
+        is unchanged keep their closures even when the new plan slices or
+        renumbers MetaOps differently.  Returns ``closures_cached`` — the
+        number of closures retained for potential reuse; actual reuse
+        happens on the next ``loss_and_grads`` call (steps whose identity
+        changed rebuild then), observable as the cache size staying flat.
+        """
+        if plan.meta_graph is not self.mg:
+            for m in plan.meta_graph.meta_ops.values():
+                if m.op_ids[0] not in self.model.op_info:
+                    raise ValueError(
+                        "rebind: plan references operators unknown to this "
+                        "model — replan against the same task graph first"
+                    )
+        cached = len(self._fn_cache)
+        self._bind(plan)
+        return {"closures_cached": cached}
 
     # ------------------------------------------------------------------
     def param_device_groups(self) -> Dict[str, Tuple[int, ...]]:
@@ -82,13 +115,21 @@ class WaveEngine:
         first = m.op_ids.index(step.op_ids[0])
         return first, first + len(step.op_ids)
 
-    def _entry_inputs(self, mid: int, acts, batches):
-        """Gather (ordered pred ids, input arrays, entry closure args)."""
-        inst, comp, task = self.meta_info[mid]
-        c = self.model.components[comp]
-        preds = sorted(self._preds[mid])
-        pred_comps = [self.meta_info[p][1] for p in preds]
-        return preds, pred_comps, c
+    def _entry_preds(self, mid: int) -> Tuple[List[int], Tuple[Tuple[str, str], ...]]:
+        """Ordered predecessor ids + their (task, component) roles.
+
+        Ordering is by role (task, component) with id tiebreak, so the
+        positional layout — and therefore the cached closure — is stable
+        across replans that renumber MetaOps.
+        """
+        preds = sorted(
+            self._preds[mid],
+            key=lambda p: (self.meta_info[p][2], self.meta_info[p][1], p),
+        )
+        pred_info = tuple(
+            (self.meta_info[p][2], self.meta_info[p][1]) for p in preds
+        )
+        return preds, pred_info
 
     def _put(self, x, step: PlanStep):
         """Move an activation onto the step's device group (flow transmission)."""
@@ -129,20 +170,20 @@ class WaveEngine:
                 )
 
                 if lo == 0:
-                    preds, pred_comps, _ = self._entry_inputs(mid, acts, batches)
+                    preds, pred_info = self._entry_preds(mid)
                     pred_acts = [self._put(acts[p], step) for p in preds]
                     fn = self._make_entry_fn(
-                        mid, c, inst, preds, pred_comps, lo, hi,
-                        is_loss_step, batches,
+                        c, inst, pred_info, lo, hi, is_loss_step, task
                     )
-                    out, vjp = jax.vjp(fn, params[inst], *pred_acts)
+                    out, vjp = jax.vjp(
+                        partial(fn, batches), params[inst], *pred_acts
+                    )
                     rec = _StepRecord(step, mid, inst, "entry", preds, vjp,
                                       is_loss_step, out_like=out)
                 else:
                     h_in = self._put(acts[mid], step)
-                    fn = self._make_mid_fn(mid, c, inst, lo, hi, is_loss_step,
-                                           batches)
-                    out, vjp = jax.vjp(fn, params[inst], h_in)
+                    fn = self._make_mid_fn(c, inst, lo, hi, is_loss_step, task)
+                    out, vjp = jax.vjp(partial(fn, batches), params[inst], h_in)
                     rec = _StepRecord(step, mid, inst, "mid", [], vjp,
                                       is_loss_step, out_like=out)
                 records.append(rec)
@@ -207,27 +248,34 @@ class WaveEngine:
         ts = task_str.split("+")
         return sorted(ts, key=self.flow_order.index)
 
-    def _make_entry_fn(self, mid, c: ExecComponent, inst, preds, pred_comps,
-                       lo, hi, is_loss, batches):
-        model = self.model
-        _, _, task_str = self.meta_info[mid]
-        tasks = self._tasks_of(task_str)
-        preds_by_task: Dict[str, List[int]] = {t: [] for t in tasks}
-        for p in preds:
-            pt = self.meta_info[p][2]
-            preds_by_task.setdefault(pt, []).append(p)
+    def _make_entry_fn(self, c: ExecComponent, inst, pred_info, lo, hi,
+                       is_loss, task_str):
+        """Cached entry-step closure.
 
-        def fn(inst_params, *pred_acts):
-            by_id = dict(zip(preds, pred_acts))
+        The cache key carries no MetaOp ids — only roles (instance,
+        component, task set, predecessor (task, component) layout, layer
+        range) — and ``batches`` is supplied at call time, so the closure
+        survives rebind() across replans.
+        """
+        key = ("entry", inst, c.name, task_str, pred_info, lo, hi, is_loss)
+        cached = self._fn_cache.get(key)
+        if cached is not None:
+            return cached
+        model = self.model
+        tasks = self._tasks_of(task_str)
+        pos_by_task = {
+            t: [i for i, (pt, _) in enumerate(pred_info) if pt == t]
+            for t in tasks
+        }
+
+        def fn(batches, inst_params, *pred_acts):
             if c.kind == "contrastive":
-                inputs = {pc: by_id[p] for p, pc in zip(preds, pred_comps)}
+                inputs = {pc: a for (_, pc), a in zip(pred_info, pred_acts)}
                 return model.loss_op(inst_params, c, inputs, batches[tasks[0]])
             # entry per task (merged components concat the union batch)
             hs = []
             for t in tasks:
-                inputs = {
-                    self.meta_info[p][1]: by_id[p] for p in preds_by_task[t]
-                }
+                inputs = {pred_info[i][1]: pred_acts[i] for i in pos_by_task[t]}
                 hs.append(model.entry(inst_params, c, inputs, batches[t]))
             h = hs[0] if len(hs) == 1 else jnp.concatenate(hs, axis=0)
             for lp in inst_params["layers"][lo:hi]:
@@ -241,15 +289,18 @@ class WaveEngine:
                 )
             return h
 
+        self._fn_cache[key] = fn
         return fn
 
-    def _make_mid_fn(self, mid, c: ExecComponent, inst, lo, hi, is_loss,
-                     batches):
+    def _make_mid_fn(self, c: ExecComponent, inst, lo, hi, is_loss, task_str):
+        key = ("mid", inst, c.name, task_str, lo, hi, is_loss)
+        cached = self._fn_cache.get(key)
+        if cached is not None:
+            return cached
         model = self.model
-        _, _, task_str = self.meta_info[mid]
         tasks = self._tasks_of(task_str)
 
-        def fn(inst_params, h):
+        def fn(batches, inst_params, h):
             for lp in inst_params["layers"][lo:hi]:
                 h = model.apply_layer(c, lp, h)
             if is_loss:
@@ -259,6 +310,7 @@ class WaveEngine:
                 return model.loss_op(inst_params, c, {}, {"labels": labels}, h=h)
             return h
 
+        self._fn_cache[key] = fn
         return fn
 
     # ------------------------------------------------------------------

@@ -10,10 +10,12 @@ in this family executes correctly wave-by-wave.
 
 import random
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional extra: skip, never collection-error
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings
 
 from repro.core import ClusterSpec, plan

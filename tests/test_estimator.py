@@ -2,8 +2,10 @@
 
 import math
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")  # optional extra: skip, never collection-error
+import hypothesis.strategies as st
 from hypothesis import assume, given, settings
 
 from repro.core import (

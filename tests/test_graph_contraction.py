@@ -1,7 +1,9 @@
 """Graph builder + §3.1 contraction invariants (unit + property tests)."""
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")  # optional extra: skip, never collection-error
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (

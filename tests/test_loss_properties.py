@@ -1,9 +1,11 @@
 """Properties of the chunked vocab-parallel cross-entropy + mLSTM forms."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional extra: skip, never collection-error
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings
 
 from repro.models.layers import cross_entropy

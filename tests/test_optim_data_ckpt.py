@@ -2,11 +2,13 @@
 
 import os
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional extra: skip, never collection-error
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.ckpt import (

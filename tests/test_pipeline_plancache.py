@@ -1,0 +1,264 @@
+"""PlannerPipeline staging, strategy registry, plan cache + incremental replan."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    PlanCache,
+    ScalabilityEstimator,
+    V5E,
+    allocate_balanced,
+    assemble_plan,
+    available_planners,
+    check_schedule,
+    contract,
+    get_pipeline,
+    make_time_fn,
+    place,
+    plan,
+    schedule,
+    simulate_distmm_mt,
+    simulate_optimus,
+    simulate_sequential,
+    workload_signature,
+)
+from repro.core.graph import ComponentSpec, FlowSpec, GraphBuilder, OpWorkload
+from repro.core.workloads import multitask_clip
+
+CLUSTER = ClusterSpec(n_devices=16, island_size=8, mem_bytes=96e9)
+
+
+def _steps_key(p):
+    return [
+        (s.wave_index, s.level, s.meta_id, tuple(s.op_ids), s.devices,
+         s.dp, s.tp, round(s.start, 9), round(s.duration, 9))
+        for s in p.steps
+    ]
+
+
+# --------------------------------------------------------------------------
+# Pipeline ≡ legacy driver
+# --------------------------------------------------------------------------
+
+
+def test_pipeline_spindle_equals_legacy_sequence():
+    """The staged pipeline reproduces the monolithic contraction → schedule →
+    placement driver exactly on multitask_clip."""
+    g = multitask_clip(4)
+    mg = contract(g)
+    est = ScalabilityEstimator(
+        make_time_fn(V5E), CLUSTER.n_devices, profile_powers_of_two=True
+    )
+    sched = schedule(mg, est, CLUSTER.n_devices)
+    check_schedule(sched, mg, CLUSTER.n_devices)
+    placement = place(sched, mg, CLUSTER, strategy="spindle")
+    legacy = assemble_plan(mg, sched, placement, CLUSTER, 0.0)
+
+    piped = plan(multitask_clip(4), CLUSTER)
+    assert piped.planner == "spindle"
+    assert _steps_key(piped) == _steps_key(legacy)
+    assert piped.makespan == pytest.approx(legacy.makespan)
+    assert piped.c_star_total == pytest.approx(legacy.c_star_total)
+
+
+# --------------------------------------------------------------------------
+# Strategy registry
+# --------------------------------------------------------------------------
+
+
+def test_registry_exposes_all_planners():
+    assert set(available_planners()) >= {
+        "spindle", "sequential", "distmm_mt", "optimus"
+    }
+    with pytest.raises(ValueError, match="unknown planner"):
+        get_pipeline("megatron")
+
+
+@pytest.mark.parametrize("name", ["spindle", "sequential", "distmm_mt", "optimus"])
+def test_plan_accepts_planner_names(name):
+    p = plan(multitask_clip(3), CLUSTER, planner=name)
+    assert p.planner == name
+    assert p.steps and p.makespan > 0
+    # every MetaOp fully covered by the steps
+    covered = {}
+    for s in p.steps:
+        covered.setdefault(s.meta_id, []).extend(s.op_ids)
+    for mid, m in p.meta_graph.meta_ops.items():
+        assert sorted(covered[mid]) == sorted(m.op_ids), f"MetaOp {mid}"
+
+
+def test_simulator_shares_pipeline_code_path():
+    """The simulator's baselines are the registered pipelines — same makespans."""
+    g = multitask_clip(4)
+    for name, sim in [
+        ("sequential", simulate_sequential),
+        ("distmm_mt", simulate_distmm_mt),
+        ("optimus", simulate_optimus),
+    ]:
+        p = plan(multitask_clip(4), CLUSTER, planner=name)
+        res = sim(g, CLUSTER)
+        assert res.name == name
+        assert res.makespan == pytest.approx(p.makespan)
+
+
+def test_task_sequential_scheduler_supports_multituple_allocators():
+    """Swappable-stage contract: composing the bi-point Spindle allocator
+    with the DistMM task-sequential scheduler must still run every operator
+    exactly once, in order (op_offset threading)."""
+    from repro.core.pipeline import (
+        LocalityPlacementStage,
+        PlannerPipeline,
+        ProfiledEstimatorStage,
+        SpindleAllocatorStage,
+        TaskSequentialSchedulerStage,
+    )
+
+    pipe = PlannerPipeline(
+        name="distmm_bipoint",
+        estimator=ProfiledEstimatorStage(),
+        allocator=SpindleAllocatorStage(),  # up to 2 ASL-tuples per MetaOp
+        scheduler=TaskSequentialSchedulerStage(),
+        placement=LocalityPlacementStage("sequential"),
+    )
+    p = pipe.plan(multitask_clip(3), CLUSTER)
+    covered = {}
+    for s in p.steps:
+        covered.setdefault(s.meta_id, []).extend(s.op_ids)
+    for mid, m in p.meta_graph.meta_ops.items():
+        assert covered[mid] == list(m.op_ids), f"MetaOp {mid} slicing broken"
+
+
+def test_allocate_balanced_respects_capacity():
+    mg = contract(multitask_clip(5))
+    est = ScalabilityEstimator(make_time_fn(V5E), CLUSTER.n_devices)
+    for metas in mg.levels():
+        alloc = allocate_balanced(metas, est, CLUSTER.n_devices)
+        assert set(alloc.tuples) == {m.meta_id for m in metas}
+        for m in metas:
+            (t,) = alloc.tuples[m.meta_id]  # single tuple covering all ops
+            assert t.l == m.L and t.n >= 1
+
+
+# --------------------------------------------------------------------------
+# Workload signatures + plan cache
+# --------------------------------------------------------------------------
+
+
+def test_signature_deterministic_and_sensitive():
+    s1 = workload_signature(multitask_clip(4), CLUSTER)
+    s2 = workload_signature(multitask_clip(4), CLUSTER)
+    assert s1 == s2
+    assert s1 != workload_signature(multitask_clip(5), CLUSTER)
+    assert s1 != workload_signature(
+        multitask_clip(4), ClusterSpec(n_devices=32, island_size=8)
+    )
+    assert s1 != workload_signature(multitask_clip(4), CLUSTER, planner="optimus")
+
+
+def test_cache_keys_on_all_planner_inputs():
+    """Different time_fn / placement_strategy / profiling grid must never
+    alias a cached plan built under other inputs."""
+    cache = PlanCache()
+    g = multitask_clip(3)
+    p_fast = plan(g, CLUSTER, cache=cache)
+
+    slow_fn = lambda m, cfg: 10.0 * make_time_fn(V5E)(m, cfg)  # noqa: E731
+    p_slow = plan(multitask_clip(3), CLUSTER, cache=cache, time_fn=slow_fn)
+    assert p_slow is not p_fast
+    assert p_slow.makespan == pytest.approx(10.0 * p_fast.makespan, rel=1e-6)
+
+    p_seqpl = plan(multitask_clip(3), CLUSTER, cache=cache,
+                   placement_strategy="sequential")
+    assert p_seqpl is not p_fast
+    assert cache.stats.hits == 0
+
+
+def test_cache_exact_hit_and_determinism():
+    cache = PlanCache()
+    p1 = plan(multitask_clip(4), CLUSTER, cache=cache)
+    p2 = plan(multitask_clip(4), CLUSTER, cache=cache)
+    assert p2 is p1  # exact signature hit returns the stored plan
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+
+    # same signature → identical plan, even across independent caches
+    p3 = plan(multitask_clip(4), CLUSTER, cache=PlanCache())
+    a, b = json.loads(p1.to_json()), json.loads(p3.to_json())
+    a.pop("planning_seconds"), b.pop("planning_seconds")
+    assert a == b
+
+
+def test_incremental_replan_correct_and_close_to_full():
+    cache = PlanCache()
+    plan(multitask_clip(4), CLUSTER, cache=cache)
+    for k in (6, 3):  # grow, then shrink, the active task set
+        inc = plan(multitask_clip(k), CLUSTER, cache=cache)
+        check_schedule(inc.schedule, inc.meta_graph, CLUSTER.n_devices)
+        full = plan(multitask_clip(k), CLUSTER)
+        assert inc.makespan <= full.makespan * 1.05
+        assert _steps_key(inc)  # real executable steps
+    assert cache.stats.incremental == 2
+    assert cache.stats.fallbacks == 0
+
+
+def _one_task_graph(loss_dim: int):
+    """Tower (identical across variants) feeding a loss module of ``loss_dim``."""
+    def tower_wl(batch, seq):
+        return OpWorkload(flops=1e12, bytes_hbm=1e9, param_bytes=1e8,
+                          act_bytes=1e7, tp_comm_bytes=1e6)
+
+    def loss_wl(batch, seq):
+        return OpWorkload(flops=1e9 * loss_dim, bytes_hbm=1e8,
+                          param_bytes=1e6, act_bytes=1e6)
+
+    gb = GraphBuilder([
+        ComponentSpec("tower", 8, "xf[tower]", tower_wl, max_tp=4),
+        ComponentSpec("loss", 1, f"loss[{loss_dim}]", loss_wl, max_tp=1),
+    ])
+    gb.add_flow(FlowSpec(task="t1", branches=[["tower"]], join=["loss"],
+                         batch_size=8, seq_lens={"tower": 64}))
+    return gb.build()
+
+
+def test_incremental_reuses_unchanged_metalevel():
+    """A shift touching only the join level reuses the tower level's cached
+    allocation + waves (only the affected MetaLevel re-runs)."""
+    cache = PlanCache()
+    base = plan(_one_task_graph(64), CLUSTER, cache=cache)
+    shifted = plan(_one_task_graph(128), CLUSTER, cache=cache)
+    assert cache.stats.incremental == 1
+    assert cache.stats.levels_reused == 1  # the tower level
+    assert cache.stats.levels_replanned == 1  # the loss level
+    check_schedule(shifted.schedule, shifted.meta_graph, CLUSTER.n_devices)
+    full = plan(_one_task_graph(128), CLUSTER)
+    assert shifted.makespan == pytest.approx(full.makespan, rel=0.05)
+
+
+# --------------------------------------------------------------------------
+# Engine rebind
+# --------------------------------------------------------------------------
+
+
+def test_engine_rebind_keeps_closures_and_numerics():
+    from repro.runtime import WaveEngine, tiny_multitask_clip
+
+    model, batches = tiny_multitask_clip(n_tasks=3)
+    cluster = ClusterSpec(n_devices=8, island_size=4)
+    cache = PlanCache()
+    params = model.init(jax.random.PRNGKey(0))
+
+    eng = WaveEngine(model, plan(model.graph, cluster, cache=cache))
+    l1, g1 = eng.loss_and_grads(params, batches)
+    n_closures = len(eng._fn_cache)
+    assert n_closures > 0
+
+    stats = eng.rebind(plan(model.graph, cluster, cache=cache))
+    assert stats["closures_cached"] == n_closures
+    l2, g2 = eng.loss_and_grads(params, batches)
+    assert len(eng._fn_cache) == n_closures  # nothing rebuilt
+    assert float(jnp.abs(l1 - l2)) < 1e-6
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-6
