@@ -6,10 +6,16 @@ compare four policies on a task-count trajectory:
 
   * ``replan``      — Spindle re-plans from scratch at every shift (the
                       paper's hook),
-  * ``incremental`` — Spindle replans through the PlanCache: identical
-                      workloads hit the cache outright, shifted workloads
-                      reuse cached scaling curves and any unchanged
-                      MetaLevels (repro.core.plancache),
+  * ``incremental`` — Spindle replans through a :class:`SpindleSession`:
+                      each phase shift arrives as a burst of TaskArrived/
+                      TaskCompleted events driven through
+                      ``session.signal_all`` — the real production path —
+                      which coalesces the burst into one replan; unchanged
+                      phases generate no events and skip planning outright,
+                      shifted workloads reuse cached plans (exact
+                      signature hits), cached scaling curves, warm-started
+                      MPSP brackets, and any unchanged MetaLevels
+                      (repro.core.plancache),
   * ``stale``       — keep the plan built for the initial task set; removed
                       tasks leave holes, added tasks run sequentially after,
   * ``sequential``  — the workload-unaware baseline throughout.
@@ -25,64 +31,89 @@ from typing import Dict, List
 
 from repro.core import (
     ClusterSpec,
-    PlanCache,
     plan,
     simulate_plan,
     simulate_sequential,
 )
 from repro.core.workloads import multitask_clip
+from repro.launch.events import TaskArrived, TaskCompleted
+from repro.session import SessionConfig, SpindleSession
 
 TRAJECTORY = [4, 6, 6, 3, 5, 2]  # active task count per phase
+SMOKE_TRAJECTORY = [3, 4, 2]  # CI smoke: same schema, smaller graphs
 ITERS_PER_PHASE = 25
 
 
-def run() -> List[Dict]:
+def run(smoke: bool = False) -> List[Dict]:
+    trajectory = SMOKE_TRAJECTORY if smoke else TRAJECTORY
     cluster = ClusterSpec(n_devices=16, island_size=8, mem_bytes=96e9)
     rows = []
 
-    # replan policy: full plan per phase
+    # replan policy: full plan per phase (graph construction INSIDE the
+    # timer, matching the session path which also rebuilds the graph —
+    # both measure "cost to get a new plan when the workload shifts")
     t_replan, replan_overhead = 0.0, 0.0
-    for k in TRAJECTORY:
-        g = multitask_clip(k)
+    for k in trajectory:
         t0 = time.perf_counter()
-        p = plan(g, cluster)
+        p = plan(multitask_clip(k), cluster)
         replan_overhead += time.perf_counter() - t0
         t_replan += simulate_plan(p, cluster).makespan * ITERS_PER_PHASE
 
-    # incremental policy: plan through the PlanCache (exact hits + per-level
-    # reuse + memoized scaling curves); correctness falls back to full replan
-    cache = PlanCache()
-    t_inc, inc_overhead = 0.0, 0.0
-    for k in TRAJECTORY:
-        g = multitask_clip(k)
+    # incremental policy: a plan-only session whose shift sequence arrives
+    # as TaskArrived/TaskCompleted event bursts — each phase shift goes
+    # through session.signal_all, which coalesces the burst into ONE replan
+    # through the session's PlanCache (exact hits + per-level reuse +
+    # memoized curves + warm-started bisection); correctness falls back to
+    # full replan
+    session = SpindleSession(
+        SessionConfig(cluster=cluster),
+        graph_factory=lambda tasks: multitask_clip(len(tasks)),
+        tasks=tuple(f"task{i}" for i in range(trajectory[0])),
+    )
+    t0 = time.perf_counter()
+    p = session.plan()
+    inc_overhead = time.perf_counter() - t0
+    t_inc = simulate_plan(p, cluster).makespan * ITERS_PER_PHASE
+    active = trajectory[0]
+    for k in trajectory[1:]:
+        events = []
+        while active < k:
+            events.append(TaskArrived(f"task{active}"))
+            active += 1
+        while active > k:
+            active -= 1
+            events.append(TaskCompleted(f"task{active}"))
         t0 = time.perf_counter()
-        p = plan(g, cluster, cache=cache)
+        if events:
+            p = session.signal_all(events)
         inc_overhead += time.perf_counter() - t0
         t_inc += simulate_plan(p, cluster).makespan * ITERS_PER_PHASE
+    cache = session.cache
+    inc_replans = len(session.replans) + 1  # + the initial plan
 
     # stale policy: the first phase's per-task time, applied to every phase
     # (removed tasks leave idle allocations; added tasks run sequentially)
-    g0 = multitask_clip(TRAJECTORY[0])
+    g0 = multitask_clip(trajectory[0])
     per_iter0 = simulate_plan(plan(g0, cluster), cluster).makespan
     t_stale = 0.0
-    for k in TRAJECTORY:
+    for k in trajectory:
         extra = 0.0
-        if k > TRAJECTORY[0]:  # new tasks appended sequentially
+        if k > trajectory[0]:  # new tasks appended sequentially
             g_extra = multitask_clip(k)
             seq = simulate_sequential(g_extra, cluster)
-            extra = seq.makespan * (k - TRAJECTORY[0]) / k
+            extra = seq.makespan * (k - trajectory[0]) / k
         t_stale += (per_iter0 + extra) * ITERS_PER_PHASE
 
     # sequential baseline
     t_seq = 0.0
-    for k in TRAJECTORY:
+    for k in trajectory:
         res = simulate_sequential(multitask_clip(k), cluster)
         t_seq += res.makespan * ITERS_PER_PHASE
 
-    n = len(TRAJECTORY)
+    n = len(trajectory)
     rows.append({
         "bench": "dynamicity",
-        "trajectory": TRAJECTORY,
+        "trajectory": trajectory,
         "replan_total_s": t_replan,
         "incremental_total_s": t_inc,
         "stale_total_s": t_stale,
@@ -91,6 +122,8 @@ def run() -> List[Dict]:
         "incremental_overhead_s": inc_overhead,
         "replan_per_shift_s": replan_overhead / n,
         "incremental_per_shift_s": inc_overhead / n,
+        "incremental_replans": inc_replans,
+        "incremental_per_replan_s": inc_overhead / inc_replans,
         "cache": cache.stats.as_dict(),
         "speedup_vs_stale": t_stale / t_replan,
         "speedup_vs_sequential": t_seq / t_replan,
@@ -104,9 +137,10 @@ def main(rows=None) -> None:
     print(f"  re-plan each shift : {r['replan_total_s']:8.2f} s "
           f"(+{r['replan_per_shift_s']*1e3:.1f} ms planner/shift)")
     print(f"  incremental (cache): {r['incremental_total_s']:8.2f} s "
-          f"(+{r['incremental_per_shift_s']*1e3:.1f} ms planner/shift, "
+          f"(+{r['incremental_per_replan_s']*1e3:.1f} ms planner/replan "
+          f"over {r['incremental_replans']} replans, "
           f"hit rate {r['cache']['hit_rate']:.0%}, "
-          f"{r['cache']['levels_reused']} levels reused)")
+          f"{r['cache']['warm_start_hits']} warm starts)")
     print(f"  stale initial plan : {r['stale_total_s']:8.2f} s "
           f"({r['speedup_vs_stale']:.2f}x slower)")
     print(f"  sequential baseline: {r['sequential_total_s']:8.2f} s "

@@ -20,14 +20,20 @@ from repro.core.plan import plan as mkplan
 from repro.core.workloads import multitask_clip, ofasys, qwen_val
 
 
-def run() -> List[Dict]:
-    rows = []
-    for name, maker, k in [
+def run(smoke: bool = False) -> List[Dict]:
+    """``smoke=True`` shrinks the grid (CI smoke job) — every row keeps the
+    full metric schema so the BENCH_planner_cost.json key diff still holds."""
+    grid = [
         ("multitask_clip", multitask_clip, 10),
         ("ofasys", ofasys, 7),
         ("qwen_val", qwen_val, 3),
-    ]:
-        for n in (16, 32, 64, 128):
+    ]
+    sizes = (16, 32, 64, 128)
+    if smoke:
+        grid, sizes = [("multitask_clip", multitask_clip, 6)], (16, 32)
+    rows = []
+    for name, maker, k in grid:
+        for n in sizes:
             cluster = ClusterSpec(n_devices=n, island_size=8, mem_bytes=96e9)
             g = maker(k)
             t0 = time.perf_counter()

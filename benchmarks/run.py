@@ -1,19 +1,27 @@
 """Benchmark driver: one module per paper table/figure + the roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json out.json]
+    PYTHONPATH=src python -m benchmarks.run --smoke --check-keys   # CI job
 
 Besides the aggregate ``--json`` dump, every bench writes a
 machine-readable ``BENCH_<name>.json`` at the repo root
 (schema: ``{"bench": ..., "rows": [...], "seconds": ...}``) so the perf
-trajectory is tracked across PRs.
+trajectory is tracked across PRs.  ``--smoke`` runs the quick subset
+(dynamicity + planner_cost) on reduced grids, writing its BENCH files to a
+temp dir so the committed trajectories are never clobbered;
+``--check-keys`` diffs the
+regenerated rows' metric keys against the committed trajectory files and
+fails if any committed metric went missing.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import pathlib
 import sys
+import tempfile
 import time
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -42,9 +50,14 @@ BENCHES = {
 }
 
 
-def write_bench_json(name: str, rows, seconds: float) -> pathlib.Path:
-    """Write the per-bench perf-trajectory record at the repo root."""
-    out = REPO_ROOT / f"BENCH_{name}.json"
+#: quick subset exercised by the CI benchmark smoke job
+SMOKE_BENCHES = ("dynamicity", "planner_cost")
+
+
+def write_bench_json(name: str, rows, seconds: float,
+                     out_dir: pathlib.Path = REPO_ROOT) -> pathlib.Path:
+    """Write the per-bench perf-trajectory record (repo root by default)."""
+    out = out_dir / f"BENCH_{name}.json"
     with open(out, "w") as f:
         json.dump(
             {"bench": name, "rows": rows, "seconds": seconds},
@@ -53,28 +66,90 @@ def write_bench_json(name: str, rows, seconds: float) -> pathlib.Path:
     return out
 
 
+def metric_keys(rows) -> set:
+    """Union of row metric keys, with one level of dotted nesting
+    (``cache.hit_rate``) so nested stat dicts are diffable too."""
+    keys = set()
+    for r in rows:
+        if not isinstance(r, dict):
+            continue
+        for k, v in r.items():
+            keys.add(k)
+            if isinstance(v, dict):
+                keys.update(f"{k}.{kk}" for kk in v)
+    return keys
+
+
+def committed_keys(name: str) -> set:
+    """Metric keys of the committed BENCH_<name>.json (empty if absent)."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    if not path.exists():
+        return set()
+    try:
+        with open(path) as f:
+            return metric_keys(json.load(f).get("rows", []))
+    except (json.JSONDecodeError, OSError):
+        return set()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
     ap.add_argument("--json", default="bench_results.json")
     ap.add_argument("--dryrun-records", default="dryrun_records.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick subset (dynamicity + planner_cost) on "
+                         "reduced grids")
+    ap.add_argument("--check-keys", action="store_true",
+                    help="fail when regenerated rows drop metric keys "
+                         "present in the committed BENCH_<name>.json")
     args = ap.parse_args()
 
     all_rows = []
-    names = [args.only] if args.only else list(BENCHES)
+    if args.only:
+        names = [args.only]
+    elif args.smoke:
+        names = list(SMOKE_BENCHES)
+    else:
+        names = list(BENCHES)
+    # smoke rows are reduced-grid: never clobber the committed trajectory
+    # files — the key diff still runs against the committed baselines
+    out_dir = (
+        pathlib.Path(tempfile.mkdtemp(prefix="bench_smoke_"))
+        if args.smoke else REPO_ROOT
+    )
+    missing: dict = {}
     for name in names:
         mod = BENCHES[name]
+        baseline = committed_keys(name) if args.check_keys else set()
         print(f"\n=== {name} " + "=" * (60 - len(name)))
         t0 = time.perf_counter()
-        rows = mod.run()  # single execution; main() only renders the rows
+        kwargs = (
+            {"smoke": True}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters
+            else {}
+        )
+        rows = mod.run(**kwargs)  # single execution; main() renders the rows
         seconds = time.perf_counter() - t0
         mod.main(rows)
         for r in rows:
             all_rows.append(r)
-        out = write_bench_json(name, rows, seconds)
-        print(f"--- {name} done in {seconds:.1f}s -> {out.name}")
+        out = write_bench_json(name, rows, seconds, out_dir)
+        print(f"--- {name} done in {seconds:.1f}s -> {out}")
+        if args.check_keys:
+            lost = baseline - metric_keys(rows)
+            if lost:
+                missing[name] = sorted(lost)
 
-    if not args.only:
+    if args.check_keys:
+        if missing:
+            for name, lost in missing.items():
+                print(f"[benchmarks] BENCH_{name}.json lost metrics: {lost}",
+                      file=sys.stderr)
+            raise SystemExit(1)
+        print(f"[benchmarks] key check OK for {', '.join(names)}")
+
+    if not args.only and not args.smoke:
         print("\n=== roofline " + "=" * 52)
         rrows = roofline.run(args.dryrun_records)
         if rrows:

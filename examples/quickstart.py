@@ -1,7 +1,11 @@
 """Quickstart: train a ~100M-parameter LM for a few hundred steps on CPU.
 
 Exercises the full public path: arch registry → reduced-but-real model →
-synthetic data → AdamW → checkpointing → loss curve.
+synthetic data → AdamW → checkpointing → loss curve — plus the planning
+entry point: a plan-only :class:`repro.session.SpindleSession` previews
+the wavefront plan a multi-task workload would execute (the same lifecycle
+API `train.py --plan-workload`, `dryrun.py --plan`, and the full
+MT demo in ``wavefront_mt_training.py`` are shells over; DESIGN.md §10).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,9 +17,17 @@ sys.path.insert(0, "src")
 
 from repro.config import get_arch, reduced
 from repro.launch.train import train
+from repro.session import SessionConfig, SpindleSession
 
 
 def main() -> None:
+    # the planning side, in three lines: a plan-only session for a named
+    # MT workload (plan → cache → replan lives behind the same object)
+    session = SpindleSession(SessionConfig(workload="multitask_clip"))
+    p = session.plan()
+    print(f"multitask_clip plan: {len(p.waves())} waves / {len(p.steps)} "
+          f"steps, makespan {p.makespan*1e3:.1f} ms/iter")
+
     # a ~100M-class config: qwen3-0.6b reduced in depth/width but real vocab
     base = get_arch("qwen3-0.6b")
     print(f"base arch: {base.name} ({base.n_params()/1e6:.0f}M params)")

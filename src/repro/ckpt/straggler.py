@@ -2,12 +2,16 @@
 
 At 1000+ nodes, slow hosts (thermal throttling, failing HBM, noisy
 neighbors) stretch every synchronous step.  The detector keeps a ring
-buffer of per-host step times, flags hosts whose median exceeds the cluster
-median by ``threshold``×, and invokes a callback — in this framework the
-callback re-runs the Spindle planner with the degraded device set (the
-paper's "plan is regenerated when the input workload changes" hook, §5.5),
-or excludes the host and triggers an elastic re-mesh restore
-(:mod:`repro.ckpt.remesh`).
+buffer of per-host step times and flags hosts whose median exceeds the
+cluster median by ``threshold``×.  Consumers no longer poll it inline:
+:class:`repro.launch.events.StragglerEventSource` wraps the detector as a
+session event source, so a :class:`repro.session.SpindleSession` drains it
+each step and a :class:`~repro.launch.events.StragglerDetected` event
+re-runs the Spindle planner through the PlanCache (the paper's "plan is
+regenerated when the input workload changes" hook, §5.5) — optionally
+against a shrunken cluster — or triggers an elastic re-mesh restore
+(:mod:`repro.ckpt.remesh`).  The ``on_straggler`` callback remains for
+callers that want the raw trigger.
 """
 
 from __future__ import annotations

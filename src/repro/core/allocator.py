@@ -82,8 +82,17 @@ def solve_continuous(
     *,
     tol: float = 1e-6,
     max_iter: int = 200,
+    c_hint: Optional[float] = None,
 ) -> Tuple[float, Dict[int, float]]:
-    """Bisection on eq. (9): find C̃* with Σ_m T_m⁻¹(C̃*/L_m) = N."""
+    """Bisection on eq. (9): find C̃* with Σ_m T_m⁻¹(C̃*/L_m) = N.
+
+    ``c_hint`` warm-starts the bracket from a previously solved C̃* (the
+    incremental-replan changed-level path hands in the cached level's
+    optimum): the initial bracket is a tight window around the hint instead
+    of the serial/maximally-parallel bounds, and the validity-expansion
+    loops below still guarantee g(c_hi) ≤ N ≤ g(c_lo), so a stale hint
+    costs a few extra doublings rather than correctness.
+    """
     if not metas:
         return 0.0, {}
 
@@ -96,12 +105,15 @@ def solve_continuous(
             total += n
         return total
 
-    # Bracket: serial lower bound on speed (everything on 1 device, g small)
-    # vs. everything maximally parallel (g large).
-    c_hi = sum(curves[m.meta_id].estimate(1) * m.L for m in metas)
-    c_lo = max(curves[m.meta_id].estimate(n_devices) * m.L for m in metas) / max(
-        len(metas), 1
-    )
+    if c_hint is not None and c_hint > 0 and math.isfinite(c_hint):
+        c_lo, c_hi = 0.5 * c_hint, 2.0 * c_hint
+    else:
+        # Bracket: serial lower bound on speed (everything on 1 device, g
+        # small) vs. everything maximally parallel (g large).
+        c_hi = sum(curves[m.meta_id].estimate(1) * m.L for m in metas)
+        c_lo = max(
+            curves[m.meta_id].estimate(n_devices) * m.L for m in metas
+        ) / max(len(metas), 1)
     c_lo = max(c_lo, 1e-12)
     # Ensure bracket validity: g(c_hi) <= N <= g(c_lo).
     for _ in range(80):
@@ -224,10 +236,12 @@ def allocate_level(
     metas: Sequence[MetaOp],
     estimator: ScalabilityEstimator,
     n_devices: int,
+    *,
+    c_hint: Optional[float] = None,
 ) -> LevelAllocation:
-    """Full §3.3 pipeline for one MetaLevel."""
+    """Full §3.3 pipeline for one MetaLevel (``c_hint`` warm-starts eq. 9)."""
     curves = {m.meta_id: estimator.curve(m) for m in metas}
-    c_star, n_star = solve_continuous(metas, curves, n_devices)
+    c_star, n_star = solve_continuous(metas, curves, n_devices, c_hint=c_hint)
     tuples: Dict[int, List[ASLTuple]] = {}
     for m in metas:
         tuples[m.meta_id] = discretize(

@@ -128,6 +128,12 @@ class SpindleAllocatorStage:
     def allocate(self, metas, estimator, n_devices) -> LevelAllocation:
         return allocate_level(metas, estimator, n_devices)
 
+    def allocate_warm(self, metas, estimator, n_devices,
+                      c_hint: float) -> LevelAllocation:
+        """Changed-level replan path: warm-start the MPSP bisection bracket
+        from a cached C̃* (the previous plan's optimum for this level)."""
+        return allocate_level(metas, estimator, n_devices, c_hint=c_hint)
+
 
 class BalancedAllocatorStage:
     """Single-tuple balanced shares (DistMM-MT-style intra-task allocation)."""
@@ -348,14 +354,23 @@ class TaskParallelSchedulerStage:
 class BlockPlacementStage:
     """Placement onto the fixed per-task device blocks chosen by the optimus
     scheduler; falls back to locality placement when no blocks were emitted
-    (e.g. the more-tasks-than-devices serial degenerate case)."""
+    (e.g. the more-tasks-than-devices serial degenerate case).
+
+    Per-device memory high-water is tracked the same way the locality
+    placer does (params + optimizer states + activations accumulated per
+    entry), so the baseline's OOM behavior is directly comparable to the
+    spindle placement path in Fig. 10-style ablations.
+    """
 
     def run(self, ctx, sched, mg) -> Placement:
+        from .placement import _entry_memory
+
         blocks = sched.extras.get("task_blocks")
         if blocks is None:
             return place(sched, mg, ctx.cluster, strategy="sequential")
         task_of_meta = sched.extras["task_of_meta"]
         pl = Placement()
+        mem = {d: 0.0 for d in range(ctx.cluster.n_devices)}
         for w in sched.waves:
             for e in w.entries:
                 start, _size = blocks[task_of_meta[e.meta_id]]
@@ -363,6 +378,10 @@ class BlockPlacementStage:
                 pl.entries[(w.index, e.meta_id)] = PlacedEntry(
                     w.index, e.meta_id, devs
                 )
+                per_dev = _entry_memory(mg.meta_ops[e.meta_id], e)
+                for d in devs:
+                    mem[d] += per_dev
+        pl.mem_high_water = mem
         return pl
 
 

@@ -123,6 +123,8 @@ class PlanCacheStats:
     incremental: int = 0  # plans assembled incrementally
     levels_reused: int = 0
     levels_replanned: int = 0
+    warm_start_hits: int = 0  # changed levels whose MPSP bisection was
+    # warm-started from the cached C̃* bracket
     fallbacks: int = 0  # incremental merge failed validation → full replan
 
     @property
@@ -141,6 +143,7 @@ class PlanCacheStats:
             "incremental": self.incremental,
             "levels_reused": self.levels_reused,
             "levels_replanned": self.levels_replanned,
+            "warm_start_hits": self.warm_start_hits,
             "fallbacks": self.fallbacks,
             "hit_rate": self.hit_rate,
         }
@@ -264,6 +267,32 @@ class PlanCache:
         self._entries.move_to_end(plan.signature)
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)
+
+    def get_or_plan(
+        self,
+        graph: TaskGraph,
+        cluster: ClusterSpec,
+        *,
+        planner: str = "spindle",
+        time_fn: Optional[TimeFn] = None,
+        hw: HardwareSpec = V5E,
+        placement_strategy: str = "spindle",
+        profile_powers_of_two: bool = True,
+    ) -> ExecutionPlan:
+        """Plan ``graph`` through this cache: exact signature hit → stored
+        plan; near miss → incremental replan; otherwise a full plan is built
+        and stored.  The method form of :func:`plan_cached` — the session
+        layer's single planning entry point."""
+        return plan_cached(
+            graph,
+            cluster,
+            self,
+            planner=planner,
+            time_fn=time_fn,
+            hw=hw,
+            placement_strategy=placement_strategy,
+            profile_powers_of_two=profile_powers_of_two,
+        )
 
 
 # --------------------------------------------------------------------------
@@ -397,7 +426,7 @@ def _incremental_plan(
 
     sched = Schedule()
     t_now, widx = 0.0, 0
-    reused = replanned = 0
+    reused = replanned = warm_hits = 0
     for i, metas in enumerate(mg.levels()):
         lsig = level_signature(metas)
         if i < len(base.level_sigs) and lsig == base.level_sigs[i]:
@@ -418,7 +447,20 @@ def _incremental_plan(
             widx += len(waves)
             reused += 1
         else:
-            alloc = pipe.allocator.allocate(metas, est, N)
+            # Changed level: warm-start the MPSP bisection from the cached
+            # level's C̃* when the allocator supports it (sub-level reuse —
+            # task-count shifts change every level's membership, but the
+            # optimum moves little, so the cached bracket converges fast).
+            warm = getattr(pipe.allocator, "allocate_warm", None)
+            c_hint = (
+                base.level_allocs[i].c_star
+                if i < len(base.level_allocs) else None
+            )
+            if warm is not None and c_hint is not None and c_hint > 0:
+                alloc = warm(metas, est, N, c_hint)
+                warm_hits += 1
+            else:
+                alloc = pipe.allocator.allocate(metas, est, N)
             sched.level_allocs.append(alloc)
             sched.c_star_total += alloc.c_star
             waves, t_now = schedule_level(metas, alloc, est, N, t_now, i, widx)
@@ -437,6 +479,7 @@ def _incremental_plan(
         cache.stats.incremental += 1
         cache.stats.levels_reused += reused
         cache.stats.levels_replanned += replanned
+        cache.stats.warm_start_hits += warm_hits
     except (AssertionError, RuntimeError, KeyError):
         # Correctness fallback: any merge inconsistency voids the reuse.
         cache.stats.fallbacks += 1

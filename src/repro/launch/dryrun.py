@@ -10,10 +10,16 @@ mesh, every assigned architecture × its applicable input shapes must
 HBM and ``cost_analysis()`` + the optimized-HLO collective parse feed the
 roofline table (EXPERIMENTS.md §Roofline).
 
+``--plan WORKLOAD`` runs the planning analogue instead: every requested
+planner strategy builds an ExecutionPlan for the named MT workload through
+a plan-only :class:`repro.session.SpindleSession` (the same lifecycle
+surface the training drivers and benchmarks use; see DESIGN.md §10).
+
 Usage::
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --out dryrun.json
+    PYTHONPATH=src python -m repro.launch.dryrun --plan multitask_clip --devices 32
 """
 
 import argparse
@@ -219,24 +225,33 @@ def run_all(*, multi_pod: bool = False, archs: Optional[List[str]] = None,
 def run_planner_dry(workload: str, *, planners: Optional[List[str]] = None,
                     n_devices: int = 16,
                     verbose: bool = True) -> List[Dict[str, Any]]:
-    """Planner dry-run: build ExecutionPlans for ``workload`` through every
-    requested PlannerPipeline strategy (no compilation/hardware involved) and
-    record plan shape + planning cost — the planning analogue of the compile
-    dry-run below."""
-    from ..core.pipeline import available_planners, get_pipeline
+    """Planner dry-run: plan ``workload`` through a plan-only
+    :class:`repro.session.SpindleSession` per requested strategy (no
+    compilation/hardware involved) and record plan shape + planning cost —
+    the planning analogue of the compile dry-run below, on the same session
+    code path the training drivers use."""
+    from ..core.pipeline import available_planners
     from ..core.placement import ClusterSpec
     from ..core.workloads import WORKLOADS
+    from ..session import SessionConfig, SpindleSession
 
+    # validate names up front; genuine planner failures propagate loudly
     if workload not in WORKLOADS:
         raise SystemExit(
             f"[dryrun] unknown workload {workload!r}; "
             f"choose from {sorted(WORKLOADS)}"
         )
-    graph = WORKLOADS[workload]()
+    for name in planners or ():
+        if name not in available_planners():
+            raise SystemExit(
+                f"[dryrun] unknown planner {name!r}; "
+                f"choose from {available_planners()}"
+            )
     cluster = ClusterSpec(n_devices=n_devices, island_size=8, mem_bytes=96e9)
     records = []
     for name in planners or available_planners():
-        p = get_pipeline(name).plan(graph, cluster)
+        cfg = SessionConfig(workload=workload, planner=name, cluster=cluster)
+        p = SpindleSession(cfg).plan()
         rec = {
             "workload": workload,
             "planner": name,

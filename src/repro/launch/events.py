@@ -1,0 +1,117 @@
+"""Runtime event taxonomy + event sources for the session lifecycle.
+
+The paper's §5.5 dynamicity hook — "the plan is regenerated when the input
+workload changes" — needs the *changes* to arrive as first-class values the
+session can dispatch on, not as ad-hoc inline checks scattered through the
+training drivers.  This module defines them:
+
+  * :class:`TaskArrived` / :class:`TaskCompleted` — the multi-task workload
+    shifted (a task joined or finished); the session replans through the
+    :class:`repro.core.plancache.PlanCache` and rebinds the engine.
+  * :class:`StragglerDetected` — slow hosts were flagged; the session
+    replans (optionally against a shrunken cluster) without restarting.
+
+Event *sources* are pollable producers the session drains once per training
+step (:class:`EventSource` protocol).  :class:`StragglerEventSource` wraps
+:class:`repro.ckpt.straggler.StragglerDetector` so straggler detection is
+no longer an inline consumer inside ``launch/train.py`` — the driver only
+records step times; the session polls and reacts.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Protocol, Tuple, runtime_checkable
+
+from ..ckpt.straggler import StragglerDetector
+
+
+# --------------------------------------------------------------------------
+# Event taxonomy
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Event:
+    """Base class for session lifecycle events; ``kind`` keys replan policy."""
+
+    kind = "event"
+
+
+@dataclass(frozen=True)
+class TaskArrived(Event):
+    """A new task joined the multi-task workload mid-run."""
+
+    task: str
+    kind = "task_arrived"
+
+
+@dataclass(frozen=True)
+class TaskCompleted(Event):
+    """A task finished (converged / drained) and leaves the workload."""
+
+    task: str
+    kind = "task_completed"
+
+
+@dataclass(frozen=True)
+class StragglerDetected(Event):
+    """Hosts whose median step time exceeds the cluster median threshold."""
+
+    hosts: Tuple[int, ...]
+    kind = "straggler"
+
+
+EVENT_KINDS = ("task_arrived", "task_completed", "straggler")
+
+
+# --------------------------------------------------------------------------
+# Event sources
+# --------------------------------------------------------------------------
+
+
+@runtime_checkable
+class EventSource(Protocol):
+    """A pollable producer of events, drained once per session step."""
+
+    def poll(self) -> List[Event]:
+        """Return (and clear) any events that fired since the last poll."""
+
+
+@dataclass
+class StragglerEventSource:
+    """Straggler detection as a session event source.
+
+    Producers (the training loop, or the session itself via
+    ``record``) feed per-host step times; ``poll`` emits one
+    :class:`StragglerDetected` per *change* in the flagged host set —
+    a host stays flagged across consecutive polls without refiring, so
+    one degradation triggers one replan, not one per step.  The event
+    always carries the FULL currently-flagged set; recovery (the set
+    emptying again) fires ``StragglerDetected(())`` so consumers can
+    restore a degraded cluster.
+    """
+
+    detector: StragglerDetector
+    _last_flagged: Tuple[int, ...] = ()
+
+    def record(self, host: int, step_seconds: float) -> None:
+        self.detector.record(host, step_seconds)
+
+    def poll(self) -> List[Event]:
+        hosts = tuple(self.detector.stragglers())
+        if hosts != self._last_flagged:
+            self._last_flagged = hosts
+            return [StragglerDetected(hosts)]
+        return []
+
+
+@dataclass
+class ScriptedEventSource:
+    """Deterministic event source for tests/benchmarks: a fixed queue,
+    drained one event per poll."""
+
+    events: List[Event]
+
+    def poll(self) -> List[Event]:
+        return [self.events.pop(0)] if self.events else []

@@ -1,4 +1,4 @@
-"""End-to-end training driver.
+"""End-to-end training driver — a thin CLI shell over the session layer.
 
 Trains any registered arch (full or ``--reduced`` smoke size) on the
 deterministic synthetic LM stream with AdamW, checkpoint/auto-resume,
@@ -7,8 +7,23 @@ On this CPU container the practical path is ``--reduced`` (the quickstart
 example trains a ~100M-class model for a few hundred steps); on a TPU pod
 the same driver runs the full configs on the production mesh.
 
+With ``--plan-workload`` the driver additionally stands up a plan-only
+:class:`repro.session.SpindleSession` for the named MT workload: the plan
+is built through the session's PlanCache, the training loop feeds its step
+times into a :class:`repro.launch.events.StragglerEventSource`, and the
+session polls it every step, so a detected straggler fires the §5.5
+re-plan hook through the one production code path instead of
+driver-inline logic.  Note the detector compares per-host medians, so it
+can only flag when ONE detector instance sees timings from every host —
+this loop records only the local host's times, so a per-process detector
+never fires on its own; a deployment must feed an aggregated per-host
+timing stream (rank-0 collector or allgather — ROADMAP item) into the
+source.  The wiring itself is exercised here and
+`tests/test_session.py` drives the replan path with scripted events.
+
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
-        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt \
+        --plan-workload multitask_clip
 """
 
 from __future__ import annotations
@@ -44,31 +59,53 @@ def plan_preview(
     n_devices: int = 16,
     island_size: int = 8,
     verbose: bool = True,
+    event_sources=(),
+    callbacks=(),
 ):
-    """Build an ExecutionPlan for a named MT workload via the PlannerPipeline.
+    """Stand up a plan-only SpindleSession for a named MT workload.
 
-    The training driver uses this to print (and return) the wavefront plan a
-    multi-task run would execute on a real cluster — same registry/stages as
-    ``repro.core.plan`` and the simulator (DESIGN.md §9)."""
-    from ..core.pipeline import get_pipeline
+    The training driver uses this to print the wavefront plan a multi-task
+    run would execute on a real cluster — same registry/stages/cache as the
+    bound sessions, the simulator, and the benchmarks (DESIGN.md §9/§10).
+    Returns the session; its ``current_plan`` is the built plan, and later
+    ``session.poll()``/``session.signal(...)`` replans through the cache.
+    """
+    from ..core.pipeline import available_planners
     from ..core.placement import ClusterSpec
     from ..core.workloads import WORKLOADS
+    from ..session import SessionConfig, SpindleSession
 
+    # validate names up front so the CLI error stays friendly without a
+    # blanket except that would also swallow genuine planner failures
     if workload not in WORKLOADS:
         raise SystemExit(
             f"[train] unknown --plan-workload {workload!r}; "
             f"choose from {sorted(WORKLOADS)}"
         )
-    graph = WORKLOADS[workload]()
-    cluster = ClusterSpec(n_devices=n_devices, island_size=island_size,
-                          mem_bytes=96e9)
-    p = get_pipeline(planner).plan(graph, cluster)
+    if planner not in available_planners():
+        raise SystemExit(
+            f"[train] unknown --planner {planner!r}; "
+            f"choose from {available_planners()}"
+        )
+    cfg = SessionConfig(
+        workload=workload,
+        planner=planner,
+        cluster=ClusterSpec(n_devices=n_devices, island_size=island_size,
+                            mem_bytes=96e9),
+        # straggler replans must adapt, not vacuously re-hit the cache:
+        # shrink the planning cluster by the flagged hosts (restored on
+        # recovery) so the regenerated plan actually routes around them
+        straggler_shrink=True,
+    )
+    session = SpindleSession(cfg, event_sources=list(event_sources),
+                             callbacks=list(callbacks))
+    p = session.plan()
     if verbose:
         print(f"[plan] {workload} via {planner!r}: "
               f"{len(p.waves())} waves / {len(p.steps)} steps, "
               f"makespan {p.makespan*1e3:.1f} ms/iter "
               f"(planned in {p.planning_seconds*1e3:.0f} ms)")
-    return p
+    return session
 
 
 def make_train_state(model, optimizer, rng, mesh=None, rules=None):
@@ -145,9 +182,26 @@ def train(
     plan_workload: Optional[str] = None,
     planner: str = "spindle",
 ) -> Dict[str, Any]:
-    mt_plan = None
+    from .events import StragglerEventSource
+
+    straggler_src = StragglerEventSource(
+        StragglerDetector(n_hosts=max(jax.process_count(), 1))
+    )
+    session = None
     if plan_workload:
-        mt_plan = plan_preview(plan_workload, planner=planner, verbose=verbose)
+        from ..session import SessionCallbacks
+
+        class _ReplanLogger(SessionCallbacks):
+            def on_replan(self, sess, event, old_plan, new_plan, info):
+                if verbose:
+                    print(f"[train] {event.kind} -> replanned "
+                          f"({info.mode}, "
+                          f"{info.planning_seconds*1e3:.1f} ms planner)")
+
+        session = plan_preview(
+            plan_workload, planner=planner, verbose=verbose,
+            event_sources=[straggler_src], callbacks=[_ReplanLogger()],
+        )
     cfg = get_arch(arch)
     if reduced_cfg:
         cfg = reduced(cfg)
@@ -177,8 +231,6 @@ def train(
             if verbose:
                 print(f"[train] resumed from step {manifest['step']}")
 
-    straggler = StragglerDetector(n_hosts=max(jax.process_count(), 1))
-
     if compress_grads and mesh is not None and "data" in mesh.axis_names:
         step_fn = _make_compressed_dp_step(model, optimizer, mesh)
     else:
@@ -202,7 +254,10 @@ def train(
         params, opt_state, loss = step_fn(params, opt_state, b)
         loss = float(loss)
         dt = time.perf_counter() - t0
-        straggler.record(0, dt)
+        # record under the real host index so an aggregated timing feed
+        # (rank-0 collector / allgather) attributes correctly; a purely
+        # local detector only ever sees this host and cannot flag
+        straggler_src.record(jax.process_index(), dt)
         history.append(loss)
         if verbose and (step % log_every == 0 or step == steps - 1):
             tok_s = batch * seq / dt
@@ -211,9 +266,17 @@ def train(
         if mgr:
             mgr.maybe_save(step, {"params": params, "opt": opt_state},
                            extra={"loss": loss, "arch": arch})
-        slow = straggler.check()
-        if slow and verbose:
-            print(f"[train] stragglers detected: {slow} — re-plan trigger")
+        if session is not None:
+            # the session drains the straggler source and replans the MT
+            # workload through its cache (§5.5 hook, one production path)
+            session.poll()
+        else:
+            for ev in straggler_src.poll():
+                if verbose and ev.hosts:
+                    print(f"[train] stragglers detected: "
+                          f"{list(ev.hosts)} — re-plan trigger")
+                elif verbose:
+                    print("[train] stragglers recovered")
     wall = time.perf_counter() - t_start
     if mgr and (steps - 1) % ckpt_every != 0:
         mgr.maybe_save(steps - 1, {"params": params, "opt": opt_state},
@@ -227,7 +290,8 @@ def train(
         "wall_seconds": wall,
         "params": params,
         "history": history,
-        "mt_plan": mt_plan,
+        "mt_plan": session.current_plan if session is not None else None,
+        "mt_session": session,
     }
 
 

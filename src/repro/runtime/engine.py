@@ -82,8 +82,9 @@ class WaveEngine:
         # flow-order task list (merged-batch concat order)
         self.flow_order = [f.task for f in self.model.flows]
 
-    def rebind(self, plan: ExecutionPlan) -> Dict[str, int]:
-        """Swap in a replanned/cached plan for the SAME model.
+    def rebind(self, plan: ExecutionPlan,
+               model: Optional[MTModel] = None) -> Dict[str, int]:
+        """Swap in a replanned/cached plan — and optionally a shifted model.
 
         Only the cheap plan-derived lookups are rebuilt; the per-step
         closures in ``_fn_cache`` are keyed independently of MetaOp
@@ -93,14 +94,26 @@ class WaveEngine:
         number of closures retained for potential reuse; actual reuse
         happens on the next ``loss_and_grads`` call (steps whose identity
         changed rebuild then), observable as the cache size staying flat.
+
+        When ``model`` is given (a task arrived/completed mid-run and the
+        MTModel was rebuilt for the new task set), the engine rebinds to it
+        while KEEPING the closure cache: closures are pure in the component
+        spec + call-time params/batches, and their keys carry instance/
+        component/task roles, so steps shared between the old and new task
+        sets reuse their closures instead of rebuilding.
         """
-        if plan.meta_graph is not self.mg:
+        ref_model = model if model is not None else self.model
+        if plan.meta_graph is not self.mg or model is not None:
+            # validate BEFORE mutating: a raise must leave the engine on
+            # its previous (model, plan) pairing, still usable
             for m in plan.meta_graph.meta_ops.values():
-                if m.op_ids[0] not in self.model.op_info:
+                if m.op_ids[0] not in ref_model.op_info:
                     raise ValueError(
                         "rebind: plan references operators unknown to this "
                         "model — replan against the same task graph first"
                     )
+        if model is not None:
+            self.model = model
         cached = len(self._fn_cache)
         self._bind(plan)
         return {"closures_cached": cached}
@@ -149,8 +162,13 @@ class WaveEngine:
         return jax.device_put(x, jax.sharding.NamedSharding(mesh, spec))
 
     # ------------------------------------------------------------------
-    def loss_and_grads(self, params, batches):
-        """Wave-by-wave fwd + reverse-wave bwd. Returns (loss, grads)."""
+    def loss_and_grads(self, params, batches, *,
+                       on_wave: Optional[Callable[[int, List[PlanStep]], None]] = None):
+        """Wave-by-wave fwd + reverse-wave bwd. Returns (loss, grads).
+
+        ``on_wave(wave_index, steps)`` fires after each forward wave is
+        dispatched — the session's observer hook for per-wave metrics.
+        """
         model = self.model
         acts: Dict[int, Any] = {}
         losses: Dict[int, Any] = {}
@@ -191,6 +209,8 @@ class WaveEngine:
                     losses[mid] = out
                 else:
                     acts[mid] = out
+            if on_wave is not None:
+                on_wave(widx, waves[widx])
 
         n_losses = len(losses)
 
@@ -261,7 +281,13 @@ class WaveEngine:
         cached = self._fn_cache.get(key)
         if cached is not None:
             return cached
-        model = self.model
+        # Closures resolve the model AND the component spec at CALL time
+        # through the engine: rebind(model=...) never pins retired models
+        # in the cache across a long-running session's task-set shifts,
+        # and a factory that redefines a same-named component applies the
+        # current spec rather than a stale captured one.
+        engine = self
+        cname = c.name
         tasks = self._tasks_of(task_str)
         pos_by_task = {
             t: [i for i, (pt, _) in enumerate(pred_info) if pt == t]
@@ -269,6 +295,8 @@ class WaveEngine:
         }
 
         def fn(batches, inst_params, *pred_acts):
+            model = engine.model
+            c = model.components[cname]
             if c.kind == "contrastive":
                 inputs = {pc: a for (_, pc), a in zip(pred_info, pred_acts)}
                 return model.loss_op(inst_params, c, inputs, batches[tasks[0]])
@@ -297,10 +325,13 @@ class WaveEngine:
         cached = self._fn_cache.get(key)
         if cached is not None:
             return cached
-        model = self.model
+        engine = self  # call-time model/spec lookup — see _make_entry_fn
+        cname = c.name
         tasks = self._tasks_of(task_str)
 
         def fn(batches, inst_params, h):
+            model = engine.model
+            c = model.components[cname]
             for lp in inst_params["layers"][lo:hi]:
                 h = model.apply_layer(c, lp, h)
             if is_loss:
@@ -314,8 +345,9 @@ class WaveEngine:
         return fn
 
     # ------------------------------------------------------------------
-    def train_step(self, params, opt_state, batches, optimizer):
+    def train_step(self, params, opt_state, batches, optimizer, *,
+                   on_wave=None):
         """One full §3.6 iteration: fwd+bwd wave-by-wave, group sync, update."""
-        loss, grads = self.loss_and_grads(params, batches)
+        loss, grads = self.loss_and_grads(params, batches, on_wave=on_wave)
         new_params, new_state = optimizer.update(grads, opt_state, params)
         return new_params, new_state, loss

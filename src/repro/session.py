@@ -1,0 +1,543 @@
+"""SpindleSession — one lifecycle API: plan → bind → execute → replan (§5.5).
+
+Before this module, the plan/execute/replan lifecycle was re-implemented ad
+hoc by every driver (``launch/train.py``, ``launch/dryrun.py``, the
+wavefront example, the dynamicity benchmark).  The session is the single
+re-entrant surface they all share:
+
+    session = SpindleSession(SessionConfig(cluster=...), model_factory=...,
+                             tasks=("img_text", "audio_text"))
+    session.bind()                  # plan (through the PlanCache) + engine
+    session.run(steps=100)          # wave-by-wave training steps
+    session.signal(TaskCompleted("audio_text"))   # replan + rebind mid-run
+    session.run(steps=100)          # continues on the rebound plan
+
+Internally one lifecycle turn composes the PR-1 building blocks:
+``get_pipeline`` (strategy registry) → ``PlanCache.get_or_plan`` (exact
+hit / incremental replan / full plan) → ``WaveEngine`` / ``WaveEngine.
+rebind`` (closure-preserving plan swap).  Observers subscribe through
+:class:`SessionCallbacks` (``on_plan`` / ``on_wave`` / ``on_replan`` /
+``on_step_end``) for metrics and checkpoint hooks, and event *sources*
+(:mod:`repro.launch.events`) are polled once per step so stragglers and
+workload shifts trigger replans on the production path instead of inline
+driver code.
+
+Sessions come in two flavors:
+
+  * **bound** — a :class:`repro.runtime.mtmodel.MTModel` (or a
+    ``model_factory`` building one per task set) is attached; ``step``/
+    ``run`` execute real training iterations and replans rebind the live
+    engine without rebuilding unchanged step closures.
+  * **plan-only** — no executable model (a named
+    :data:`repro.core.workloads.WORKLOADS` entry or a ``graph_factory``);
+    ``plan``/``signal`` still work, which is what the planning drivers and
+    the dynamicity benchmark need.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
+
+from .core.costmodel import HardwareSpec, V5E
+from .core.estimator import TimeFn
+from .core.graph import TaskGraph
+from .core.placement import ClusterSpec
+from .core.plan import ExecutionPlan, PlanStep
+from .core.plancache import PlanCache
+from .launch.events import (
+    Event,
+    StragglerDetected,
+    TaskArrived,
+    TaskCompleted,
+)
+
+__all__ = [
+    "SessionConfig",
+    "SessionCallbacks",
+    "ReplanRecord",
+    "SpindleSession",
+]
+
+
+@dataclass(frozen=True)
+class SessionConfig:
+    """Typed, immutable inputs of one session.
+
+    Groups everything a lifecycle needs: the workload (a named planner
+    workload for plan-only sessions — bound sessions get their graph from
+    the model), the planner strategy + options, the cluster spec, the cache
+    policy, the replan triggers, and the train hyperparameters.
+    """
+
+    # cluster + planner strategy
+    cluster: ClusterSpec = ClusterSpec(
+        n_devices=16, island_size=8, mem_bytes=96e9
+    )
+    planner: str = "spindle"
+    placement_strategy: str = "spindle"
+    profile_powers_of_two: bool = True
+    hw: HardwareSpec = V5E
+    time_fn: Optional[TimeFn] = None
+    #: named repro.core.workloads entry for plan-only sessions
+    workload: Optional[str] = None
+    # cache policy
+    cache_maxsize: int = 32
+    curve_memo_max: int = 8192
+    #: event kinds that trigger a replan (subset of launch.events.EVENT_KINDS)
+    replan_on: Tuple[str, ...] = (
+        "task_arrived", "task_completed", "straggler"
+    )
+    #: shrink the cluster before a straggler replan: one device per flagged
+    #: host, always relative to the configured size, restored when the
+    #: flagged set empties.  (Deliberate simplification for this
+    #: single-process runtime — topology-aware shrink, removing a flagged
+    #: host's whole device block, is a ROADMAP item.)
+    straggler_shrink: bool = False
+    # train hyperparameters (bound sessions)
+    lr: float = 5e-3
+    weight_decay: float = 0.0
+    seed: int = 0
+
+
+class SessionCallbacks:
+    """Observer protocol — subclass and override what you need.
+
+    Firing order per lifecycle turn: ``on_plan`` whenever a *new* plan
+    becomes current (initial plan and every replan), ``on_wave`` after each
+    forward wave of a step, ``on_step_end`` after the optimizer update,
+    ``on_replan`` after a signal's replan+rebind completed (so it sees the
+    session already on the new plan).
+    """
+
+    def on_plan(self, session: "SpindleSession",
+                plan: ExecutionPlan) -> None:
+        pass
+
+    def on_wave(self, session: "SpindleSession", wave_index: int,
+                steps: List[PlanStep]) -> None:
+        pass
+
+    def on_replan(self, session: "SpindleSession", event: Event,
+                  old_plan: Optional[ExecutionPlan],
+                  new_plan: ExecutionPlan, info: "ReplanRecord") -> None:
+        pass
+
+    def on_step_end(self, session: "SpindleSession", step: int,
+                    loss: float, dt: float) -> None:
+        pass
+
+
+@dataclass
+class ReplanRecord:
+    """What one signal-triggered replan did (handed to ``on_replan``)."""
+
+    #: headline event (the last effective one of a coalesced burst)
+    event: Event
+    #: every effective event folded into this single replan
+    events: Tuple[Event, ...] = ()
+    #: "hit" (exact cache hit) | "incremental" | "full" | "fallback"
+    mode: str = "full"
+    #: wall time THIS replan spent in the cache/planner (≈0 on exact hits)
+    planning_seconds: float = 0.0
+    #: engine closures retained across the rebind (bound sessions only)
+    closures_cached: Optional[int] = None
+    model_rebuilt: bool = False
+
+
+#: a model factory returns an MTModel or an (MTModel, batches) pair
+ModelFactory = Callable[[Tuple[str, ...]], Union[Any, Tuple[Any, Dict]]]
+GraphFactory = Callable[[Tuple[str, ...]], TaskGraph]
+
+
+class SpindleSession:
+    """The lifecycle facade: plan → bind → execute → replan, re-entrant."""
+
+    def __init__(
+        self,
+        config: Optional[SessionConfig] = None,
+        *,
+        model: Any = None,
+        model_factory: Optional[ModelFactory] = None,
+        graph_factory: Optional[GraphFactory] = None,
+        tasks: Optional[Sequence[str]] = None,
+        batches: Optional[Dict[str, Dict]] = None,
+        callbacks: Sequence[SessionCallbacks] = (),
+        event_sources: Sequence[Any] = (),
+        cache: Optional[PlanCache] = None,
+    ):
+        self.config = config or SessionConfig()
+        self.cache = cache or PlanCache(
+            maxsize=self.config.cache_maxsize,
+            curve_memo_max=self.config.curve_memo_max,
+        )
+        self.callbacks: List[SessionCallbacks] = list(callbacks)
+        self.event_sources: List[Any] = list(event_sources)
+        self.model_factory = model_factory
+        self.graph_factory = graph_factory
+        self.tasks: Optional[Tuple[str, ...]] = (
+            tuple(tasks) if tasks is not None else None
+        )
+        #: live cluster — may shrink on straggler events (straggler_shrink)
+        self.cluster = self.config.cluster
+        self._straggler_hosts: frozenset = frozenset()
+        self.model = None
+        self.batches = batches
+        self.engine = None
+        self.params: Optional[Dict[str, Any]] = None
+        self.opt_state: Any = None
+        self.optimizer = None
+        self.current_plan: Optional[ExecutionPlan] = None
+        self.step_count = 0
+        self.history: List[float] = []
+        self.replans: List[ReplanRecord] = []
+        if model is not None:
+            self.bind(model)
+
+    # ------------------------------------------------------------- plumbing
+    def _fire(self, name: str, *args) -> None:
+        for cb in self.callbacks:
+            fn = getattr(cb, name, None)
+            if fn is not None:
+                fn(self, *args)
+
+    def _build_model(self) -> None:
+        if self.model_factory is None:
+            raise ValueError(
+                "session has no model_factory; bind(model) explicitly"
+            )
+        out = self.model_factory(self.tasks or ())
+        if isinstance(out, tuple):
+            self.model, self.batches = out
+        else:
+            self.model = out
+
+    def _graph(self) -> TaskGraph:
+        if self.model is not None:
+            return self.model.graph
+        if self.model_factory is not None:
+            self._build_model()
+            return self.model.graph
+        if self.graph_factory is not None:
+            return self.graph_factory(self.tasks or ())
+        if self.config.workload is not None:
+            from .core.workloads import WORKLOADS
+
+            if self.config.workload not in WORKLOADS:
+                raise ValueError(
+                    f"unknown workload {self.config.workload!r}; "
+                    f"choose from {sorted(WORKLOADS)}"
+                )
+            return WORKLOADS[self.config.workload]()
+        raise ValueError(
+            "session has no workload: pass model/model_factory/"
+            "graph_factory or set SessionConfig.workload"
+        )
+
+    def _refresh_params(self) -> None:
+        """(Re-)derive params/optimizer for the current model.
+
+        Instances whose name survives a task shift (shared towers, per-task
+        components of continuing tasks) keep their trained values; new
+        instances are freshly initialized.  Optimizer moments restart —
+        the model's parameter tree changed shape.
+        """
+        import jax
+
+        from .optim import AdamW
+
+        if self.optimizer is None:
+            self.optimizer = AdamW(
+                lr=self.config.lr, weight_decay=self.config.weight_decay
+            )
+        fresh = self.model.init(jax.random.PRNGKey(self.config.seed))
+        old = self.params or {}
+        self.params = {k: old.get(k, v) for k, v in fresh.items()}
+        self.opt_state = self.optimizer.init(self.params)
+
+    def _get_or_plan(self) -> ExecutionPlan:
+        """Plan through the cache WITHOUT committing/notifying (signal_all
+        commits only after the whole replan turn succeeded)."""
+        return self.cache.get_or_plan(
+            self._graph(),
+            self.cluster,
+            planner=self.config.planner,
+            time_fn=self.config.time_fn,
+            hw=self.config.hw,
+            placement_strategy=self.config.placement_strategy,
+            profile_powers_of_two=self.config.profile_powers_of_two,
+        )
+
+    # ------------------------------------------------------------ lifecycle
+    def plan(self) -> ExecutionPlan:
+        """Build (or fetch) the ExecutionPlan for the current workload.
+
+        Always goes through the PlanCache: exact workload-signature hits
+        return the stored plan, shifted workloads replan incrementally,
+        everything else plans from scratch via the registered pipeline.
+        Fires ``on_plan`` when the current plan actually changed.
+        """
+        p = self._get_or_plan()
+        if p is not self.current_plan:
+            self.current_plan = p
+            self._fire("on_plan", p)
+        return p
+
+    def bind(self, model: Any = None, *,
+             tasks: Optional[Sequence[str]] = None) -> "SpindleSession":
+        """Attach an executable MTModel (or build one via the factory) and
+        stand up the WaveEngine on the current plan.
+
+        Binding an explicit ``model`` also refreshes task membership —
+        from ``tasks`` if given, else derived from the model's flows — so a
+        factory-less session that rebuilds a shifted model itself (the
+        workaround ``signal_all`` suggests) keeps ``session.tasks``
+        consistent with what the engine actually executes.
+
+        Like :meth:`signal_all`, a failure anywhere (factory, planner,
+        params init, engine) rolls the session back to its previous state —
+        the engine rebind is the last mutating step, so session and engine
+        never end up on different (model, plan) pairs.
+        """
+        from .runtime.engine import WaveEngine
+
+        rollback = (
+            self.model, self.batches, self.params, self.opt_state,
+            self.current_plan, self.tasks,
+        )
+        try:
+            model_changed = False
+            if model is not None:
+                model_changed = model is not self.model
+                self.model = model
+                if tasks is not None:
+                    self.tasks = tuple(tasks)
+                else:
+                    flows = getattr(model, "flows", None)
+                    if flows is not None:
+                        self.tasks = tuple(f.task for f in flows)
+            elif self.model is None:
+                self._build_model()
+                model_changed = True
+            p = self._get_or_plan()
+            if model_changed or self.params is None:
+                self._refresh_params()
+            if self.engine is None:
+                self.engine = WaveEngine(self.model, p)
+            else:
+                self.engine.rebind(
+                    p, model=self.model if model_changed else None
+                )
+        except BaseException:
+            (self.model, self.batches, self.params, self.opt_state,
+             self.current_plan, self.tasks) = rollback
+            raise
+        if p is not self.current_plan:
+            self.current_plan = p
+            self._fire("on_plan", p)
+        return self
+
+    def step(self, batches: Optional[Dict[str, Dict]] = None) -> float:
+        """One training step on the bound engine.
+
+        Fires ``on_wave`` per forward wave and ``on_step_end`` after the
+        update, then drains every event source — a straggler or workload
+        shift detected at step *t* replans before step *t+1* begins.
+        """
+        if self.engine is None:
+            raise RuntimeError("bind() a model before calling step()")
+        b = batches if batches is not None else self.batches
+        if b is None:
+            raise ValueError(
+                "no batches: pass step(batches=...) or use a model_factory "
+                "returning (model, batches)"
+            )
+        t0 = time.perf_counter()
+        self.params, self.opt_state, loss = self.engine.train_step(
+            self.params, self.opt_state, b, self.optimizer,
+            on_wave=lambda widx, steps: self._fire("on_wave", widx, steps),
+        )
+        loss = float(loss)
+        dt = time.perf_counter() - t0
+        self.history.append(loss)
+        step_idx = self.step_count
+        self.step_count += 1
+        if self.event_sources:
+            import jax
+
+            host = jax.process_index()  # correct attribution for an
+            # aggregated per-host timing feed; a detector fed only this
+            # process's times cannot flag by itself (needs a collector)
+            for src in self.event_sources:
+                rec = getattr(src, "record", None)
+                if rec is not None:
+                    rec(host, dt)
+        self._fire("on_step_end", step_idx, loss, dt)
+        self.poll()
+        return loss
+
+    def run(self, steps: int,
+            batches: Optional[Dict[str, Dict]] = None) -> Dict[str, Any]:
+        """Run ``steps`` training steps (each one polls the event sources)."""
+        for _ in range(steps):
+            self.step(batches)
+        return {
+            "steps": self.step_count,
+            "history": list(self.history),
+            "final_loss": self.history[-1] if self.history else None,
+            "replans": list(self.replans),
+        }
+
+    def poll(self) -> List[Event]:
+        """Drain every event source; everything that fired in this cycle is
+        coalesced into ONE replan (see :meth:`signal_all`)."""
+        fired: List[Event] = []
+        for src in self.event_sources:
+            fired.extend(src.poll())
+        if fired:
+            self.signal_all(fired)
+        return fired
+
+    # --------------------------------------------------------------- events
+    def signal(self, event: Event) -> Optional[ExecutionPlan]:
+        """Handle one lifecycle event — the §5.5 re-plan hook.
+
+        Task arrivals/completions update the active task set (and rebuild
+        the model via the factory, when bound); straggler events optionally
+        shrink the live cluster (by the currently flagged host set, always
+        relative to the configured cluster — re-fires never compound).  If
+        the event kind is in ``config.replan_on``, the workload replans
+        through the cache and a bound engine rebinds to the new plan
+        without rebuilding unchanged step closures.  Events the policy
+        ignores — duplicate arrivals, completions of absent tasks, and any
+        task event on a session that does not track membership
+        (``tasks=None``) — leave ALL session state untouched and return
+        ``None``.
+        """
+        return self.signal_all((event,))
+
+    def signal_all(self, events: Sequence[Event]) -> Optional[ExecutionPlan]:
+        """Handle a burst of events with ONE coalesced replan.
+
+        All membership/cluster updates are applied first, then the workload
+        replans once and the engine rebinds once — a phase shift arriving
+        as N task events costs one planner invocation, not N (intermediate
+        task sets are never planned).  Returns the new plan, or ``None``
+        when no event was effective.
+        """
+        # Simulate the whole burst against local copies first: no session
+        # state is touched until we know the burst is effective AND legal
+        # (so a raise below leaves the session exactly as it was).
+        model_shift = False
+        effective: List[Event] = []
+        tasks = self.tasks
+        flagged = self._straggler_hosts
+        for event in events:
+            if event.kind not in self.config.replan_on:
+                continue
+            if isinstance(event, TaskArrived):
+                if tasks is None or event.task in tasks:
+                    continue  # untracked membership / duplicate: no-op
+                tasks = tasks + (event.task,)
+                model_shift = True
+            elif isinstance(event, TaskCompleted):
+                if tasks is None or event.task not in tasks:
+                    continue  # untracked membership / absent task: no-op
+                tasks = tuple(t for t in tasks if t != event.task)
+                model_shift = True
+            elif isinstance(event, StragglerDetected):
+                # the event carries the FULL currently-flagged set
+                new_flagged = frozenset(event.hosts)
+                if self.config.straggler_shrink:
+                    if new_flagged == flagged:
+                        continue  # same degradation: nothing to adapt
+                    flagged = new_flagged
+                elif not event.hosts:
+                    continue  # recovery is a no-op when nothing was shrunk
+            effective.append(event)
+        if not effective:
+            return None
+        if model_shift and self.model is not None and (
+            self.model_factory is None
+        ):
+            raise RuntimeError(
+                "session has a bound model but no model_factory: task "
+                "membership shifts cannot be applied — construct the "
+                "session with model_factory=, or rebuild the shifted "
+                "model yourself and bind() it"
+            )
+        # Commit the simulated membership/cluster state — and roll it ALL
+        # back if the factory, planner, params refresh, or rebind below
+        # raises, so a failed burst leaves the session exactly on its
+        # previous (tasks, cluster, model, params, plan).  The engine
+        # rebind is the LAST mutating step and itself validates before
+        # mutating, so session and engine can never end up on different
+        # (model, plan) pairs; observers are notified (on_plan/on_replan)
+        # only after the whole turn succeeded.
+        rollback = (
+            self.tasks, self.cluster, self._straggler_hosts,
+            self.model, self.batches, self.params, self.opt_state,
+        )
+        self.tasks = tasks
+        if flagged is not self._straggler_hosts:
+            self._straggler_hosts = flagged
+            n = max(1, self.config.cluster.n_devices - len(flagged))
+            self.cluster = dataclasses.replace(self.cluster, n_devices=n)
+        event = effective[-1]  # the record's headline event
+
+        old_plan, old_model = self.current_plan, self.model
+        try:
+            if model_shift and self.model is not None and (
+                self.model_factory is not None
+            ):
+                self._build_model()  # rebuild for the shifted task set
+            s = self.cache.stats
+            before = (s.hits, s.incremental, s.fallbacks)
+            t0 = time.perf_counter()
+            p = self._get_or_plan()
+            plan_seconds = time.perf_counter() - t0
+            if self.engine is not None:
+                if self.model is not old_model:
+                    self._refresh_params()
+                rebind_stats = self.engine.rebind(
+                    p,
+                    model=self.model if self.model is not old_model else None,
+                )
+        except BaseException:
+            (self.tasks, self.cluster, self._straggler_hosts,
+             self.model, self.batches, self.params, self.opt_state) = rollback
+            raise
+        if p is not self.current_plan:
+            self.current_plan = p
+            self._fire("on_plan", p)
+        if s.fallbacks > before[2]:
+            mode = "fallback"
+        elif s.hits > before[0]:
+            mode = "hit"
+        elif s.incremental > before[1]:
+            mode = "incremental"
+        else:
+            mode = "full"
+        info = ReplanRecord(
+            event=event,
+            events=tuple(effective),
+            mode=mode,
+            planning_seconds=plan_seconds,
+            model_rebuilt=self.model is not old_model,
+        )
+        if self.engine is not None:
+            info.closures_cached = rebind_stats["closures_cached"]
+        self.replans.append(info)
+        self._fire("on_replan", event, old_plan, p, info)
+        return p

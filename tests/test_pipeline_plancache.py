@@ -225,16 +225,57 @@ def _one_task_graph(loss_dim: int):
 
 def test_incremental_reuses_unchanged_metalevel():
     """A shift touching only the join level reuses the tower level's cached
-    allocation + waves (only the affected MetaLevel re-runs)."""
+    allocation + waves (only the affected MetaLevel re-runs, and its MPSP
+    bisection warm-starts from the cached C̃* bracket)."""
     cache = PlanCache()
     base = plan(_one_task_graph(64), CLUSTER, cache=cache)
     shifted = plan(_one_task_graph(128), CLUSTER, cache=cache)
     assert cache.stats.incremental == 1
     assert cache.stats.levels_reused == 1  # the tower level
     assert cache.stats.levels_replanned == 1  # the loss level
+    assert cache.stats.warm_start_hits == 1  # warm-started from cached C̃*
+    assert "warm_start_hits" in cache.stats.as_dict()
     check_schedule(shifted.schedule, shifted.meta_graph, CLUSTER.n_devices)
     full = plan(_one_task_graph(128), CLUSTER)
     assert shifted.makespan == pytest.approx(full.makespan, rel=0.05)
+
+
+def test_warm_started_bisection_matches_cold():
+    """solve_continuous with a (possibly stale) C̃* hint converges to the
+    same optimum as the cold bracket."""
+    from repro.core import make_time_fn
+    from repro.core.allocator import solve_continuous
+
+    mg = contract(multitask_clip(4))
+    est = ScalabilityEstimator(make_time_fn(V5E), CLUSTER.n_devices)
+    for metas in mg.levels():
+        curves = {m.meta_id: est.curve(m) for m in metas}
+        c_cold, n_cold = solve_continuous(curves=curves, metas=metas,
+                                          n_devices=CLUSTER.n_devices)
+        for hint in (c_cold, 0.1 * c_cold, 10.0 * c_cold):
+            c_warm, n_warm = solve_continuous(
+                curves=curves, metas=metas,
+                n_devices=CLUSTER.n_devices, c_hint=hint,
+            )
+            assert c_warm == pytest.approx(c_cold, rel=1e-3)
+            for mid in n_cold:
+                assert n_warm[mid] == pytest.approx(n_cold[mid], rel=1e-2)
+
+
+def test_block_placement_tracks_memory_high_water():
+    """The optimus BlockPlacementStage fills per-device memory high-water
+    marks (params + optimizer + activations), like the locality placer, so
+    baseline OOM behavior is comparable to the spindle placement path."""
+    p = plan(multitask_clip(3), CLUSTER, planner="optimus")
+    hw = p.placement.mem_high_water
+    assert hw, "optimus placement must populate mem_high_water"
+    assert set(hw) == set(range(CLUSTER.n_devices))
+    used = [v for v in hw.values() if v > 0]
+    assert used, "at least one device accumulates memory"
+    # every placed entry's devices carry non-zero high-water
+    for s in p.steps:
+        for d in s.devices:
+            assert hw[d] > 0
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,392 @@
+"""SpindleSession lifecycle: plan → bind → execute → replan (DESIGN.md §10)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ClusterSpec
+from repro.launch.events import (
+    ScriptedEventSource,
+    StragglerDetected,
+    StragglerEventSource,
+    TaskArrived,
+    TaskCompleted,
+)
+from repro.ckpt.straggler import StragglerDetector
+from repro.runtime import tiny_multitask_clip
+from repro.session import SessionCallbacks, SessionConfig, SpindleSession
+
+CLUSTER = ClusterSpec(n_devices=8, island_size=4, mem_bytes=96e9)
+TASKS = ("img_text", "audio_text", "audio_vision")
+
+
+def make_session(**kw):
+    return SpindleSession(
+        SessionConfig(cluster=CLUSTER, **kw.pop("config", {})),
+        model_factory=lambda tasks: tiny_multitask_clip(n_tasks=len(tasks)),
+        tasks=TASKS,
+        **kw,
+    )
+
+
+def _max_grad_delta(g, ref_g):
+    return max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(ref_g))
+    )
+
+
+def _reference_delta(session):
+    """Engine vs single-program reference on the session's current state."""
+    ref_l, ref_g = jax.value_and_grad(session.model.reference_loss)(
+        session.params, session.batches
+    )
+    loss, grads = session.engine.loss_and_grads(session.params, session.batches)
+    return float(abs(loss - ref_l)), _max_grad_delta(grads, ref_g)
+
+
+# --------------------------------------------------------------------------
+# Mid-run rebind keeps the numerical contract (acceptance criterion)
+# --------------------------------------------------------------------------
+
+
+def test_task_completed_rebinds_and_matches_reference():
+    """A mid-run TaskCompleted produces a rebound plan whose loss_and_grads
+    still equals jax.value_and_grad(MTModel.reference_loss)."""
+    session = make_session().bind()
+    session.run(steps=2)
+    dl, dg = _reference_delta(session)
+    assert dl < 1e-6 and dg < 1e-6  # contract before the shift
+
+    n_closures = len(session.engine._fn_cache)
+    p = session.signal(TaskCompleted("audio_vision"))
+    assert p is session.current_plan
+    assert session.tasks == ("img_text", "audio_text")
+    rec = session.replans[-1]
+    assert rec.model_rebuilt
+    assert rec.closures_cached == n_closures  # closures survived the rebind
+    assert len(session.model.flows) == 2  # model rebuilt for 2 tasks
+
+    # training continues on the rebound plan, numerics intact
+    session.run(steps=2)
+    dl, dg = _reference_delta(session)
+    assert dl < 1e-6 and dg < 1e-6
+
+    # shared tower params carried over across the shift (not re-initialized)
+    assert session.history[-1] < session.history[0]
+
+
+# --------------------------------------------------------------------------
+# Cache-hit replan vs full/incremental replan
+# --------------------------------------------------------------------------
+
+
+def test_cache_hit_replan_vs_full_replan():
+    session = make_session().bind()
+    session.step()
+    assert session.cache.stats.misses == 1  # the initial plan
+
+    # first completion: never seen → full or incremental replan
+    session.signal(TaskCompleted("audio_vision"))
+    first = session.replans[-1]
+    assert first.mode in ("full", "incremental", "fallback")
+
+    # the task comes back, then completes again: the 2-task workload
+    # signature is cached → exact-hit replan, no planner work
+    session.signal(TaskArrived("audio_vision"))
+    hits_before = session.cache.stats.hits
+    p = session.signal(TaskCompleted("audio_vision"))
+    assert session.replans[-1].mode == "hit"
+    assert session.cache.stats.hits == hits_before + 1
+    session.step()  # still executable after the cached rebind
+    dl, dg = _reference_delta(session)
+    assert dl < 1e-6 and dg < 1e-6
+
+
+# --------------------------------------------------------------------------
+# Callback firing order
+# --------------------------------------------------------------------------
+
+
+class Recorder(SessionCallbacks):
+    def __init__(self):
+        self.log = []
+
+    def on_plan(self, session, plan):
+        self.log.append(("plan", plan.planner))
+
+    def on_wave(self, session, wave_index, steps):
+        self.log.append(("wave", wave_index))
+
+    def on_replan(self, session, event, old_plan, new_plan, info):
+        self.log.append(("replan", event.kind, info.mode))
+
+    def on_step_end(self, session, step, loss, dt):
+        self.log.append(("step_end", step))
+
+
+def test_callback_firing_order():
+    rec = Recorder()
+    session = make_session(callbacks=[rec])
+    session.bind()
+    assert rec.log[0] == ("plan", "spindle")  # bind planned before stepping
+
+    session.step()
+    kinds = [e[0] for e in rec.log]
+    # all waves of the step fire before its step_end
+    assert kinds.count("wave") == len(session.current_plan.waves())
+    assert kinds[-1] == "step_end" and rec.log[-1] == ("step_end", 0)
+    assert kinds.index("wave") > kinds.index("plan")
+
+    rec.log.clear()
+    session.signal(TaskCompleted("audio_vision"))
+    kinds = [e[0] for e in rec.log]
+    # a replanning signal announces the new plan, then the replan record
+    assert kinds == ["plan", "replan"]
+    assert rec.log[1][1] == "task_completed"
+
+
+# --------------------------------------------------------------------------
+# Event sources: polled every step, straggler triggers the replan hook
+# --------------------------------------------------------------------------
+
+
+def test_event_source_polled_and_straggler_replans():
+    rec = Recorder()
+    src = ScriptedEventSource([StragglerDetected((3,))])
+    session = make_session(callbacks=[rec], event_sources=[src])
+    session.bind()
+    session.step()
+    assert not src.events  # drained by the step's poll
+    replans = [e for e in rec.log if e[0] == "replan"]
+    assert replans == [("replan", "straggler", "hit")]  # same workload → hit
+
+
+def test_straggler_event_source_debounces():
+    src = StragglerEventSource(
+        StragglerDetector(n_hosts=4, min_samples=4, threshold=1.5)
+    )
+    for _ in range(6):
+        for h, t in enumerate([1.0, 1.0, 1.1, 3.0]):
+            src.record(h, t)
+    evs = src.poll()
+    assert [e.hosts for e in evs] == [(3,)]
+    assert src.poll() == []  # same flagged set → no refire
+
+
+def test_straggler_shrink_replans_on_smaller_cluster():
+    session = make_session(config={"straggler_shrink": True}).bind()
+    n0 = session.cluster.n_devices
+    session.signal(StragglerDetected((6, 7)))
+    assert session.cluster.n_devices == n0 - 2
+    assert session.current_plan.n_devices == n0 - 2
+    assert max(len(s.devices) for s in session.current_plan.steps) <= n0 - 2
+    session.step()  # still trains on the degraded cluster's plan
+    dl, dg = _reference_delta(session)
+    assert dl < 1e-6 and dg < 1e-6
+
+    # events carry the FULL flagged set: a re-fire with a grown set shrinks
+    # relative to the configured cluster, never compounding prior shrinks,
+    # and a partial recovery grows the cluster back
+    assert session.signal(StragglerDetected((6, 7))) is None  # same set
+    assert session.cluster.n_devices == n0 - 2
+    session.signal(StragglerDetected((5, 6, 7)))
+    assert session.cluster.n_devices == n0 - 3
+    session.signal(StragglerDetected((6,)))
+    assert session.cluster.n_devices == n0 - 1
+    # full recovery (the source fires an empty set) restores the cluster
+    session.signal(StragglerDetected(()))
+    assert session.cluster.n_devices == n0
+    assert session.current_plan.n_devices == n0
+
+
+def test_duplicate_task_events_are_noops():
+    """A repeated TaskArrived (or TaskCompleted for an absent task) must not
+    rebuild the model or reset optimizer state."""
+    session = make_session().bind()
+    session.step()
+    model, params, opt = session.model, session.params, session.opt_state
+    assert session.signal(TaskArrived("img_text")) is None  # already active
+    assert session.signal(TaskCompleted("nonexistent")) is None
+    assert session.model is model and session.params is params
+    assert session.opt_state is opt and not session.replans
+    assert session.tasks == TASKS
+
+
+def test_signal_all_coalesces_burst_into_one_replan():
+    """A phase shift arriving as N task events plans once, not N times."""
+    session = make_session().bind()
+    lookups_before = session.cache.stats.lookups
+    p = session.signal_all(
+        [TaskCompleted("audio_vision"), TaskCompleted("audio_text")]
+    )
+    assert session.tasks == ("img_text",)
+    assert len(session.replans) == 1  # one coalesced replan
+    assert session.replans[-1].events == (
+        TaskCompleted("audio_vision"), TaskCompleted("audio_text"),
+    )
+    # exactly one planner lookup: the intermediate 2-task set never planned
+    assert session.cache.stats.lookups == lookups_before + 1
+    assert len(session.model.flows) == 1 and p is session.current_plan
+    session.step()
+    dl, dg = _reference_delta(session)
+    assert dl < 1e-6 and dg < 1e-6
+
+
+def test_bound_session_without_factory_rejects_task_shifts():
+    """Silently diverging (tasks updated, engine unchanged) is an error."""
+    model, batches = tiny_multitask_clip(n_tasks=3)
+    session = SpindleSession(
+        SessionConfig(cluster=CLUSTER),
+        model=model, batches=batches, tasks=TASKS,
+    )
+    with pytest.raises(RuntimeError, match="model_factory"):
+        session.signal(TaskCompleted("audio_vision"))
+    assert session.tasks == TASKS  # nothing was mutated before the raise
+    # documented no-ops stay no-ops (no raise): duplicates / absent tasks
+    assert session.signal(TaskCompleted("nonexistent")) is None
+    assert session.signal(TaskArrived("img_text")) is None
+
+    # the suggested workaround — rebuild the shifted model and bind() it —
+    # refreshes task membership from the model's flows, so the completed
+    # task's re-delivered event is now a documented no-op
+    model2, batches2 = tiny_multitask_clip(n_tasks=2)
+    session.batches = batches2
+    session.bind(model2)
+    assert session.tasks == ("img_text", "audio_text")
+    assert session.signal(TaskCompleted("audio_vision")) is None
+    session.step()
+    dl, dg = _reference_delta(session)
+    assert dl < 1e-6 and dg < 1e-6
+
+
+def test_rebind_validates_before_mutating():
+    """A failed rebind must leave the engine on its old (model, plan)."""
+    from repro.core import plan
+    from repro.runtime import WaveEngine
+
+    model3, batches3 = tiny_multitask_clip(n_tasks=3)
+    model2, _ = tiny_multitask_clip(n_tasks=2)
+    p3 = plan(model3.graph, CLUSTER)
+    eng = WaveEngine(model3, p3)
+    params = model3.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="rebind"):
+        eng.rebind(p3, model=model2)  # p3 references ops model2 lacks
+    assert eng.model is model3  # not mutated by the failed rebind
+    loss, _ = eng.loss_and_grads(params, batches3)  # still fully usable
+    assert float(loss) == float(loss)
+
+
+def test_rebind_releases_previous_model():
+    """Engine closures resolve the model at call time: a task-set shift
+    must not pin the retired MTModel in the closure cache."""
+    import gc
+    import weakref
+
+    from repro.core import plan
+    from repro.runtime import WaveEngine
+
+    model1, batches1 = tiny_multitask_clip(n_tasks=3)
+    eng = WaveEngine(model1, plan(model1.graph, CLUSTER))
+    params = model1.init(jax.random.PRNGKey(0))
+    eng.loss_and_grads(params, batches1)  # populate the closure cache
+    assert eng._fn_cache
+
+    model2, _ = tiny_multitask_clip(n_tasks=2)
+    eng.rebind(plan(model2.graph, CLUSTER), model=model2)
+    ref = weakref.ref(model1)
+    del model1, batches1, params
+    gc.collect()
+    assert ref() is None, "retired model still pinned by cached closures"
+
+
+def test_ignored_events_leave_state_untouched():
+    """Event kinds outside replan_on neither replan nor mutate the session."""
+    session = make_session(
+        config={"replan_on": ("straggler",), "straggler_shrink": True}
+    ).bind()
+    p0 = session.current_plan
+    assert session.signal(TaskCompleted("audio_vision")) is None
+    assert session.tasks == TASKS  # membership NOT silently changed
+    assert session.current_plan is p0 and not session.replans
+    assert len(session.model.flows) == 3
+
+
+# --------------------------------------------------------------------------
+# Plan-only sessions (the driver/benchmark path)
+# --------------------------------------------------------------------------
+
+
+def test_plan_only_session_named_workload():
+    session = SpindleSession(
+        SessionConfig(
+            workload="multitask_clip",
+            cluster=ClusterSpec(n_devices=16, island_size=8, mem_bytes=96e9),
+        )
+    )
+    p = session.plan()
+    assert p.planner == "spindle" and p.steps
+    assert session.plan() is p  # exact cache hit on re-plan
+    with pytest.raises(RuntimeError, match="bind"):
+        session.step()
+
+
+def test_failed_replan_rolls_back_session_state():
+    """A factory/planner failure mid-signal restores tasks/plan exactly."""
+    from repro.core.workloads import multitask_clip
+
+    session = SpindleSession(
+        SessionConfig(
+            cluster=ClusterSpec(n_devices=16, island_size=8, mem_bytes=96e9)
+        ),
+        graph_factory=lambda tasks: multitask_clip(len(tasks)),
+        tasks=("t0",),
+    )
+    p0 = session.plan()
+    with pytest.raises(Exception):
+        session.signal(TaskCompleted("t0"))  # 0-task workload is invalid
+    assert session.tasks == ("t0",)  # rolled back, not left empty
+    assert session.current_plan is p0 and not session.replans
+
+
+def test_failed_bind_rolls_back():
+    """bind() of a broken model must leave the previous binding intact."""
+    session = make_session().bind()
+    model_a = session.model
+
+    class NotAModel:
+        pass
+
+    with pytest.raises(AttributeError):
+        session.bind(NotAModel())
+    assert session.model is model_a
+    assert session.engine.model is model_a
+    session.step()  # previous binding still fully usable
+
+
+def test_untracked_sessions_ignore_task_events():
+    """tasks=None (named-workload sessions) cannot apply membership shifts,
+    so task events are no-ops — no phantom replans/callbacks."""
+    session = SpindleSession(SessionConfig(workload="multitask_clip"))
+    p = session.plan()
+    assert session.signal(TaskArrived("x")) is None
+    assert session.signal(TaskCompleted("x")) is None
+    assert session.current_plan is p and not session.replans
+
+
+def test_plan_only_session_graph_factory_signals():
+    from repro.core.workloads import multitask_clip
+
+    session = SpindleSession(
+        SessionConfig(
+            cluster=ClusterSpec(n_devices=16, island_size=8, mem_bytes=96e9)
+        ),
+        graph_factory=lambda tasks: multitask_clip(len(tasks)),
+        tasks=("t0", "t1", "t2"),
+    )
+    p3 = session.plan()
+    p4 = session.signal(TaskArrived("t3"))
+    assert p4 is not p3 and p4.steps
+    back = session.signal(TaskCompleted("t3"))
+    assert back is p3  # exact signature hit on the way back
+    assert session.replans[-1].mode == "hit"
