@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core import ClusterSpec, V5E
+from repro.core import ClusterSpec
 from repro.core.plan import plan as mkplan
 from repro.core.workloads import WORKLOADS
 
@@ -80,7 +80,7 @@ def main(rows=None) -> None:
         if d["spindle"] > 0:
             print(f"{w}: sequential-placement interwave is "
                   f"{d['sequential'] / d['spindle']:.1f}x spindle's "
-                  f"(paper: 3–6x)")
+                  "(paper: 3–6x)")
 
 
 if __name__ == "__main__":

@@ -58,7 +58,7 @@ def main(rows=None) -> None:
               f"occup={r['avg_occupancy']:.3f} |{bar}|")
     sp = next(r for r in rows if r["system"] == "spindle")
     seq = next(r for r in rows if r["system"] == "sequential")
-    print(f"spindle/sequential utilization: "
+    print("spindle/sequential utilization: "
           f"{sp['avg_util'] / max(seq['avg_util'], 1e-9):.2f}x")
 
 

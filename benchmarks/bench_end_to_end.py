@@ -71,7 +71,7 @@ def main(rows=None) -> None:
         )
     best = max(r["speedup_vs_seq"] for r in rows)
     print(f"max Spindle speedup vs sequential baseline: {best:.2f}x "
-          f"(paper: up to 1.71x)")
+          "(paper: up to 1.71x)")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,6 @@ from typing import Dict, List
 
 from repro.core import (
     ParallelConfig,
-    ScalabilityEstimator,
     ScalingCurve,
     V5E,
     contract,

@@ -55,7 +55,7 @@ def main(rows=None) -> None:
     worst = max(r["deviation_pct"] for r in rows)
     mean = sum(r["deviation_pct"] for r in rows) / len(rows)
     print(f"deviation from C*: mean {mean:.1f}%, worst {worst:.1f}% "
-          f"(paper: ≤7%)")
+          "(paper: ≤7%)")
 
 
 if __name__ == "__main__":

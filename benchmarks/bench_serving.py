@@ -1,0 +1,182 @@
+"""Serving bench — continuous batching + replanning vs. the baselines.
+
+Three policies serve the SAME scripted arrival trace (two request families,
+mixed prompt buckets and generation lengths, a mid-trace mix shift) over
+the same served model:
+
+  * ``static``            — classic batch serving: admit a full batch,
+                            decode until EVERY request in it finishes, then
+                            refill (the old ``launch/serve.py`` loop).
+  * ``continuous``        — continuous batching (join/evict per step), but
+                            planned ONCE for the initial mix: the plan goes
+                            stale as the mix drifts.
+  * ``continuous_replan`` — continuous batching + the full dynamicity
+                            machinery: every mix shift replans through
+                            ``session.signal`` / the PlanCache.
+
+Reported per policy: throughput at equal output tokens, p50/p99 request
+latency, decode steps, replan counts/modes, planner wall time, and the
+plan-cache stats.  Expected shape: continuous > static on throughput
+(slots refill instead of draining), and continuous_replan ≈ continuous on
+wall time (replans are cache hits / incremental and happen off the decode
+fast path) while keeping the plan fresh (``planned_makespan_ms`` tracks
+the mix instead of the stale initial estimate).
+
+A warmup pass over the same trace pre-compiles the jitted prefill/decode
+executables (shared per served model) and pre-warms each policy's
+PlanCache, so the measured window is steady-state serving, not XLA
+compile time.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.config import default_sharding, get_arch, reduced
+from repro.core.plancache import PlanCache
+from repro.models import build_model
+from repro.serving import Request, ServingConfig, ServingSession
+
+ARCH = "qwen3-0.6b"
+SLOTS = 4
+CACHE_LEN = 96
+
+#: (family, prompt_len, gen_len, arrival_step) — phase A is short-prompt
+#: chat traffic with strongly mixed gen lengths (static pays the max of
+#: every group while short requests sit finished in their slots), phase B
+#: shifts the mix to long-prompt code traffic, phase C returns to chat.
+TRACE: List = (
+    [("chat", 12, 6 if i % 2 else 30, float(i)) for i in range(12)]
+    + [("code", 40, 8 if i % 2 else 24, 20.0 + i) for i in range(8)]
+    + [("chat", 12, 12, 40.0 + i) for i in range(6)]
+)
+SMOKE_TRACE: List = (
+    [("chat", 12, 4 if i % 2 else 12, float(i)) for i in range(6)]
+    + [("code", 40, 3 if i % 2 else 8, 8.0 + i) for i in range(3)]
+)
+
+POLICIES = (
+    ("static", "static", "off"),
+    ("continuous", "continuous", "initial"),
+    ("continuous_replan", "continuous", "mix"),
+)
+
+
+def _requests(model, trace) -> List[Request]:
+    rng = jax.random.PRNGKey(11)
+    reqs = []
+    for rid, (family, p, g, arrival) in enumerate(trace):
+        toks = jax.random.randint(
+            jax.random.fold_in(rng, rid), (p,), 0, model.cfg.vocab
+        )
+        reqs.append(
+            Request(
+                rid=rid, tokens=toks, max_new_tokens=g, family=family,
+                arrival=arrival,
+            )
+        )
+    return reqs
+
+
+def _serve(model, params, trace, *, admission, replan, plan_cache):
+    session = ServingSession(
+        ServingConfig(
+            arch=ARCH,
+            max_slots=SLOTS,
+            cache_len=CACHE_LEN,
+            admission=admission,
+            replan=replan,
+        ),
+        model=model,
+        params=params,
+        plan_cache=plan_cache,
+    )
+    t0 = time.perf_counter()
+    session.run(_requests(model, trace), max_steps=5000)
+    return session, session.metrics(time.perf_counter() - t0)
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    trace = SMOKE_TRACE if smoke else TRACE
+    cfg = reduced(get_arch(ARCH))
+    model = build_model(cfg, default_sharding(cfg))
+    params = model.init(jax.random.PRNGKey(0))
+
+    reps = 2 if smoke else 4
+    caches = {p: PlanCache(maxsize=64) for p, _, _ in POLICIES}
+    # warmup: compile prefill/decode, pre-plan each policy's mixes
+    for policy, admission, replan in POLICIES:
+        _serve(model, params, trace,
+               admission=admission, replan=replan,
+               plan_cache=caches[policy])
+    # best-of-reps, reps INTERLEAVED across policies: background load on a
+    # shared CPU drifts on a timescale of minutes, so measuring policies in
+    # separate windows would compare different machines — interleaving puts
+    # every policy in every load epoch and min() picks the quiet one
+    best: Dict[str, tuple] = {}
+    for _ in range(reps):
+        for policy, admission, replan in POLICIES:
+            session, m = _serve(model, params, trace,
+                                admission=admission, replan=replan,
+                                plan_cache=caches[policy])
+            if (policy not in best
+                    or m["busy_seconds"] < best[policy][1]["busy_seconds"]):
+                best[policy] = (session, m)
+    rows: List[Dict] = []
+    for policy, admission, replan in POLICIES:
+        session, m = best[policy]
+        rows.append(
+            {
+                "policy": policy,
+                "admission": admission,
+                "replan": replan,
+                "arch": ARCH,
+                "slots": SLOTS,
+                "requests": m["requests"],
+                "output_tokens": m["output_tokens"],
+                "decode_steps": m["decode_steps"],
+                "wall_seconds": m["wall_seconds"],
+                "busy_seconds": m["busy_seconds"],
+                "throughput_tok_s": m["throughput_tok_s"],
+                "p50_latency_s": m["p50_latency_s"],
+                "p99_latency_s": m["p99_latency_s"],
+                "replans": m["replans"],
+                "replan_modes": ",".join(m["replan_modes"]),
+                "planning_seconds": m["planning_seconds"],
+                "planned_makespan_ms": m.get("planned_makespan_ms", 0.0),
+                "cache": m.get("cache", {}),
+            }
+        )
+    return rows
+
+
+def main(rows=None) -> None:
+    rows = rows if rows is not None else run()
+    by = {r["policy"]: r for r in rows}
+    print(f"{'policy':<18} {'tok':>5} {'steps':>6} {'tok/s':>8} "
+          f"{'p50 ms':>8} {'p99 ms':>8} {'replans':>8} {'plan s':>7}")
+    for r in rows:
+        print(
+            f"{r['policy']:<18} {r['output_tokens']:>5} "
+            f"{r['decode_steps']:>6} {r['throughput_tok_s']:>8.0f} "
+            f"{r['p50_latency_s']*1e3:>8.1f} {r['p99_latency_s']*1e3:>8.1f} "
+            f"{r['replans']:>8} {r['planning_seconds']:>7.3f}"
+        )
+    st, ct = by.get("static"), by.get("continuous")
+    cr = by.get("continuous_replan")
+    if st and ct:
+        print("continuous vs static throughput: "
+              f"{ct['throughput_tok_s'] / max(st['throughput_tok_s'], 1e-9):.2f}x "
+              f"({ct['decode_steps']} vs {st['decode_steps']} decode steps)")
+    if ct and cr:
+        print("replan vs stale-plan throughput: "
+              f"{cr['throughput_tok_s'] / max(ct['throughput_tok_s'], 1e-9):.2f}x "
+              f"(replan overhead {cr['planning_seconds']*1e3:.1f} ms, "
+              f"modes: {cr['replan_modes']})")
+
+
+if __name__ == "__main__":
+    main()

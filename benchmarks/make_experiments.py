@@ -10,7 +10,7 @@ import json
 import sys
 from typing import Dict, List
 
-from .roofline import analyze_records, PEAK, HBM, ICI
+from .roofline import analyze_records
 
 
 def md_roofline(rows: List[Dict], mesh: str, caption: str) -> str:

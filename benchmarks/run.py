@@ -7,9 +7,9 @@ Besides the aggregate ``--json`` dump, every bench writes a
 machine-readable ``BENCH_<name>.json`` at the repo root
 (schema: ``{"bench": ..., "rows": [...], "seconds": ...}``) so the perf
 trajectory is tracked across PRs.  ``--smoke`` runs the quick subset
-(dynamicity + planner_cost) on reduced grids, writing its BENCH files to a
-temp dir so the committed trajectories are never clobbered;
-``--check-keys`` diffs the
+(dynamicity + planner_cost + serving) on reduced grids, writing its BENCH
+files to a temp dir — or ``--out-dir`` (the CI artifact path) — so the
+committed trajectories are never clobbered; ``--check-keys`` diffs the
 regenerated rows' metric keys against the committed trajectory files and
 fails if any committed metric went missing.
 """
@@ -35,6 +35,7 @@ from . import (
     bench_kernels,
     bench_optimality,
     bench_planner_cost,
+    bench_serving,
     roofline,
 )
 
@@ -46,12 +47,13 @@ BENCHES = {
     "planner_cost": bench_planner_cost,   # Fig. 12
     "estimator": bench_estimator,         # Fig. 4
     "dynamicity": bench_dynamicity,       # Appendix D analogue
+    "serving": bench_serving,             # continuous batching + replan
     "kernels": bench_kernels,             # substrate
 }
 
 
 #: quick subset exercised by the CI benchmark smoke job
-SMOKE_BENCHES = ("dynamicity", "planner_cost")
+SMOKE_BENCHES = ("dynamicity", "planner_cost", "serving")
 
 
 def write_bench_json(name: str, rows, seconds: float,
@@ -98,11 +100,15 @@ def main() -> None:
     ap.add_argument("--json", default="bench_results.json")
     ap.add_argument("--dryrun-records", default="dryrun_records.json")
     ap.add_argument("--smoke", action="store_true",
-                    help="quick subset (dynamicity + planner_cost) on "
-                         "reduced grids")
+                    help="quick subset (dynamicity + planner_cost + "
+                         "serving) on reduced grids")
     ap.add_argument("--check-keys", action="store_true",
                     help="fail when regenerated rows drop metric keys "
                          "present in the committed BENCH_<name>.json")
+    ap.add_argument("--out-dir", default=None,
+                    help="directory for the BENCH_<name>.json files "
+                         "(default: repo root; --smoke: a temp dir) — CI "
+                         "points this at its artifact upload path")
     args = ap.parse_args()
 
     all_rows = []
@@ -114,10 +120,13 @@ def main() -> None:
         names = list(BENCHES)
     # smoke rows are reduced-grid: never clobber the committed trajectory
     # files — the key diff still runs against the committed baselines
-    out_dir = (
-        pathlib.Path(tempfile.mkdtemp(prefix="bench_smoke_"))
-        if args.smoke else REPO_ROOT
-    )
+    if args.out_dir:
+        out_dir = pathlib.Path(args.out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+    elif args.smoke:
+        out_dir = pathlib.Path(tempfile.mkdtemp(prefix="bench_smoke_"))
+    else:
+        out_dir = REPO_ROOT
     missing: dict = {}
     for name in names:
         mod = BENCHES[name]

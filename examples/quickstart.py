@@ -5,18 +5,23 @@ synthetic data → AdamW → checkpointing → loss curve — plus the planning
 entry point: a plan-only :class:`repro.session.SpindleSession` previews
 the wavefront plan a multi-task workload would execute (the same lifecycle
 API `train.py --plan-workload`, `dryrun.py --plan`, and the full
-MT demo in ``wavefront_mt_training.py`` are shells over; DESIGN.md §10).
+MT demo in ``wavefront_mt_training.py`` are shells over; DESIGN.md §10) —
+and the serving side: a queue-driven :class:`repro.serving.ServingSession`
+continuously batches requests and replans per mix shift (DESIGN.md §11;
+``launch/serve.py`` is the CLI shell).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import dataclasses
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.config import get_arch, reduced
+import jax
+
+from repro.config import get_arch
 from repro.launch.train import train
+from repro.serving import Request, ServingConfig, ServingSession
 from repro.session import SessionConfig, SpindleSession
 
 
@@ -27,6 +32,26 @@ def main() -> None:
     p = session.plan()
     print(f"multitask_clip plan: {len(p.waves())} waves / {len(p.steps)} "
           f"steps, makespan {p.makespan*1e3:.1f} ms/iter")
+
+    # the serving side: submit requests to a queue; the session joins them
+    # into the continuous decode batch, evicts on completion, and replans
+    # through the same PlanCache whenever the request mix shifts
+    serving = ServingSession(
+        ServingConfig(arch="qwen3-0.6b", max_slots=4, cache_len=32)
+    )
+    rng = jax.random.PRNGKey(0)
+    for rid in range(6):
+        prompt = jax.random.randint(
+            jax.random.fold_in(rng, rid), (8,), 0, serving.model.cfg.vocab
+        )
+        serving.submit(Request(rid=rid, tokens=prompt, max_new_tokens=6,
+                               family="chat" if rid < 4 else "code"))
+    while serving.busy:
+        serving.step()
+    m = serving.metrics()
+    print(f"served {m['requests']} requests ({m['output_tokens']} tokens) in "
+          f"{m['decode_steps']} decode steps; {m['replans']} replans "
+          f"{m['replan_modes']}")
 
     # a ~100M-class config: qwen3-0.6b reduced in depth/width but real vocab
     base = get_arch("qwen3-0.6b")

@@ -1,5 +1,6 @@
 """Serve three architecture families through one API: attention KV caches,
-recurrent O(1) state, and encoder-decoder cross-attention memory.
+recurrent O(1) state, and encoder-decoder cross-attention memory — all via
+the queue-driven continuous-batching ServingSession (DESIGN.md §11).
 
     PYTHONPATH=src python examples/serve_multiarch.py
 """

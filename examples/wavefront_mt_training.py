@@ -84,7 +84,7 @@ def main() -> None:
 
     seq = simulate_sequential(session.model.graph, cluster)
     sp = simulate_plan(p, cluster)
-    print(f"  analytic speedup vs sequential: "
+    print("  analytic speedup vs sequential: "
           f"{seq.makespan / sp.makespan:.2f}x  "
           f"(utilization {seq.avg_flops_utilization:.2f} → "
           f"{sp.avg_flops_utilization:.2f})")

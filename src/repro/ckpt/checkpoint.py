@@ -25,7 +25,6 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d{9})$")

@@ -8,10 +8,10 @@ This is the restart path for node failures (shrink) and elastic scale-up.
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 
 def restore_to_mesh(tree, shardings) -> Any:

@@ -9,9 +9,8 @@ hashed into jit cache keys and serialized into checkpoints/manifests.
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, List, Tuple
 
 # ---------------------------------------------------------------------------
 # Architecture

@@ -26,10 +26,10 @@ Per MetaLevel (MetaOps ``Ṽ_M``, cluster of ``N`` devices):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .contraction import MetaGraph, MetaOp
+from .contraction import MetaOp
 from .estimator import (
     ParallelConfig,
     ScalabilityEstimator,
@@ -211,7 +211,6 @@ def discretize(
     else:
         l_hi_f = (c_star - t_lo * m.L) / denom
     l_hi_f = min(max(l_hi_f, 0.0), float(m.L))
-    l_lo_f = m.L - l_hi_f
 
     l_hi = int(round(l_hi_f))
     l_lo = m.L - l_hi  # keep (10a) exact under rounding

@@ -16,9 +16,9 @@ independent (§3.1 "Disentangling MetaOp Dependency with MetaLevels").
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Set
 
-from .graph import OpNode, OpWorkload, TaskGraph
+from .graph import OpWorkload, TaskGraph
 
 
 @dataclass

@@ -32,7 +32,6 @@ are exposed (they sit on the critical path between layer halves).
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 from .contraction import MetaOp

@@ -17,8 +17,8 @@ input_size) for graph contraction to fuse identical chains into MetaOps.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field, replace
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Set
 
 
 @dataclass(frozen=True)

@@ -16,12 +16,11 @@ with the paper's three guidelines:
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Set, Tuple
 
 from .contraction import MetaGraph, MetaOp
-from .scheduler import Schedule, Wave, WaveEntry
+from .scheduler import Schedule, WaveEntry
 
 
 @dataclass(frozen=True)

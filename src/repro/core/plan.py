@@ -12,7 +12,7 @@ flattens any (MetaGraph, Schedule, Placement) triple into concrete steps.
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from .contraction import MetaGraph

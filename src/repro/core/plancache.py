@@ -29,7 +29,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .allocator import ASLTuple, LevelAllocation
-from .contraction import MetaGraph, MetaOp, contract
+from .contraction import MetaOp, contract
 from .costmodel import HardwareSpec, V5E
 from .estimator import ScalingCurve, TimeFn
 from .graph import TaskGraph
@@ -278,11 +278,14 @@ class PlanCache:
         hw: HardwareSpec = V5E,
         placement_strategy: str = "spindle",
         profile_powers_of_two: bool = True,
+        incremental: bool = True,
     ) -> ExecutionPlan:
         """Plan ``graph`` through this cache: exact signature hit → stored
         plan; near miss → incremental replan; otherwise a full plan is built
         and stored.  The method form of :func:`plan_cached` — the session
-        layer's single planning entry point."""
+        layer's single planning entry point.  ``incremental=False`` forces
+        a full replan on a signature miss (structural workload shifts — a
+        new serving family, say — where nothing is worth reusing)."""
         return plan_cached(
             graph,
             cluster,
@@ -292,6 +295,7 @@ class PlanCache:
             hw=hw,
             placement_strategy=placement_strategy,
             profile_powers_of_two=profile_powers_of_two,
+            incremental=incremental,
         )
 
 
@@ -359,10 +363,12 @@ def plan_cached(
     hw: HardwareSpec = V5E,
     placement_strategy: str = "spindle",
     profile_powers_of_two: bool = True,
+    incremental: bool = True,
 ) -> ExecutionPlan:
     """Plan through the cache: exact hit → stored plan; otherwise replan
     incrementally against the nearest cached plan (spindle pipeline only),
-    falling back to a full replan whenever validation fails."""
+    falling back to a full replan whenever validation fails.
+    ``incremental=False`` skips the base lookup entirely (full plan)."""
     sig = workload_signature(
         graph, cluster, planner=planner, hw=hw,
         placement_strategy=placement_strategy,
@@ -390,10 +396,13 @@ def plan_cached(
         time_fn=time_fn,
     )
 
-    base = cache.latest(planner, cluster.n_devices, hw,
-                        placement_strategy=placement_strategy,
-                        profile_powers_of_two=profile_powers_of_two,
-                        time_fn=time_fn)
+    base = (
+        cache.latest(planner, cluster.n_devices, hw,
+                     placement_strategy=placement_strategy,
+                     profile_powers_of_two=profile_powers_of_two,
+                     time_fn=time_fn)
+        if incremental else None
+    )
     if planner != "spindle" or base is None:
         p = pipe.plan(graph, cluster, hw=hw, time_fn=time_fn)
         p.signature = sig

@@ -23,9 +23,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
-from .allocator import ASLTuple, LevelAllocation, allocate_level
+from .allocator import LevelAllocation, allocate_level
 from .contraction import MetaGraph, MetaOp
 from .estimator import ScalabilityEstimator, best_config, valid_allocations
 

@@ -19,8 +19,8 @@ simulator and ``plan(..., planner=...)`` share one code path:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
 
 from .costmodel import HardwareSpec, V5E
 from .graph import TaskGraph

@@ -315,6 +315,111 @@ def mt_backbone_suite(batch_per_task: int = 8) -> TaskGraph:
     return gb.build()
 
 
+# ---------------------------------------------------------------------------
+# Serving mixes — the live request mix of a ServingSession as a TaskGraph
+# ---------------------------------------------------------------------------
+
+#: default tower used for families without an explicit spec (a ~1B-class LM)
+DEFAULT_SERVING_TOWER = TowerSpec("lm", 12, 1024, 4096, 16, 128)
+
+
+def serving_mix_workload(
+    mix: Sequence[Tuple[str, int, int]],
+    *,
+    tower: Optional[TowerSpec] = None,
+    towers: Optional[Dict[str, TowerSpec]] = None,
+) -> TaskGraph:
+    """The active request mix of a serving session as a planner TaskGraph.
+
+    ``mix`` is a sequence of ``(family, prompt_bucket, count)`` triples —
+    the bucketized mix a :class:`repro.serving.mix.MixTracker` snapshots.
+    Each triple becomes one task flow: a per-family **prefill** component
+    processing ``count`` prompts of ``prompt_bucket`` tokens (inference
+    workload, no backward), joined by ONE merged **decode** component over
+    the union batch at seq 1 (all active slots decode together — the
+    continuous-batching barrier, exactly ``merge_shared`` semantics).
+
+    Families key heterogeneity: a NEW family adds a component and reshapes
+    every MetaLevel (incremental reuse finds nothing to keep — a full
+    replan), while a count/bucket drift inside known families only changes
+    batch sizes, which the incremental path replans level-by-level.
+
+    ``tower`` sizes every family (the served model); per-family overrides go
+    in ``towers``.  The workload signature (and hence PlanCache identity)
+    falls out of :func:`repro.core.plancache.workload_signature` as usual.
+    """
+    mix = [(f, b, c) for f, b, c in mix if c > 0]
+    if not mix:
+        raise ValueError("serving mix is empty: nothing to plan")
+    base = tower or DEFAULT_SERVING_TOWER
+    fam_tower = dict(towers or {})
+    families = sorted({f for f, _, _ in mix})
+
+    comps: List[ComponentSpec] = []
+    for fam in families:
+        t = fam_tower.get(fam, base)
+
+        def prefill_wl(batch: int, seq: int, t=t) -> OpWorkload:
+            return transformer_layer_workload(
+                t.d_model, t.d_ff, t.n_heads, batch, seq or t.seq,
+                training=False,
+            )
+
+        comps.append(
+            ComponentSpec(
+                name=f"{fam}_prefill",
+                n_layers=t.n_layers,
+                op_type=f"prefill[{t.d_model}x{t.d_ff}]",
+                workload_fn=prefill_wl,
+                shared=True,
+                merge_shared=False,
+                max_tp=min(t.n_heads, 8),
+            )
+        )
+
+    def decode_wl(batch: int, seq: int) -> OpWorkload:
+        return transformer_layer_workload(
+            base.d_model, base.d_ff, base.n_heads, batch, max(seq, 1),
+            training=False,
+        )
+
+    comps.append(
+        ComponentSpec(
+            name="decode",
+            n_layers=base.n_layers,
+            op_type=f"decode[{base.d_model}x{base.d_ff}]",
+            workload_fn=decode_wl,
+            shared=True,
+            merge_shared=True,  # union batch: all slots step together
+            max_tp=min(base.n_heads, 8),
+        )
+    )
+
+    gb = GraphBuilder(comps)
+    for fam, bucket, count in sorted(mix):
+        gb.add_flow(
+            FlowSpec(
+                task=f"{fam}:p{bucket}",
+                branches=[[f"{fam}_prefill"]],
+                join=["decode"],
+                batch_size=count,
+                seq_lens={f"{fam}_prefill": bucket, "decode": 1},
+            )
+        )
+    return gb.build()
+
+
+def serving_default_mix() -> TaskGraph:
+    """A representative serving mix (plan-only demos)."""
+    return serving_mix_workload(
+        [("chat", 32, 8), ("chat", 128, 4), ("code", 256, 2)]
+    )
+
+
+# NOTE: serving mixes are parameterized per live request mix (the
+# ServingSession builds them through a graph_factory) and deliberately NOT
+# registered in WORKLOADS — that registry is the paper's fixed training
+# evaluation suite (several tests assert properties over every entry).
 WORKLOADS = {
     "multitask_clip": multitask_clip,
     "ofasys": ofasys,

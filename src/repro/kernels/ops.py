@@ -13,7 +13,6 @@ import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from .flash_attention import flash_attention as _flash
 from .moe_gmm import grouped_matmul as _gmm

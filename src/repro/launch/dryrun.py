@@ -189,7 +189,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
             print(f"  hlo flops/dev:  {rec['hlo_flops']:.3e}  "
                   f"(cost_analysis: {rec['cost'].get('flops', 0):.3e})")
             print(f"  hlo bytes/dev:  {rec['hlo_bytes']:.3e}")
-            print(f"  collectives: "
+            print("  collectives: "
                   f"{ {k: v for k, v in rec['collectives'].items() if v} }")
     except Exception as e:  # noqa: BLE001 — record and continue
         rec["ok"] = False

@@ -10,18 +10,24 @@ training drivers.  This module defines them:
     :class:`repro.core.plancache.PlanCache` and rebinds the engine.
   * :class:`StragglerDetected` — slow hosts were flagged; the session
     replans (optionally against a shrunken cluster) without restarting.
+  * :class:`RequestArrived` / :class:`RequestCompleted` — the *serving*
+    workload shifted (an inference request was admitted or finished); the
+    :class:`repro.serving.session.ServingSession` maps the active request
+    mix to a planner workload signature and replans when the mix drifts.
 
 Event *sources* are pollable producers the session drains once per training
 step (:class:`EventSource` protocol).  :class:`StragglerEventSource` wraps
 :class:`repro.ckpt.straggler.StragglerDetector` so straggler detection is
 no longer an inline consumer inside ``launch/train.py`` — the driver only
 records step times; the session polls and reacts.
+:class:`RequestQueueSource` does the same for serving: the request queue
+and batcher only note admissions/evictions; the session polls and replans.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Protocol, Tuple, runtime_checkable
+from typing import Any, List, Protocol, Tuple, runtime_checkable
 
 from ..ckpt.straggler import StragglerDetector
 
@@ -62,7 +68,33 @@ class StragglerDetected(Event):
     kind = "straggler"
 
 
-EVENT_KINDS = ("task_arrived", "task_completed", "straggler")
+@dataclass(frozen=True)
+class RequestArrived(Event):
+    """An inference request was admitted into the serving queue."""
+
+    rid: int
+    family: str = "text"
+    prompt_len: int = 0
+    kind = "request_arrived"
+
+
+@dataclass(frozen=True)
+class RequestCompleted(Event):
+    """An inference request finished decoding and left its batch slot."""
+
+    rid: int
+    family: str = "text"
+    generated: int = 0
+    kind = "request_completed"
+
+
+EVENT_KINDS = (
+    "task_arrived",
+    "task_completed",
+    "straggler",
+    "request_arrived",
+    "request_completed",
+)
 
 
 # --------------------------------------------------------------------------
@@ -104,6 +136,23 @@ class StragglerEventSource:
             self._last_flagged = hosts
             return [StragglerDetected(hosts)]
         return []
+
+
+@dataclass
+class RequestQueueSource:
+    """Serving request lifecycle as a session event source.
+
+    Wraps a :class:`repro.serving.queue.RequestQueue` (duck-typed: anything
+    with ``drain_events() -> List[Event]``).  The queue *notes* one
+    :class:`RequestArrived` per admission and the serving session notes one
+    :class:`RequestCompleted` per eviction; ``poll`` drains the accumulated
+    burst so a whole admission/eviction cycle coalesces into ONE replan
+    (exactly like a phase shift arriving as a burst of task events)."""
+
+    queue: Any  # repro.serving.queue.RequestQueue (avoids an import cycle)
+
+    def poll(self) -> List[Event]:
+        return self.queue.drain_events()
 
 
 @dataclass

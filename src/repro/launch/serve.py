@@ -1,25 +1,69 @@
-"""Batched serving driver: continuous prefill + decode over a request queue.
+"""Serving driver: a thin shell over the queue-driven ServingSession.
 
-Demonstrates the inference path of every arch family (KV caches for attn,
-recurrent states for ssm/hybrid, cross-attention memories for enc-dec):
-requests arrive with prompts, are prefilled in batches, then decode steps
-run the whole active batch one token at a time (static-batch serving).
+Requests are submitted to a :class:`repro.serving.ServingSession` — a
+request queue with admission control, **continuous batching** (arriving
+requests are prefilled and paged into free batch slots while the rest of
+the batch keeps decoding; finished requests are evicted and their slots
+reclaimed), and replanning through the Spindle lifecycle: the active
+request mix is bucketized into a workload signature, planned through the
+``PlanCache``, and replanned via ``session.signal`` whenever the mix
+drifts (DESIGN.md §11).  Every arch family serves through the same path
+(KV caches for attn, recurrent states for ssm/hybrid, cross-attention
+memories for enc-dec).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --reduced \
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
         --requests 8 --prompt-len 32 --gen-len 16
+
+``--static`` switches admission to classic drain-then-refill batching and
+``--no-replan`` serves on the initial plan only (the two baselines
+``benchmarks/bench_serving.py`` measures against).  Exits non-zero when no
+output tokens were generated (the CI serve-smoke contract).
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..config import default_sharding, get_arch, reduced
-from ..models import build_model
+from ..config import get_arch
+from ..serving import Request, ServingConfig, ServingSession
+
+
+def _build_requests(session: ServingSession, *, n_requests: int,
+                    prompt_len: int, gen_len: int, seed: int,
+                    arrival_every: float) -> list:
+    cfg = session.model.cfg
+    rng = jax.random.PRNGKey(seed + 1)
+    reqs = []
+    for i in range(n_requests):
+        key = jax.random.fold_in(rng, i)
+        toks = jax.random.randint(key, (prompt_len,), 0, cfg.vocab)
+        extras: Dict[str, Any] = {}
+        if cfg.is_encdec:
+            extras["frames"] = jax.random.normal(
+                jax.random.fold_in(key, 1),
+                (session.batcher.enc_len, cfg.d_model),
+            )
+        elif cfg.family == "vlm":
+            P = min(cfg.frontend_stub_len, 8)
+            extras["embeds"] = jax.random.normal(
+                jax.random.fold_in(key, 2), (P, cfg.d_model)
+            )
+        reqs.append(
+            Request(
+                rid=i,
+                tokens=toks,
+                max_new_tokens=gen_len,
+                arrival=i * arrival_every,
+                extras=extras,
+            )
+        )
+    return reqs
 
 
 def serve(
@@ -30,66 +74,56 @@ def serve(
     prompt_len: int = 32,
     gen_len: int = 16,
     seed: int = 0,
-    greedy: bool = True,
     verbose: bool = True,
+    max_slots: Optional[int] = None,
+    admission: str = "continuous",
+    replan: str = "mix",
+    arrival_every: float = 0.0,
 ) -> Dict[str, Any]:
-    cfg = get_arch(arch)
-    if reduced_cfg:
-        cfg = reduced(cfg)
-    model = build_model(cfg, default_sharding(cfg))
-    params = model.init(jax.random.PRNGKey(seed))
-
-    rng = jax.random.PRNGKey(seed + 1)
-    cache_len = prompt_len + gen_len
-    B = n_requests
-    prompts = jax.random.randint(rng, (B, prompt_len), 0, cfg.vocab)
-    batch: Dict[str, Any] = {"tokens": prompts}
-    if cfg.is_encdec:
-        enc_len = max(prompt_len // 4, 1)
-        batch["frames"] = jax.random.normal(
-            jax.random.fold_in(rng, 1), (B, enc_len, cfg.d_model)
+    """Serve ``n_requests`` random prompts; returns tokens + metrics."""
+    cfg_full = get_arch(arch)
+    stub = min(cfg_full.frontend_stub_len, 8) if cfg_full.family == "vlm" else 0
+    cache_len = prompt_len + stub + gen_len
+    session = ServingSession(
+        ServingConfig(
+            arch=arch,
+            reduced_cfg=reduced_cfg,
+            seed=seed,
+            max_slots=max_slots or n_requests,
+            cache_len=cache_len,
+            enc_len=max(prompt_len // 4, 1),
+            admission=admission,
+            replan=replan,
         )
-    elif cfg.family == "vlm":
-        P = min(cfg.frontend_stub_len, 8)
-        batch["embeds"] = jax.random.normal(
-            jax.random.fold_in(rng, 2), (B, P, cfg.d_model)
-        )
-
-    t0 = time.perf_counter()
-    logits, cache = jax.jit(
-        lambda p, b: model.prefill(p, b, cache_len=cache_len)
-    )(params, batch)
-    t_prefill = time.perf_counter() - t0
-
-    decode = jax.jit(
-        lambda p, tok, cache, pos: model.decode_step(p, tok, cache, pos)
     )
-
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    prompt_total = prompt_len + (
-        batch.get("embeds").shape[1] if "embeds" in batch else 0
+    reqs = _build_requests(
+        session, n_requests=n_requests, prompt_len=prompt_len,
+        gen_len=gen_len, seed=seed, arrival_every=arrival_every,
     )
-    generated: List[jnp.ndarray] = [tok]
     t0 = time.perf_counter()
-    for i in range(gen_len - 1):
-        logits, cache = decode(params, tok, cache, prompt_total + i)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    out_tokens = jnp.stack(generated, axis=1)
+    metrics = session.run(reqs)
+    wall = time.perf_counter() - t0
+    # rejected (admission control) or cut-off requests have no result row
+    done = [session.results[r.rid].tokens for r in reqs
+            if r.rid in session.results]
+    out_tokens = (
+        jnp.asarray(done, jnp.int32)
+        if done else jnp.zeros((0, gen_len), jnp.int32)
+    )
     if verbose:
-        tps = B * (gen_len - 1) / max(t_decode, 1e-9)
-        print(f"[serve] {arch}: prefill {B}×{prompt_len} in {t_prefill*1e3:.1f} ms; "
-              f"decode {gen_len-1} steps at {tps:.0f} tok/s")
-        print(f"[serve] sample output tokens: {out_tokens[0][:12].tolist()}")
-    return {
-        "arch": arch,
-        "tokens": out_tokens,
-        "prefill_seconds": t_prefill,
-        "decode_seconds": t_decode,
-    }
+        b = session.batcher
+        tps = metrics["output_tokens"] / max(b.decode_seconds, 1e-9)
+        print(
+            f"[serve] {arch}: {metrics['requests']} requests "
+            f"({admission} batching, replan={replan}) in {wall*1e3:.0f} ms; "
+            f"{b.decode_steps} decode steps at {tps:.0f} tok/s; "
+            f"{metrics['replans']} replans {metrics['replan_modes']}"
+        )
+        sample = out_tokens[0][:12].tolist() if len(done) else []
+        print(f"[serve] generated {metrics['output_tokens']} tokens; "
+              f"sample: {sample}")
+    # metrics already carries prefill_seconds/decode_seconds from the batcher
+    return {"arch": arch, "tokens": out_tokens, **metrics}
 
 
 def main() -> None:
@@ -100,15 +134,30 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="batch slots (default: --requests)")
+    ap.add_argument("--arrival-every", type=float, default=0.0,
+                    help="stagger arrivals by N decode steps")
+    ap.add_argument("--static", action="store_true",
+                    help="classic drain-then-refill batching")
+    ap.add_argument("--no-replan", action="store_true",
+                    help="serve on the initial plan only")
     args = ap.parse_args()
-    serve(
+    out = serve(
         args.arch,
         reduced_cfg=args.reduced,
         n_requests=args.requests,
         prompt_len=args.prompt_len,
         gen_len=args.gen_len,
         seed=args.seed,
+        max_slots=args.slots or None,
+        admission="static" if args.static else "continuous",
+        replan="initial" if args.no_replan else "mix",
+        arrival_every=args.arrival_every,
     )
+    if out["output_tokens"] <= 0 or out["requests"] <= 0:
+        print("[serve] FAILED: no output tokens generated", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

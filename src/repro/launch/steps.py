@@ -16,7 +16,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -230,10 +230,12 @@ def lower_step(spec: StepSpec, mesh: Mesh):
     Train steps donate (params, opt_state) — the updated pytrees alias the
     inputs, halving the persistent-state HBM footprint; serve steps donate
     the cache for the same reason."""
-    to_shard = lambda tree: jax.tree.map(
-        lambda s: NamedSharding(mesh, s), tree,
-        is_leaf=lambda x: isinstance(x, P),
-    )
+    def to_shard(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
     donate = ()
     if spec.name == "train_step":
         donate = (0, 1)

@@ -36,20 +36,12 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from ..config import (
-    ShapeConfig,
-    ShardingConfig,
-    default_sharding,
-    get_arch,
-    reduced,
-)
+from ..config import default_sharding, get_arch, reduced
 from ..ckpt import CheckpointManager, StragglerDetector
 from ..data import DataConfig, SyntheticLM, shard_batch
 from ..models import build_model
 from ..optim import AdamW, warmup_cosine
-from ..parallel import ShardingRules, batch_axes, tree_param_specs
-from ..parallel.sharding import tree_batch_specs
-from .mesh import make_debug_mesh
+from ..parallel import batch_axes, tree_param_specs
 
 
 def plan_preview(
@@ -128,7 +120,6 @@ def _make_compressed_dp_step(model, optimizer, mesh):
     (int8 payload + shared max-scale) inside shard_map — 4× less gradient
     traffic than fp32 all-reduce, the cross-pod/DCN trick from DESIGN.md
     §8. The optimizer update runs on the synced grads (replicated math)."""
-    from functools import partial as _partial
 
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -273,7 +264,7 @@ def train(
         else:
             for ev in straggler_src.poll():
                 if verbose and ev.hosts:
-                    print(f"[train] stragglers detected: "
+                    print("[train] stragglers detected: "
                           f"{list(ev.hosts)} — re-plan trigger")
                 elif verbose:
                     print("[train] stragglers recovered")

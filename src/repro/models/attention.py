@@ -16,7 +16,6 @@ XLA inserts the partial-softmax collectives).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -302,18 +301,22 @@ def attn_decode(
     cross: bool = False,
     cross_len: Optional[jnp.ndarray] = None,
 ):
-    """One-token decode. x (B,1,d); cache_k/v (B, K, S, hd); pos scalar int.
+    """One-token decode. x (B,1,d); cache_k/v (B, K, S, hd); pos is a scalar
+    int or an (B,) int vector of **per-row** positions (continuous batching:
+    each batch slot serves a different request at its own depth).
 
     Returns (y, new_cache_k, new_cache_v).  For ``window>0`` the cache is a
     circular buffer of size ``window``.  ``cross=True`` treats the cache as a
     fixed encoder memory (no update; valid length ``cross_len``)."""
     B = x.shape[0]
     S = cache_k.shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = pos if pos.ndim else jnp.full((B,), pos)  # (B,) per-row positions
     q = _split_heads(x @ params["wq"], n_heads, head_dim)  # (B,1,H,hd)
     if qk_norm:
         q = rms_normalize(q)
     if rope_theta > 0 and not cross:
-        q = apply_rope(q, jnp.full((B, 1), pos), rope_theta)
+        q = apply_rope(q, pos_b[:, None], rope_theta)
 
     if not cross:
         k = _split_heads(x @ params["wk"], n_kv, head_dim)
@@ -321,32 +324,37 @@ def attn_decode(
         if qk_norm:
             k = rms_normalize(k)
         if rope_theta > 0:
-            k = apply_rope(k, jnp.full((B, 1), pos), rope_theta)
-        slot = pos % window if window > 0 else pos
-        # cache layout (B, K, S, hd)
-        cache_k = jax.lax.dynamic_update_slice_in_dim(
-            cache_k, k.transpose(0, 2, 1, 3).astype(cache_k.dtype), slot, axis=2
+            k = apply_rope(k, pos_b[:, None], rope_theta)
+        slot = pos_b % window if window > 0 else pos_b
+        # cache layout (B, K, S, hd); per-row scatter at each row's slot
+        def _row_update(c, u, s_):
+            return jax.lax.dynamic_update_slice_in_dim(c, u, s_, axis=1)
+
+        cache_k = jax.vmap(_row_update)(
+            cache_k, k.transpose(0, 2, 1, 3).astype(cache_k.dtype), slot
         )
-        cache_v = jax.lax.dynamic_update_slice_in_dim(
-            cache_v, v.transpose(0, 2, 1, 3).astype(cache_v.dtype), slot, axis=2
+        cache_v = jax.vmap(_row_update)(
+            cache_v, v.transpose(0, 2, 1, 3).astype(cache_v.dtype), slot
         )
 
-    # scores over the full cache with validity masking
+    # scores over the full cache with per-row validity masking
     rep = n_heads // cache_k.shape[1]
     kk = jnp.repeat(cache_k, rep, axis=1) if rep > 1 else cache_k  # (B,H,S,hd)
     vv = jnp.repeat(cache_v, rep, axis=1) if rep > 1 else cache_v
     s = jnp.einsum("bqhd,bhkd->bhqk", q, kk).astype(jnp.float32) / math.sqrt(head_dim)
     kpos = jnp.arange(S)
     if cross:
-        valid = kpos[None, :] < (
-            cross_len if cross_len is not None else jnp.asarray(S)
+        valid = jnp.broadcast_to(
+            kpos[None, :]
+            < (cross_len if cross_len is not None else jnp.asarray(S)),
+            (B, S),
         )
     elif window > 0:
         # circular buffer: slots hold the last min(pos+1, window) tokens
-        valid = kpos[None, :] < jnp.minimum(pos + 1, window)
+        valid = kpos[None, :] < jnp.minimum(pos_b + 1, window)[:, None]
     else:
-        valid = kpos[None, :] <= pos
-    s = jnp.where(valid[None, None], s, NEG_INF)
+        valid = kpos[None, :] <= pos_b[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bqhd", p.astype(vv.dtype), vv)
     y = out.reshape(B, 1, n_heads * head_dim) @ params["wo"]

@@ -14,7 +14,7 @@ memory" path of :func:`repro.models.attention.attn_decode`).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -214,7 +214,7 @@ class EncDecTransformer:
         }
 
     def decode_step(self, params, token, cache, pos, *, mesh=None):
-        """token: (B,) → (logits (B,V), new cache)."""
+        """token: (B,); pos scalar or (B,) per-row → (logits (B,V), cache)."""
         cfg = self.cfg
         cdt = dtype_of(cfg.compute_dtype)
         x = embed_lookup(params["tok_embed"], token).astype(cdt)[:, None, :]

@@ -8,11 +8,10 @@ Everything is functional: ``*_init(rng, ...) -> params dict`` and
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def dtype_of(name: str):

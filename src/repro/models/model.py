@@ -22,7 +22,7 @@ encoder stack.  Stub lengths: P = frontend_stub_len (vlm), S_enc = seq//4
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

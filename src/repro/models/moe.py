@@ -17,7 +17,6 @@ Shared experts (qwen2-moe) run as a dense SwiGLU on every token.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -124,8 +123,6 @@ def moe_apply(
     """MoE FFN on (B, S, d). Returns (out, aux_loss)."""
     m = cfg.moe
     B, S, d = x.shape
-    T = B * S
-    cap = max(int(T * m.top_k / m.n_experts * m.capacity_factor), m.top_k)
 
     def local_fn(x3d, router_w, wg, wu, wd, e_base_arr):
         x2d = x3d.reshape(-1, d)

@@ -17,7 +17,7 @@ the VPU, and provide a Pallas chunked-scan kernel for the RG-LRU hot loop
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -108,7 +108,6 @@ def conv1d_decode(params, x_t, buf):
     """One-token causal conv. x_t (B,d); buf (B, width-1, d) previous inputs.
     Returns (y_t (B,d), new_buf)."""
     w = params["w"]
-    width = w.shape[0]
     hist = jnp.concatenate([buf, x_t[:, None, :]], axis=1)  # (B, width, d)
     y = jnp.einsum("bwd,wd->bd", hist.astype(w.dtype), w)
     return y.astype(x_t.dtype), hist[:, 1:]

@@ -21,10 +21,8 @@ V≈152k, S≥4k (see ShardingConfig.logits_chunk).
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +33,6 @@ from . import recurrent as rec
 from .attention import attn_apply, attn_decode, attn_init
 from .layers import (
     cast_floats,
-    cross_entropy,
     dense_init,
     dtype_of,
     embed_init,
@@ -431,7 +428,8 @@ class Decoder:
 
     # --------------------------------------------------------------- decode
     def decode_step(self, params, x_t, cache, pos, *, mesh=None):
-        """x_t: (B,d); cache from init_cache/prefill; pos: scalar position."""
+        """x_t: (B,d); cache from init_cache/prefill; pos: scalar position
+        or (B,) per-row positions (continuous batching)."""
         cfg = self.cfg
         cdt = dtype_of(cfg.compute_dtype)
         new_rem = []
@@ -601,7 +599,8 @@ class Transformer:
         return self.decoder.init_cache(batch, cache_len, cache_dtype)
 
     def decode_step(self, params, token, cache, pos, *, mesh=None):
-        """token: (B,) int32; pos: scalar. Returns (logits (B,V), cache)."""
+        """token: (B,) int32; pos: scalar or (B,) per-row positions.
+        Returns (logits (B,V), cache)."""
         cdt = dtype_of(self.cfg.compute_dtype)
         x = embed_lookup(params["tok_embed"], token).astype(cdt)
         x, cache = self.decoder.decode_step(params, x, cache, pos, mesh=mesh)

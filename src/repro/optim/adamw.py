@@ -9,8 +9,8 @@ casing.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,9 @@ class AdamW:
 
     # ------------------------------------------------------------------
     def init(self, params) -> "OptState":
-        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        def zeros(p):
+            return jnp.zeros(p.shape, self.moment_dtype)
+
         return OptState(
             mu=jax.tree.map(zeros, params),
             nu=jax.tree.map(zeros, params),

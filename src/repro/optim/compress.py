@@ -11,7 +11,7 @@ sync for groups spanning islands.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

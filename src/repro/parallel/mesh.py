@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 
 POD = "pod"
 DATA = "data"

@@ -16,9 +16,8 @@ Layout summary (MaxText-style):
 
 from __future__ import annotations
 
-import re
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np
@@ -79,7 +78,8 @@ class ShardingRules:
         def set_dim(i: int, axes) -> None:
             spec[stacked + i] = axes if not isinstance(axes, tuple) else axes
 
-        model_ok = lambda i: self._fits(dims[i], MODEL)
+        def model_ok(i: int) -> bool:
+            return self._fits(dims[i], MODEL)
 
         if leaf in ("tok_embed", "pos_embed"):
             # (vocab, d): vocab-parallel over model

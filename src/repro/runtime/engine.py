@@ -27,16 +27,14 @@ Numerical contract (tested): ``loss_and_grads`` ≡ ``jax.value_and_grad`` of
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.contraction import MetaOp
 from ..core.plan import ExecutionPlan, PlanStep
 from .mtmodel import ExecComponent, MTModel
 

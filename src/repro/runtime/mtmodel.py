@@ -27,15 +27,14 @@ contract the WaveEngine must match.
 
 from __future__ import annotations
 
-import itertools
 import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core.graph import ComponentSpec, FlowSpec, GraphBuilder, OpWorkload, TaskGraph
+from ..core.graph import ComponentSpec, FlowSpec, GraphBuilder, TaskGraph
 from ..core.workloads import transformer_layer_workload, loss_module_workload
 from ..models.attention import attn_apply, attn_init
 from ..models.layers import (

@@ -1,0 +1,35 @@
+"""Serving: continuous batching over a request queue, planned per mix.
+
+The serving counterpart of the training lifecycle (DESIGN.md §11):
+
+  * :mod:`repro.serving.queue`   — requests, admission control, the event
+    seam (``RequestArrived`` / ``RequestCompleted``).
+  * :mod:`repro.serving.batcher` — fixed-slot continuous batcher: per-slot
+    decode positions, KV/recurrent-state cache paging across join/evict.
+  * :mod:`repro.serving.mix`     — the live request mix bucketized into a
+    deterministic workload signature.
+  * :mod:`repro.serving.session` — :class:`ServingSession`: admit → decode
+    → evict → replan through a plan-only :class:`repro.session.
+    SpindleSession` whenever the mix signature drifts.
+"""
+
+from .batcher import ContinuousBatcher, SlotState, read_slot, write_slot
+from .mix import DEFAULT_PROMPT_BUCKETS, MixSnapshot, MixTracker, prompt_bucket
+from .queue import Request, RequestQueue
+from .session import RequestResult, ServingConfig, ServingSession
+
+__all__ = [
+    "ContinuousBatcher",
+    "SlotState",
+    "read_slot",
+    "write_slot",
+    "DEFAULT_PROMPT_BUCKETS",
+    "MixSnapshot",
+    "MixTracker",
+    "prompt_bucket",
+    "Request",
+    "RequestQueue",
+    "RequestResult",
+    "ServingConfig",
+    "ServingSession",
+]

@@ -1,0 +1,247 @@
+"""Continuous batcher: slot map + cache paging over one decode batch.
+
+The decode batch is a fixed array of ``max_slots`` rows (so the jitted
+decode step never retraces); each row is a **slot** holding one request's
+KV / recurrent / cross-attention state page.  Joining a request prefills
+it alone (batch 1, cache padded to the shared ``cache_len``) and pages the
+resulting cache into a free slot; evicting just frees the slot — stale
+rows are masked by the per-row position vector (attention validity is
+``kpos <= pos[row]``) and fully overwritten by the next join, so no copy
+is needed on eviction.
+
+Correctness contract (tested in ``tests/test_serving.py``): every per-row
+operation of the decode path is batch-independent, so a request decoded in
+a shared batch — joined late, neighbors evicted under it, slot reused —
+produces exactly the tokens it produces decoded alone.  (MoE archs violate
+row independence when capacity drops tokens across the union batch; serve
+those with a high capacity factor, as the decode-equivalence tests do.)
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .queue import Request
+
+
+def cache_batch_axes(cache):
+    """Pytree of per-leaf batch-axis indices for a decode cache.
+
+    Decoder-only caches are ``{"groups": ..., "rem": ...}`` — scan-stacked
+    group leaves carry a leading (G,) axis so batch is axis 1, remainder
+    layers batch at axis 0.  Encoder-decoder caches are flat (L, B, ...)
+    leaves — batch at axis 1.
+    """
+    if isinstance(cache, dict) and "rem" in cache:
+        return {
+            "groups": jax.tree.map(lambda _: 1, cache.get("groups")),
+            "rem": jax.tree.map(lambda _: 0, cache["rem"]),
+        }
+    return jax.tree.map(lambda _: 1, cache)
+
+
+def write_slot(cache, page, slot):
+    """Page a batch-1 request cache into ``cache`` at batch row ``slot``."""
+
+    def ins(dst, src, ax):
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis=ax
+        )
+
+    return jax.tree.map(ins, cache, page, cache_batch_axes(cache))
+
+
+def read_slot(cache, slot):
+    """The batch-1 cache page currently held at batch row ``slot``."""
+
+    def pick(x, ax):
+        return jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=ax)
+
+    return jax.tree.map(pick, cache, cache_batch_axes(cache))
+
+
+#: jitted (prefill, decode) per live (model, cache_len) — sessions over the
+#: same served model share compiled executables instead of retracing.
+#: Bounded LRU: the strong model ref pins id(model), so unbounded growth
+#: would leak every model (and its executables) ever served.
+_JIT_CACHE: "OrderedDict[Any, Any]" = OrderedDict()
+_JIT_CACHE_MAX = 8
+_WRITE_JIT = jax.jit(write_slot)
+
+
+def _model_fns(model, cache_len: int):
+    key = (id(model), cache_len)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = (
+            model,  # strong ref pins the id
+            jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len)),
+            jax.jit(lambda p, tok, cache, pos: model.decode_step(p, tok, cache, pos)),
+        )
+    _JIT_CACHE.move_to_end(key)
+    while len(_JIT_CACHE) > _JIT_CACHE_MAX:
+        _JIT_CACHE.popitem(last=False)
+    _, prefill, decode = _JIT_CACHE[key]
+    return prefill, decode
+
+
+@dataclass
+class SlotState:
+    """One occupied slot: the request plus its decode progress."""
+
+    req: Request
+    slot: int
+    prompt_total: int  # prompt tokens + stub positions (vlm embeds)
+    generated: List[int] = field(default_factory=list)
+    t_join: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.req.max_new_tokens:
+            return True
+        eos = self.req.eos_id
+        if not self.generated or eos is None:
+            return False
+        return self.generated[-1] == eos
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over one served model."""
+
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        max_slots: int = 8,
+        cache_len: int = 128,
+        enc_len: int = 0,
+        cache_dtype=jnp.bfloat16,
+    ):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self.enc_len = enc_len or max(cache_len // 4, 1)
+        self.cache = model.init_cache(
+            max_slots, cache_len, enc_len=self.enc_len, cache_dtype=cache_dtype
+        )
+        self.tokens = jnp.zeros((max_slots,), jnp.int32)
+        self.pos = jnp.zeros((max_slots,), jnp.int32)
+        self.slots: List[Optional[SlotState]] = [None] * max_slots
+        self._finished: List[SlotState] = []
+        self.decode_steps = 0
+        self.prefill_seconds = 0.0
+        self.decode_seconds = 0.0
+        self._prefill, self._decode = _model_fns(model, cache_len)
+        self._write = _WRITE_JIT
+
+    # ------------------------------------------------------------- occupancy
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    # ------------------------------------------------------------------ join
+    def validate(self, req: Request) -> None:
+        """Raise if ``req`` cannot fit a slot (better than the silent
+        corruption of decode positions clamping at the cache edge)."""
+        stub = 0
+        if "embeds" in req.extras:
+            stub = int(jnp.asarray(req.extras["embeds"]).shape[0])
+        need = req.prompt_len + stub + req.max_new_tokens - 1
+        if need > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({req.prompt_len}+{stub}) + "
+                f"{req.max_new_tokens} new tokens needs {need} cache "
+                f"positions > cache_len={self.cache_len}"
+            )
+        if "frames" in req.extras:
+            got = int(jnp.asarray(req.extras["frames"]).shape[0])
+            if got != self.enc_len:
+                raise ValueError(
+                    f"request {req.rid}: frames length {got} != batcher "
+                    f"enc_len {self.enc_len}"
+                )
+
+    def join(self, req: Request) -> int:
+        """Prefill ``req`` alone and page its cache into a free slot."""
+        self.validate(req)
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slot: admission outran eviction")
+        slot = free[0]
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(req.tokens)[None]}
+        for k, v in req.extras.items():
+            batch[k] = jnp.asarray(v)[None]
+        t0 = time.perf_counter()
+        logits, page = self._prefill(self.params, batch)
+        first = int(jnp.argmax(logits[0], axis=-1))
+        prompt_total = req.prompt_len + (
+            batch["embeds"].shape[1] if "embeds" in batch else 0
+        )
+        self.cache = self._write(self.cache, page, jnp.int32(slot))
+        self.tokens = self.tokens.at[slot].set(first)
+        self.pos = self.pos.at[slot].set(prompt_total)
+        self.prefill_seconds += time.perf_counter() - t0
+        state = SlotState(
+            req=req,
+            slot=slot,
+            prompt_total=prompt_total,
+            generated=[first],
+            t_join=time.perf_counter(),
+        )
+        self.slots[slot] = state
+        if state.done:  # max_new_tokens == 1 (or instant EOS)
+            self._evict(state)
+            self._finished.append(state)
+        return slot
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> List[SlotState]:
+        """Decode ONE token for every occupied slot; return evictions.
+
+        Free slots ride along as masked garbage rows (every per-row op of
+        the decode path is batch-independent, so they cannot perturb live
+        rows); their cache writes land at stale positions that the next
+        join overwrites.
+        """
+        finished, self._finished = self._finished, []
+        if self.n_active == 0:
+            return finished
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(
+            self.params, self.tokens, self.cache, self.pos
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        active = np.array([s is not None for s in self.slots], dtype=np.int32)
+        self.tokens = jnp.where(jnp.asarray(active, bool), next_tok, self.tokens)
+        self.pos = self.pos + jnp.asarray(active)
+        self.decode_steps += 1
+        toks = np.asarray(next_tok)
+        self.decode_seconds += time.perf_counter() - t0
+        for s in list(self.slots):
+            if s is None:
+                continue
+            s.generated.append(int(toks[s.slot]))
+            if s.done:
+                self._evict(s)
+                finished.append(s)
+        return finished
+
+    # ----------------------------------------------------------------- evict
+    def _evict(self, state: SlotState) -> None:
+        """Free the slot.  The cache page stays as-is: stale rows are dead
+        weight masked by ``pos`` until the next join overwrites them."""
+        state.t_done = time.perf_counter()
+        if self.slots[state.slot] is state:
+            self.slots[state.slot] = None

@@ -1,0 +1,90 @@
+"""Request queue with admission control for the serving session.
+
+Requests are the serving analogue of tasks: they arrive, occupy resources
+(a batch slot + a KV/state cache page), and leave.  The queue is the
+admission boundary — :meth:`RequestQueue.submit` rejects work beyond
+``max_pending`` so a traffic burst degrades to client backpressure instead
+of unbounded memory growth — and the event seam: every admission notes a
+:class:`repro.launch.events.RequestArrived` and every eviction a
+:class:`~repro.launch.events.RequestCompleted`, which
+:class:`repro.launch.events.RequestQueueSource` drains into the planning
+session once per serving step.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional
+
+from ..launch.events import Event, RequestArrived, RequestCompleted
+
+
+@dataclass
+class Request:
+    """One inference request.
+
+    ``tokens`` is the (P,) int32 prompt; encoder-decoder and VLM archs carry
+    their stub modality inputs ((S_enc, d) ``frames`` / (P_img, d)
+    ``embeds``) in ``extras`` — the batcher batchifies them at prefill.
+    ``family`` keys the request's workload class in the mix signature
+    (e.g. "chat" vs "code" traffic over the same served model).
+    """
+
+    rid: int
+    tokens: Any
+    max_new_tokens: int
+    family: str = "text"
+    arrival: float = 0.0
+    eos_id: Optional[int] = None
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[-1])
+
+
+class RequestQueue:
+    """FIFO pending queue + bounded admission + lifecycle event buffer."""
+
+    def __init__(self, max_pending: int = 1024):
+        self.max_pending = max_pending
+        self._pending: Deque[Request] = deque()
+        self._events: List[Event] = []
+        self.submitted = 0
+        self.rejected = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, req: Request) -> bool:
+        """Admit ``req`` (True) or reject it when the queue is full (False)."""
+        if len(self._pending) >= self.max_pending:
+            self.rejected += 1
+            return False
+        self._pending.append(req)
+        self.submitted += 1
+        self._events.append(
+            RequestArrived(rid=req.rid, family=req.family, prompt_len=req.prompt_len)
+        )
+        return True
+
+    def pop(self) -> Optional[Request]:
+        """Next pending request in arrival order (None when empty)."""
+        return self._pending.popleft() if self._pending else None
+
+    def peek(self) -> Optional[Request]:
+        return self._pending[0] if self._pending else None
+
+    def note_completion(self, req: Request, generated: int) -> None:
+        """Record a finished request (the serving session calls this on
+        eviction so completions reach the planner as events too)."""
+        self._events.append(
+            RequestCompleted(rid=req.rid, family=req.family, generated=generated)
+        )
+
+    def drain_events(self) -> List[Event]:
+        """Return-and-clear the buffered lifecycle events
+        (:class:`repro.launch.events.RequestQueueSource` calls this)."""
+        out, self._events = self._events, []
+        return out

@@ -1,0 +1,323 @@
+"""ServingSession — continuous batching planned through the Spindle lifecycle.
+
+Training got one plan → bind → execute → replan surface in
+:class:`repro.session.SpindleSession`; this is the serving counterpart,
+built ON it rather than beside it.  The serving loop is:
+
+    session = ServingSession(ServingConfig(arch="qwen3-0.6b"))
+    session.submit(Request(rid=0, tokens=prompt, max_new_tokens=16))
+    while session.busy:
+        session.step()       # admit → decode one token → evict → replan?
+    results = session.results
+
+Each ``step`` admits queued requests into free batch slots (prefill + cache
+page-in, :class:`repro.serving.batcher.ContinuousBatcher`), decodes one
+token for the whole active batch, evicts finished requests, and then drains
+the request lifecycle events (:class:`repro.launch.events.
+RequestQueueSource`).  When the bucketized **mix signature**
+(:class:`repro.serving.mix.MixTracker`) actually changed, the event burst
+is driven through the inner plan-only :class:`SpindleSession` via
+``signal_all`` — one coalesced replan per mix shift, planned through the
+:class:`repro.core.plancache.PlanCache`:
+
+  * an unchanged mix signature never reaches the planner at all,
+  * a recurring mix is an exact-signature cache **hit** (zero planning),
+  * a count/bucket drift inside known families replans **incrementally**
+    (memoized scaling curves, warm-started MPSP brackets),
+  * a NEW family is a structural shift: the session forces a **full**
+    replan (``SpindleSession.incremental = False`` for that turn).
+
+Replan policies: ``"mix"`` (the above), ``"initial"`` (plan the first
+non-empty mix, then serve on the stale plan — the ablation baseline), and
+``"off"`` (no planner, the static-batch baseline).  Admission policies:
+``"continuous"`` (join whenever a slot is free) and ``"static"`` (classic
+batch serving: wait until the whole batch drains, then refill).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.placement import ClusterSpec
+from ..launch.events import Event, RequestArrived, RequestQueueSource
+from ..session import ReplanRecord, SessionConfig, SpindleSession
+from .batcher import ContinuousBatcher, SlotState
+from .mix import DEFAULT_PROMPT_BUCKETS, MixTracker, tower_from_arch
+from .queue import Request, RequestQueue
+
+__all__ = ["ServingConfig", "ServingSession"]
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """Typed, immutable inputs of one serving session."""
+
+    arch: str = "qwen3-0.6b"
+    reduced_cfg: bool = True
+    seed: int = 0
+    # batching
+    max_slots: int = 8
+    cache_len: int = 128
+    enc_len: int = 0  # 0 → cache_len // 4 (enc-dec archs only)
+    cache_dtype: str = "bfloat16"
+    #: "continuous" (join as slots free) | "static" (drain-then-refill)
+    admission: str = "continuous"
+    max_pending: int = 1024
+    # planning
+    #: "mix" (replan on mix shifts) | "initial" (plan once, stale after)
+    #: | "off" (no planner at all)
+    replan: str = "mix"
+    planner: str = "spindle"
+    placement_strategy: str = "spindle"
+    cluster: ClusterSpec = ClusterSpec(n_devices=16, island_size=8, mem_bytes=96e9)
+    prompt_buckets: Tuple[int, ...] = DEFAULT_PROMPT_BUCKETS
+    quantize_counts: bool = True
+    cache_maxsize: int = 64
+
+    def __post_init__(self):
+        if self.admission not in ("continuous", "static"):
+            raise ValueError(f"unknown admission policy {self.admission!r}")
+        if self.replan not in ("mix", "initial", "off"):
+            raise ValueError(f"unknown replan policy {self.replan!r}")
+
+
+@dataclass
+class RequestResult:
+    """What one finished request produced."""
+
+    rid: int
+    family: str
+    tokens: List[int]
+    prompt_len: int
+    latency_seconds: float
+    queue_seconds: float  # submit → slot join (admission + queueing)
+
+
+class ServingSession:
+    """Continuous batching over a request queue, replanned per mix shift."""
+
+    def __init__(
+        self,
+        config: Optional[ServingConfig] = None,
+        *,
+        model: Any = None,
+        params: Any = None,
+        callbacks: Sequence[Any] = (),
+        plan_cache: Any = None,
+    ):
+        self.config = config or ServingConfig()
+        cfg = self.config
+        if model is None:
+            import jax
+
+            from ..config import default_sharding, get_arch, reduced
+
+            arch = get_arch(cfg.arch)
+            if cfg.reduced_cfg:
+                arch = reduced(arch)
+            from ..models import build_model
+
+            model = build_model(arch, default_sharding(arch))
+            if params is None:
+                params = model.init(jax.random.PRNGKey(cfg.seed))
+        elif params is None:
+            raise ValueError("passing model= also requires params=")
+        self.model = model
+        self.params = params
+        self.queue = RequestQueue(max_pending=cfg.max_pending)
+        self.source = RequestQueueSource(self.queue)
+        self.mix = MixTracker(
+            buckets=cfg.prompt_buckets, quantize_counts=cfg.quantize_counts
+        )
+        self.batcher = ContinuousBatcher(
+            model,
+            params,
+            max_slots=cfg.max_slots,
+            cache_len=cfg.cache_len,
+            enc_len=cfg.enc_len,
+            cache_dtype=jnp.dtype(cfg.cache_dtype),
+        )
+        self._tower = tower_from_arch(model.cfg, seq=cfg.cache_len)
+        self.planner_session: Optional[SpindleSession] = None
+        if cfg.replan != "off":
+            from ..core.workloads import serving_mix_workload
+
+            self.planner_session = SpindleSession(
+                SessionConfig(
+                    cluster=cfg.cluster,
+                    planner=cfg.planner,
+                    placement_strategy=cfg.placement_strategy,
+                    cache_maxsize=cfg.cache_maxsize,
+                    replan_on=("request_arrived", "request_completed"),
+                ),
+                graph_factory=lambda tasks: serving_mix_workload(
+                    self.mix.snapshot().counts, tower=self._tower
+                ),
+                callbacks=callbacks,
+                cache=plan_cache,
+            )
+        self._last_key: Optional[str] = None
+        self._last_families: Optional[Tuple[str, ...]] = None
+        self._event_buf: List[Event] = []
+        self._planned_once = False
+        self._t_submit: Dict[int, float] = {}
+        self.results: Dict[int, RequestResult] = {}
+        self.steps = 0
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def busy(self) -> bool:
+        return self.batcher.n_active > 0 or len(self.queue) > 0
+
+    @property
+    def replans(self) -> List[ReplanRecord]:
+        return self.planner_session.replans if self.planner_session else []
+
+    @property
+    def current_plan(self):
+        return self.planner_session.current_plan if self.planner_session else None
+
+    def submit(self, req: Request) -> bool:
+        """Admit a request (False = rejected by admission control).
+
+        Raises ``ValueError`` up front for a request that could never fit a
+        slot (prompt + generation exceed ``cache_len``)."""
+        self.batcher.validate(req)
+        ok = self.queue.submit(req)
+        if ok:
+            self.mix.submitted(req.rid, req.family, req.prompt_len)
+            self._t_submit[req.rid] = time.perf_counter()
+        return ok
+
+    def _admit(self) -> int:
+        cfg = self.config
+        if cfg.admission == "static" and self.batcher.n_active > 0:
+            return 0  # classic batch serving: drain before refilling
+        joined = 0
+        while len(self.queue) > 0 and self.batcher.free_slots():
+            req = self.queue.pop()
+            self.batcher.join(req)
+            self.mix.joined(req.rid)
+            # joining is the mix-changing moment (a queued request's
+            # submit-time arrival event may have drained steps ago without
+            # shifting anything) — feed the replan buffer so a backlog
+            # refilling freed slots still reaches the planner
+            self._event_buf.append(
+                RequestArrived(
+                    rid=req.rid, family=req.family, prompt_len=req.prompt_len
+                )
+            )
+            joined += 1
+        return joined
+
+    def step(self) -> List[SlotState]:
+        """One serving step: admit → decode one token → evict → replan."""
+        self._admit()
+        finished = self.batcher.step()
+        for s in finished:
+            self.mix.completed(s.req.rid)
+            self.queue.note_completion(s.req, len(s.generated))
+            t0 = self._t_submit.pop(s.req.rid, s.t_join)
+            self.results[s.req.rid] = RequestResult(
+                rid=s.req.rid,
+                family=s.req.family,
+                tokens=list(s.generated),
+                prompt_len=s.req.prompt_len,
+                latency_seconds=s.t_done - t0,
+                queue_seconds=s.t_join - t0,
+            )
+        self.steps += 1
+        self._maybe_replan()
+        return finished
+
+    def run(
+        self,
+        requests: Sequence[Request] = (),
+        *,
+        max_steps: int = 100_000,
+    ) -> Dict[str, Any]:
+        """Serve a scripted trace: ``Request.arrival`` is the step index at
+        which each request becomes visible.  Returns aggregate metrics."""
+        pending = sorted(requests, key=lambda r: r.arrival)
+        i = 0
+        t0 = time.perf_counter()
+        while i < len(pending) or self.busy:
+            while i < len(pending) and pending[i].arrival <= self.steps:
+                self.submit(pending[i])
+                i += 1
+            self.step()
+            if self.steps >= max_steps:
+                break
+        wall = time.perf_counter() - t0
+        return self.metrics(wall)
+
+    def metrics(self, wall_seconds: Optional[float] = None) -> Dict[str, Any]:
+        lats = sorted(r.latency_seconds for r in self.results.values())
+        out_tokens = sum(len(r.tokens) for r in self.results.values())
+        m: Dict[str, Any] = {
+            "requests": len(self.results),
+            "rejected": self.queue.rejected,
+            "output_tokens": out_tokens,
+            "decode_steps": self.batcher.decode_steps,
+            "prefill_seconds": self.batcher.prefill_seconds,
+            "decode_seconds": self.batcher.decode_seconds,
+            "p50_latency_s": float(np.percentile(lats, 50)) if lats else 0.0,
+            "p99_latency_s": float(np.percentile(lats, 99)) if lats else 0.0,
+            "replans": len(self.replans),
+            "replan_modes": [r.mode for r in self.replans],
+            "planning_seconds": sum(r.planning_seconds for r in self.replans),
+        }
+        # busy time = the resources the trace actually consumed (prefill +
+        # decode + planning); wall additionally counts scheduler idle-spin
+        # between scripted arrivals, which is trace shape, not serving cost
+        m["busy_seconds"] = (
+            m["prefill_seconds"] + m["decode_seconds"] + m["planning_seconds"]
+        )
+        m["throughput_tok_s"] = out_tokens / max(m["busy_seconds"], 1e-9)
+        if wall_seconds is not None:
+            m["wall_seconds"] = wall_seconds
+        if self.planner_session is not None:
+            m["cache"] = self.planner_session.cache.stats.as_dict()
+            if self.current_plan is not None:
+                m["planned_makespan_ms"] = self.current_plan.makespan * 1e3
+        return m
+
+    # ---------------------------------------------------------------- replan
+    def _maybe_replan(self) -> Optional[ReplanRecord]:
+        """Drain request events (queue arrivals/completions + slot joins);
+        drive the burst through ``session.signal`` when the bucketized mix
+        signature actually moved."""
+        self._event_buf.extend(self.source.poll())
+        ps = self.planner_session
+        if ps is None or not self._event_buf:
+            self._event_buf = []
+            return None
+        snap = self.mix.snapshot()
+        if not snap.counts:  # drained: nothing to plan until traffic returns
+            self._last_key = None
+            self._event_buf = []
+            return None
+        if self.config.replan == "initial" and self._planned_once:
+            self._event_buf = []
+            return None
+        if snap.key == self._last_key:
+            self._event_buf = []  # churn inside an unchanged mix: no shift
+            return None
+        new_family = self._last_families is not None and bool(
+            set(snap.families) - set(self._last_families)
+        )
+        self._last_key = snap.key
+        self._last_families = snap.families
+        self._planned_once = True
+        events, self._event_buf = self._event_buf, []
+        ps.incremental = not new_family  # structural shift → full replan
+        try:
+            ps.signal_all(events)
+        finally:
+            ps.incremental = True
+        return ps.replans[-1] if ps.replans else None

@@ -178,7 +178,9 @@ class SpindleSession:
         cache: Optional[PlanCache] = None,
     ):
         self.config = config or SessionConfig()
-        self.cache = cache or PlanCache(
+        # NOT `cache or ...`: an empty PlanCache is falsy (len 0) but still
+        # the caller's cache — sharing one across sessions must work
+        self.cache = cache if cache is not None else PlanCache(
             maxsize=self.config.cache_maxsize,
             curve_memo_max=self.config.curve_memo_max,
         )
@@ -199,6 +201,10 @@ class SpindleSession:
         self.opt_state: Any = None
         self.optimizer = None
         self.current_plan: Optional[ExecutionPlan] = None
+        #: set False (e.g. by a serving session around a structural shift —
+        #: a new request family) to force the next plan to be full, not
+        #: incremental, when its signature misses the cache
+        self.incremental = True
         self.step_count = 0
         self.history: List[float] = []
         self.replans: List[ReplanRecord] = []
@@ -277,6 +283,7 @@ class SpindleSession:
             hw=self.config.hw,
             placement_strategy=self.config.placement_strategy,
             profile_powers_of_two=self.config.profile_powers_of_two,
+            incremental=self.incremental,
         )
 
     # ------------------------------------------------------------ lifecycle

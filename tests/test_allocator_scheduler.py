@@ -1,6 +1,5 @@
 """Resource allocator (§3.3) + wavefront scheduler (§3.4) invariants."""
 
-import math
 
 import pytest
 
@@ -9,7 +8,6 @@ import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (
-    ClusterSpec,
     MetaOp,
     OpWorkload,
     ScalabilityEstimator,

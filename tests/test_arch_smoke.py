@@ -67,7 +67,7 @@ def test_decode_step_smoke(arch):
 
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_input_specs_cover_all_shapes(arch):
-    from repro.config import SHAPES, applicable_shapes
+    from repro.config import applicable_shapes
 
     cfg = get_arch(arch)
     model = build_model(cfg)

@@ -87,10 +87,8 @@ def test_encdec_decode_matches_forward():
 
 def test_attention_impls_agree():
     """naive / chunked / flash-kernel paths agree on the same inputs."""
-    import math
     from repro.models.attention import chunked_attention, naive_attention
     from repro.kernels import flash_attention as flash_ops
-    from repro.kernels import ref as kref
 
     B, H, S, hd = 2, 4, 96, 32
     q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))

@@ -60,7 +60,7 @@ def test_engine_train_step_descends():
 def test_engine_wave_structure_respects_plan():
     model, batches = tiny_multitask_clip()
     p = plan(model.graph, ClusterSpec(n_devices=8, island_size=4))
-    eng = WaveEngine(model, p)
+    WaveEngine(model, p)  # binding validates plan ↔ model consistency
     waves = p.waves()
     assert len(waves) >= 1
     # each wave's steps sit on disjoint devices (one concurrent execution)

@@ -6,7 +6,7 @@ import pytest
 
 pytest.importorskip("hypothesis")  # optional extra: skip, never collection-error
 import hypothesis.strategies as st
-from hypothesis import assume, given, settings
+from hypothesis import given, settings
 
 from repro.core import (
     MetaOp,
@@ -96,7 +96,6 @@ def test_cost_model_scaling_shape():
     """Heavy ops scale near-linearly; light ops saturate (Fig. 4 shape)."""
     heavy = _meta(flops=1e13, batch=64, seq=512)
     light = _meta(flops=1e9, batch=4, seq=16)
-    t_fn = make_time_fn(V5E)
     sp_heavy = op_time(heavy, ParallelConfig(dp=1)) / op_time(
         heavy, ParallelConfig(dp=8)
     )

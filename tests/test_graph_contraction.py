@@ -6,17 +6,8 @@ pytest.importorskip("hypothesis")  # optional extra: skip, never collection-erro
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
-from repro.core import (
-    ComponentSpec,
-    FlowSpec,
-    GraphBuilder,
-    MetaGraph,
-    OpNode,
-    OpWorkload,
-    TaskGraph,
-    contract,
-)
-from repro.core.workloads import WORKLOADS, multitask_clip, ofasys, qwen_val
+from repro.core import OpNode, OpWorkload, TaskGraph, contract
+from repro.core.workloads import WORKLOADS, multitask_clip, ofasys
 
 
 def _wl(f=1e9):

@@ -12,7 +12,6 @@ import numpy as np
 from hypothesis import given, settings
 
 from repro.ckpt import (
-    CheckpointManager,
     StragglerDetector,
     latest_step,
     restore_checkpoint,
@@ -28,7 +27,6 @@ from repro.optim import (
     int8_decompress,
     warmup_cosine,
 )
-from repro.optim.adamw import global_norm
 
 
 # ------------------------------------------------------------------ optimizer
@@ -97,7 +95,9 @@ def test_int8_roundtrip_bounded_error(seed, scale):
 
 def test_error_feedback_unbiased_over_time():
     """EF compensates quantization: averaged update ≈ averaged gradient."""
-    sync = lambda x: int8_decompress(*int8_compress(x))
+    def sync(x):
+        return int8_decompress(*int8_compress(x))
+
     g = {"w": jnp.linspace(-1.0, 1.0, 64)}
     e = ErrorFeedback.init(g)
     total = jnp.zeros((64,))
@@ -137,9 +137,11 @@ def test_data_has_learnable_structure():
 
 
 def test_mixture_task_dynamics():
-    mk = lambda seed: SyntheticLM(
-        DataConfig(vocab=128, seq_len=16, global_batch=2, seed=seed)
-    )
+    def mk(seed):
+        return SyntheticLM(
+            DataConfig(vocab=128, seq_len=16, global_batch=2, seed=seed)
+        )
+
     mix = MultiTaskMixture(
         [TaskStream("a", mk(0), 1.0), TaskStream("b", mk(1), 1.0)]
     )

@@ -228,7 +228,7 @@ def test_incremental_reuses_unchanged_metalevel():
     allocation + waves (only the affected MetaLevel re-runs, and its MPSP
     bisection warm-starts from the cached C̃* bracket)."""
     cache = PlanCache()
-    base = plan(_one_task_graph(64), CLUSTER, cache=cache)
+    plan(_one_task_graph(64), CLUSTER, cache=cache)  # seeds the reuse base
     shifted = plan(_one_task_graph(128), CLUSTER, cache=cache)
     assert cache.stats.incremental == 1
     assert cache.stats.levels_reused == 1  # the tower level

@@ -4,12 +4,8 @@ import pytest
 
 from repro.core import (
     ClusterSpec,
-    contract,
-    place,
     plan,
     simulate_distmm_mt,
-    simulate_optimus,
-    simulate_plan,
     simulate_sequential,
     simulate_spindle,
 )

@@ -1,0 +1,221 @@
+"""ServingSession: continuous-batching equivalence + mix-shift replans.
+
+The load-bearing contract: a request decoded in a shared continuous batch
+(joined late into a reused slot, neighbors evicted under it) produces
+EXACTLY the tokens it produces decoded alone — slot paging and the per-row
+position vector are invisible to the request.  And the dynamicity contract:
+a mix shift reaches the planner through ``session.signal`` exactly once,
+unchanged mixes never plan, recurring mixes are PlanCache hits.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import get_arch, reduced
+from repro.models import build_model
+from repro.serving import (
+    MixTracker,
+    Request,
+    RequestQueue,
+    ServingConfig,
+    ServingSession,
+)
+from repro.launch.events import (
+    RequestArrived,
+    RequestCompleted,
+    RequestQueueSource,
+)
+
+CACHE_LEN = 48
+
+
+def _model(arch):
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _requests(model, n, *, seed=7, slots=2):
+    """n requests with varied prompt/gen lengths, staggered arrivals."""
+    cfg = model.cfg
+    rng = jax.random.PRNGKey(seed)
+    reqs = []
+    for i in range(n):
+        p = (5, 9, 7, 12)[i % 4]
+        g = (4, 7, 5, 6)[i % 4]
+        toks = jax.random.randint(
+            jax.random.fold_in(rng, i), (p,), 0, cfg.vocab
+        )
+        extras = {}
+        if cfg.is_encdec:
+            extras["frames"] = jax.random.normal(
+                jax.random.fold_in(rng, 100 + i),
+                (CACHE_LEN // 4, cfg.d_model),
+            )
+        reqs.append(
+            Request(
+                rid=i,
+                tokens=toks,
+                max_new_tokens=g,
+                arrival=float(2 * i),  # staggered: joins mid-decode
+                extras=extras,
+            )
+        )
+    return reqs
+
+
+def _solo_tokens(model, params, req):
+    """Reference: the request decoded entirely alone (static, batch 1)."""
+    batch = {"tokens": jnp.asarray(req.tokens)[None]}
+    for k, v in req.extras.items():
+        batch[k] = jnp.asarray(v)[None]
+    logits, cache = model.prefill(params, batch, cache_len=CACHE_LEN)
+    tok = int(jnp.argmax(logits[0], axis=-1))
+    prompt_total = req.prompt_len + (
+        batch["embeds"].shape[1] if "embeds" in batch else 0
+    )
+    out = [tok]
+    for i in range(req.max_new_tokens - 1):
+        logits, cache = model.decode_step(
+            params, jnp.asarray([tok], jnp.int32), cache, prompt_total + i
+        )
+        tok = int(jnp.argmax(logits[0], axis=-1))
+        out.append(tok)
+    return out
+
+
+# attn (qwen3), mlstm/slstm (xlstm), rglru + local_attn (recurrentgemma),
+# cross-attention memory (seamless) — every cache-paging layout
+@pytest.mark.parametrize(
+    "arch",
+    ["qwen3-0.6b", "xlstm-125m", "recurrentgemma-9b", "seamless-m4t-medium"],
+)
+def test_continuous_equivalence(arch):
+    """Join/evict/slot-reuse keeps every request's decode bit-identical to
+    decoding it alone."""
+    model, params = _model(arch)
+    reqs = _requests(model, 5)
+    cfg = ServingConfig(
+        max_slots=2,  # forces queueing, eviction, and slot REUSE
+        cache_len=CACHE_LEN,
+        replan="off",
+    )
+    sess = ServingSession(cfg, model=model, params=params)
+    sess.run(reqs, max_steps=500)
+    assert len(sess.results) == len(reqs)
+    for req in reqs:
+        got = sess.results[req.rid].tokens
+        want = _solo_tokens(model, params, req)
+        assert got == want, f"{arch} rid={req.rid}: {got} != solo {want}"
+
+
+def test_mix_shift_single_replan_and_cache_hits():
+    """One replan per mix shift through session.signal; churn inside an
+    unchanged (quantized) mix does not plan; a recurring mix is a cache
+    hit; a new family forces a full replan."""
+    model, params = _model("qwen3-0.6b")
+    cfg = ServingConfig(max_slots=8, cache_len=CACHE_LEN, replan="mix")
+    sess = ServingSession(cfg, model=model, params=params)
+    rng = jax.random.PRNGKey(3)
+
+    def mk(rid, p, g, family):
+        toks = jax.random.randint(
+            jax.random.fold_in(rng, rid), (p,), 0, model.cfg.vocab
+        )
+        return Request(rid=rid, tokens=toks, max_new_tokens=g, family=family)
+
+    # phase 1: three long-running chat requests → ONE initial (full) plan
+    for rid in range(3):
+        sess.submit(mk(rid, 6, 40, "chat"))
+    sess.step()
+    assert len(sess.replans) == 1
+    assert sess.replans[0].mode == "full"
+    assert isinstance(sess.replans[0].event, RequestArrived)
+
+    # churn inside the quantized mix: 3 → 4 requests both quantize to 4
+    sess.submit(mk(3, 6, 40, "chat"))
+    sess.step()
+    assert len(sess.replans) == 1, "unchanged mix signature must not plan"
+
+    # a NEW family joins (short-lived) → exactly one more replan, FULL
+    sess.submit(mk(4, 20, 4, "code"))
+    sess.step()
+    assert len(sess.replans) == 2
+    assert sess.replans[-1].mode == "full"
+
+    # recurring mix: the code request finishes while all four chats are
+    # still decoding → back to the EXACT chat-only mix → PlanCache hit
+    # (the completion replans through session.signal too)
+    stats = sess.planner_session.cache.stats
+    hits_before = stats.hits
+    for _ in range(10):
+        if len(sess.replans) > 2:
+            break
+        sess.step()
+    assert len(sess.replans) == 3
+    assert isinstance(sess.replans[-1].event, RequestCompleted)
+    assert sess.replans[-1].mode == "hit"
+    assert stats.hits == hits_before + 1
+
+
+def test_admission_control_and_events():
+    """The queue bounds pending work and notes one event per admission
+    and completion; RequestQueueSource drains them."""
+    q = RequestQueue(max_pending=2)
+    src = RequestQueueSource(q)
+    toks = jnp.zeros((4,), jnp.int32)
+    assert q.submit(Request(rid=0, tokens=toks, max_new_tokens=2))
+    assert q.submit(Request(rid=1, tokens=toks, max_new_tokens=2))
+    assert not q.submit(Request(rid=2, tokens=toks, max_new_tokens=2))
+    assert q.rejected == 1
+    r0 = q.pop()
+    q.note_completion(r0, generated=2)
+    events = src.poll()
+    kinds = [e.kind for e in events]
+    assert kinds == ["request_arrived", "request_arrived",
+                     "request_completed"]
+    assert src.poll() == []
+
+
+def test_oversized_request_and_bad_policy_fail_fast():
+    """A request that could never fit its slot raises at submit (instead
+    of silently clamping decode positions at the cache edge), and policy
+    typos raise at config construction."""
+    model, params = _model("qwen3-0.6b")
+    sess = ServingSession(
+        ServingConfig(max_slots=2, cache_len=16, replan="off"),
+        model=model,
+        params=params,
+    )
+    toks = jnp.zeros((10,), jnp.int32)
+    with pytest.raises(ValueError, match="cache_len"):
+        sess.submit(Request(rid=0, tokens=toks, max_new_tokens=8))
+    assert sess.submit(Request(rid=1, tokens=toks, max_new_tokens=7))
+    with pytest.raises(ValueError, match="admission"):
+        ServingConfig(admission="Static")
+    with pytest.raises(ValueError, match="replan"):
+        ServingConfig(replan="none")
+
+
+def test_mix_tracker_quantization():
+    """Counts quantize to powers of two (replan hysteresis); prompt lengths
+    bucketize; the key only moves when the quantized mix moves."""
+    mix = MixTracker()
+    for rid, p in enumerate((5, 7, 30)):
+        mix.submitted(rid, "chat", p)
+        mix.joined(rid)
+    snap = mix.snapshot()
+    assert snap.counts == (("chat", 8, 2), ("chat", 32, 1))
+    key = snap.key
+    # 3rd request in the p≤8 bucket: 2 → 3 quantizes to 4 → key moves
+    mix.submitted(3, "chat", 6)
+    mix.joined(3)
+    assert mix.snapshot().key != key
+    # 4th: 4 → 4, key stable
+    key = mix.snapshot().key
+    mix.submitted(4, "chat", 8)
+    mix.joined(4)
+    assert mix.snapshot().key == key
+    assert mix.snapshot().decoding == 5

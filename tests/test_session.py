@@ -95,7 +95,7 @@ def test_cache_hit_replan_vs_full_replan():
     # signature is cached → exact-hit replan, no planner work
     session.signal(TaskArrived("audio_vision"))
     hits_before = session.cache.stats.hits
-    p = session.signal(TaskCompleted("audio_vision"))
+    session.signal(TaskCompleted("audio_vision"))
     assert session.replans[-1].mode == "hit"
     assert session.cache.stats.hits == hits_before + 1
     session.step()  # still executable after the cached rebind

@@ -1,11 +1,9 @@
 """Name-based sharding rules: divisibility safety + layout intent."""
 
-import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.config import ShardingConfig, default_sharding, get_arch
+from repro.config import ShardingConfig
 from repro.parallel import ShardingRules
 from repro.parallel.sharding import constrain
 

@@ -1,6 +1,5 @@
 """End-to-end driver tests: train descends, resume is exact, serve decodes."""
 
-import jax
 import jax.numpy as jnp
 import pytest
 
