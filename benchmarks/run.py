@@ -94,6 +94,89 @@ def committed_keys(name: str) -> set:
         return set()
 
 
+def _row_ident(r: dict, idx: int) -> str:
+    """Stable identity of one bench row (the non-metric descriptor fields).
+
+    ``requests`` is part of the identity so a smoke-grid row can never be
+    diffed against a full-grid row of the same policy — smoke runs compare
+    against the committed ``BENCH_<name>.smoke.json`` baselines instead."""
+    parts = [
+        f"{k}={r[k]}"
+        for k in ("bench", "workload", "policy", "devices", "slots",
+                  "requests")
+        if k in r
+    ]
+    return "|".join(parts) or f"row{idx}"
+
+
+def throughput_metrics(rows) -> dict:
+    """Machine-portable throughput metrics of one bench's rows.
+
+    Absolute timings and tok/s move with the machine, so the regression
+    gate compares *relative* metrics only: explicit ``speedup_*`` keys,
+    top-level ``*hit_rate*`` keys, and each row's ``throughput_tok_s``
+    normalized to the first throughput-carrying row of the same run (e.g.
+    continuous batching's gain over the static baseline).  All are
+    higher-is-better.  Nested cache-stat dicts are deliberately excluded —
+    per-replan cache composition varies run to run; the speedups it feeds
+    are the stable signal.
+    """
+    out: dict = {}
+    base_tp = None
+    for i, r in enumerate(rows):
+        if not isinstance(r, dict):
+            continue
+        ident = _row_ident(r, i)
+        for k, v in r.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            if "speedup" in k or "hit_rate" in k:
+                out[f"{ident}.{k}"] = float(v)
+            elif k == "throughput_tok_s" and v > 0:
+                if base_tp is None:
+                    base_tp = float(v)
+                out[f"{ident}.throughput_rel"] = float(v) / base_tp
+    return out
+
+
+def regression_check(name: str, rows, baseline_dir: pathlib.Path,
+                     tolerance: float, *, suffix: str = "") -> list:
+    """Regressions of ``rows`` vs ``<baseline_dir>/BENCH_<name><suffix>.json``.
+
+    A metric regresses when the regenerated value drops below
+    ``baseline * (1 - tolerance)`` — or when it is MISSING from the
+    regenerated rows (baselines are same-grid by construction: smoke runs
+    pass ``suffix=".smoke"`` to diff against the committed smoke-grid
+    baselines, full runs diff against the full-grid trajectory files — so
+    a vanished metric is a collapse, not a grid difference; regenerate +
+    recommit the baselines when the grid itself changes deliberately).
+    A missing baseline FILE is a visible skip (new benches legitimately
+    have none yet); an unreadable one fails the gate."""
+    path = baseline_dir / f"BENCH_{name}{suffix}.json"
+    if not path.exists():
+        print(f"[benchmarks] WARNING: no baseline {path.name} — "
+              f"regression gate skipped for {name}", file=sys.stderr)
+        return []
+    try:
+        with open(path) as f:
+            base = throughput_metrics(json.load(f).get("rows", []))
+    except (json.JSONDecodeError, OSError) as e:
+        # an unreadable baseline must FAIL the gate, not vacuously pass it
+        return [f"baseline {path.name} unreadable: {e}"]
+    new = throughput_metrics(rows)
+    bad = []
+    for key, ref in sorted(base.items()):
+        if ref <= 0:
+            continue
+        got = new.get(key)
+        if got is None:
+            bad.append(f"{key}: missing from regenerated rows "
+                       f"(baseline {ref:.4f})")
+        elif got < ref * (1.0 - tolerance):
+            bad.append(f"{key}: {got:.4f} < {ref:.4f} * (1 - {tolerance:g})")
+    return bad
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
@@ -105,6 +188,15 @@ def main() -> None:
     ap.add_argument("--check-keys", action="store_true",
                     help="fail when regenerated rows drop metric keys "
                          "present in the committed BENCH_<name>.json")
+    ap.add_argument("--baseline", nargs="?", const=str(REPO_ROOT),
+                    default=None, metavar="DIR",
+                    help="fail on throughput REGRESSION vs the committed "
+                         "BENCH_<name>.json files in DIR (default: repo "
+                         "root) — relative metrics only (speedups, hit "
+                         "rates, normalized throughput), see --tolerance")
+    ap.add_argument("--tolerance", type=float, default=0.3,
+                    help="--baseline slack: a metric regresses when it "
+                         "drops below baseline * (1 - tolerance)")
     ap.add_argument("--out-dir", default=None,
                     help="directory for the BENCH_<name>.json files "
                          "(default: repo root; --smoke: a temp dir) — CI "
@@ -128,6 +220,7 @@ def main() -> None:
     else:
         out_dir = REPO_ROOT
     missing: dict = {}
+    regressions: dict = {}
     for name in names:
         mod = BENCHES[name]
         baseline = committed_keys(name) if args.check_keys else set()
@@ -149,6 +242,13 @@ def main() -> None:
             lost = baseline - metric_keys(rows)
             if lost:
                 missing[name] = sorted(lost)
+        if args.baseline:
+            bad = regression_check(
+                name, rows, pathlib.Path(args.baseline), args.tolerance,
+                suffix=".smoke" if args.smoke else "",
+            )
+            if bad:
+                regressions[name] = bad
 
     if args.check_keys:
         if missing:
@@ -157,6 +257,15 @@ def main() -> None:
                       file=sys.stderr)
             raise SystemExit(1)
         print(f"[benchmarks] key check OK for {', '.join(names)}")
+    if args.baseline:
+        if regressions:
+            for name, bad in regressions.items():
+                for line in bad:
+                    print(f"[benchmarks] BENCH_{name}.json regression: {line}",
+                          file=sys.stderr)
+            raise SystemExit(1)
+        print(f"[benchmarks] regression check OK for {', '.join(names)} "
+              f"(tolerance {args.tolerance:g})")
 
     if not args.only and not args.smoke:
         print("\n=== roofline " + "=" * 52)

@@ -6,14 +6,16 @@ from .checkpoint import (
     restore_checkpoint,
     save_checkpoint,
 )
-from .remesh import restore_to_mesh
-from .straggler import StragglerDetector
+from .remesh import reshard, restore_to_mesh
+from .straggler import StragglerDetector, TimingCollector
 
 __all__ = [
     "CheckpointManager",
     "save_checkpoint",
     "restore_checkpoint",
     "latest_step",
+    "reshard",
     "restore_to_mesh",
     "StragglerDetector",
+    "TimingCollector",
 ]

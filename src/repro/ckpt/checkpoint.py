@@ -195,10 +195,15 @@ class CheckpointManager:
 
     def maybe_save(self, step: int, tree, extra=None) -> Optional[str]:
         if self.every > 0 and step % self.every == 0:
-            return save_checkpoint(
-                self.base, step, tree, extra=extra, keep=self.keep
-            )
+            return self.save(step, tree, extra=extra)
         return None
+
+    def save(self, step: int, tree, extra=None) -> str:
+        """Unconditional snapshot (the elastic-restore path saves at the
+        eviction step regardless of the periodic schedule)."""
+        return save_checkpoint(
+            self.base, step, tree, extra=extra, keep=self.keep
+        )
 
     def restore_latest(self, tree_like):
         step = latest_step(self.base)

@@ -11,18 +11,21 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-from jax.sharding import Mesh
 
 
 def restore_to_mesh(tree, shardings) -> Any:
     """Place ``tree`` (host numpy / arrays) onto ``shardings`` (same pytree
-    of NamedSharding, e.g. from repro.parallel.tree_param_shardings)."""
+    of NamedSharding — e.g. from repro.parallel.tree_param_shardings — or
+    of plain ``jax.Device`` targets on a single-device runtime)."""
     return jax.tree.map(
         lambda x, s: jax.device_put(x, s), tree, shardings
     )
 
 
-def reshard(tree, old_mesh: Mesh, new_shardings) -> Any:
-    """Live re-shard device arrays from one mesh onto new shardings."""
+def reshard(tree, new_shardings) -> Any:
+    """Live re-shard device arrays onto new shardings.
+
+    The old mesh is implicit in the arrays themselves (``device_get`` pulls
+    from wherever they live), so it is not a parameter."""
     host = jax.tree.map(lambda x: jax.device_get(x), tree)
     return restore_to_mesh(host, new_shardings)

@@ -65,3 +65,55 @@ class StragglerDetector:
         if s and self.on_straggler is not None:
             self.on_straggler(s)
         return s
+
+
+@dataclass
+class TimingCollector:
+    """Aggregated per-host timing stream for the detector (rank-0 pattern).
+
+    The detector compares per-host medians, so it can only flag when ONE
+    instance sees every host's times.  Each process contributes its local
+    step time through :meth:`gather`:
+
+      * **multi-process** (``jax.process_count() > 1``) — the local time is
+        allgathered across processes (``multihost_utils.process_allgather``)
+        and only rank 0 receives the full per-host vector; every other rank
+        gets ``None`` and feeds nothing, so exactly one detector flags.
+      * **in-process fallback** (single-process runtimes: tests, CI, this
+        container) — the caller IS every host; ``skew`` maps host index to
+        a step-time multiplier so deterministic degradations can be
+        injected (host 3 at 3× cluster speed, say).
+
+    The returned vector is ordered by host index and feeds
+    :meth:`StragglerDetector.record_all` verbatim.
+
+    Scope note: this aggregates the *observations*; it does not broadcast
+    the flag/replan *decision*.  On the single-controller runtimes this
+    repo executes on (one process drives every device) that is complete.
+    A true multi-process SPMD deployment additionally needs rank 0 to
+    broadcast the flagged set before anyone replans — otherwise only rank
+    0 would shrink its mesh and the next collective would mismatch.  That
+    lands with the shard_map execution path (ROADMAP: multi-process SPMD
+    follow-up).
+    """
+
+    n_hosts: int
+    skew: Dict[int, float] = field(default_factory=dict)
+
+    def gather(self, local_seconds: float) -> Optional[List[float]]:
+        import jax
+
+        if jax.process_count() > 1:
+            from jax.experimental import multihost_utils
+
+            vec = np.asarray(
+                multihost_utils.process_allgather(
+                    np.float32(local_seconds)
+                )
+            ).reshape(-1)
+            if jax.process_index() != 0:
+                return None  # rank-0 collector: only one detector feed
+            return [float(v) for v in vec[: self.n_hosts]]
+        return [
+            local_seconds * self.skew.get(h, 1.0) for h in range(self.n_hosts)
+        ]

@@ -167,6 +167,10 @@ def applicable_shapes(arch: "ArchConfig") -> List[str]:
 class MeshConfig:
     shape: Tuple[int, ...] = (16, 16)
     axes: Tuple[str, ...] = ("data", "model")
+    # host topology: devices per physical host (0 → one host per island);
+    # threads through cluster_spec() so straggler eviction knows which
+    # device block a flagged host owns (DESIGN.md §12)
+    devices_per_host: int = 0
 
     @property
     def n_devices(self) -> int:
@@ -174,6 +178,18 @@ class MeshConfig:
         for s in self.shape:
             n *= s
         return n
+
+    def cluster_spec(self, *, island_size: int = 8,
+                     mem_bytes: float = 16e9) -> "object":
+        """The planner-side ClusterSpec of this mesh (host map included)."""
+        from .core.placement import ClusterSpec  # lazy: config is leaf-level
+
+        return ClusterSpec(
+            n_devices=self.n_devices,
+            island_size=island_size,
+            mem_bytes=mem_bytes,
+            devices_per_host=self.devices_per_host,
+        )
 
 
 @dataclass(frozen=True)

@@ -59,6 +59,12 @@ class PlanContext:
     def resolve_time_fn(self) -> TimeFn:
         return self.time_fn or make_time_fn(self.hw)
 
+    @property
+    def capacity(self) -> int:
+        """Schedulable device count: the cluster minus flagged hosts'
+        blocks (== n_devices on a fully healthy cluster)."""
+        return self.cluster.n_healthy
+
 
 # --------------------------------------------------------------------------
 # Stage protocols
@@ -116,7 +122,7 @@ class ProfiledEstimatorStage:
     def build(self, ctx: PlanContext, mg: MetaGraph) -> ScalabilityEstimator:
         return ScalabilityEstimator(
             ctx.resolve_time_fn(),
-            ctx.cluster.n_devices,
+            ctx.capacity,
             profile_powers_of_two=self.profile_powers_of_two,
             curve_memo=self.curve_memo,
         )
@@ -151,7 +157,7 @@ class WavefrontSchedulerStage:
         return schedule(
             mg,
             estimator,
-            ctx.cluster.n_devices,
+            ctx.capacity,
             allocate_fn=allocator.allocate,
         )
 
@@ -213,7 +219,7 @@ class SerialSchedulerStage:
     validates = True
 
     def run(self, ctx, mg, estimator, allocator) -> Schedule:
-        N = ctx.cluster.n_devices
+        N = ctx.capacity
         sched = Schedule()
         t_now, widx = 0.0, 0
         for level, metas in enumerate(mg.levels()):
@@ -238,7 +244,7 @@ class TaskSequentialSchedulerStage:
     validates = False  # cross-task level spans overlap the global barrier check
 
     def run(self, ctx, mg, estimator, allocator) -> Schedule:
-        N = ctx.cluster.n_devices
+        N = ctx.capacity
         tasks = _tasks_of(mg)
         sched = Schedule()
         t_now, widx = 0.0, 0
@@ -294,7 +300,7 @@ class TaskParallelSchedulerStage:
     validates = False  # tasks overlap in time: the level barrier does not hold
 
     def run(self, ctx, mg, estimator, allocator) -> Schedule:
-        N = ctx.cluster.n_devices
+        N = ctx.capacity
         tasks = _tasks_of(mg)
         names = sorted(tasks)
 
@@ -370,11 +376,14 @@ class BlockPlacementStage:
             return place(sched, mg, ctx.cluster, strategy="sequential")
         task_of_meta = sched.extras["task_of_meta"]
         pl = Placement()
-        mem = {d: 0.0 for d in range(ctx.cluster.n_devices)}
+        # Block offsets index the schedulable capacity; map them through the
+        # healthy-device list so flagged hosts' blocks stay empty.
+        healthy = ctx.cluster.healthy_devices()
+        mem = {d: 0.0 for d in healthy}
         for w in sched.waves:
             for e in w.entries:
                 start, _size = blocks[task_of_meta[e.meta_id]]
-                devs = tuple(range(start, start + e.n))
+                devs = tuple(healthy[start : start + e.n])
                 pl.entries[(w.index, e.meta_id)] = PlacedEntry(
                     w.index, e.meta_id, devs
                 )
@@ -414,7 +423,7 @@ class PlannerPipeline:
         est = self.estimator.build(ctx, mg)
         sched = self.scheduler.run(ctx, mg, est, self.allocator)
         if self.scheduler.validates:
-            check_schedule(sched, mg, cluster.n_devices)
+            check_schedule(sched, mg, ctx.capacity)
         placement = self.placement.run(ctx, sched, mg)
         seconds = time.perf_counter() - t0
         return assemble_plan(

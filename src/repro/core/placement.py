@@ -16,8 +16,9 @@ with the paper's three guidelines:
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from .contraction import MetaGraph, MetaOp
 from .scheduler import Schedule, WaveEntry
@@ -25,13 +26,27 @@ from .scheduler import Schedule, WaveEntry
 
 @dataclass(frozen=True)
 class ClusterSpec:
-    """Physical cluster description for placement decisions."""
+    """Physical cluster description for placement decisions.
+
+    Besides the flat device range, the spec carries an explicit host
+    topology: devices ``[h*host_size, (h+1)*host_size)`` belong to host
+    ``h`` (``devices_per_host`` defaults to the island size — one host per
+    NVLink node / ICI neighborhood).  ``flagged_hosts`` marks hosts the
+    straggler detector evicted; planning and placement run over
+    :meth:`healthy_devices` only, so a flagged host removes *its own*
+    device block — placement routes around the hole instead of renumbering
+    a uniformly shrunken range.  Shrink/restore are value-level
+    (:meth:`shrink` / :meth:`restore` return new frozen specs), so a full
+    recovery compares equal to the original spec.
+    """
 
     n_devices: int
     island_size: int = 8  # NVLink node / ICI neighborhood
     mem_bytes: float = 16e9  # HBM per device (v5e: 16 GB)
     intra_island_bw: float = 400e9  # bytes/s (NVLink-class / intra-slice ICI)
     inter_island_bw: float = 50e9  # bytes/s (IB / DCN-class)
+    devices_per_host: int = 0  # 0 → island_size (one host per island)
+    flagged_hosts: Tuple[int, ...] = ()  # evicted hosts (straggler path)
 
     def island_of(self, dev: int) -> int:
         return dev // self.island_size
@@ -47,6 +62,64 @@ class ClusterSpec:
             )
             for i in range(n_isl)
         ]
+
+    # ------------------------------------------------------- host topology
+    @property
+    def host_size(self) -> int:
+        return self.devices_per_host or self.island_size
+
+    @property
+    def n_hosts(self) -> int:
+        return (self.n_devices + self.host_size - 1) // self.host_size
+
+    def host_of(self, dev: int) -> int:
+        return dev // self.host_size
+
+    def devices_of(self, host: int) -> Tuple[int, ...]:
+        """The device block owned by ``host`` (empty for out-of-range ids)."""
+        if not 0 <= host < self.n_hosts:
+            return ()
+        return tuple(
+            range(
+                host * self.host_size,
+                min((host + 1) * self.host_size, self.n_devices),
+            )
+        )
+
+    def hosts(self) -> List[List[int]]:
+        """host index → its device-id list (the explicit host→device map)."""
+        return [list(self.devices_of(h)) for h in range(self.n_hosts)]
+
+    def healthy_devices(
+        self, flagged: Optional[Iterable[int]] = None
+    ) -> Tuple[int, ...]:
+        """Device ids outside the flagged hosts' blocks (ascending).
+
+        ``flagged`` defaults to this spec's own ``flagged_hosts``."""
+        bad: Set[int] = set()
+        hosts = self.flagged_hosts if flagged is None else flagged
+        for h in hosts:
+            bad.update(self.devices_of(h))
+        return tuple(d for d in range(self.n_devices) if d not in bad)
+
+    @property
+    def n_healthy(self) -> int:
+        return len(self.healthy_devices())
+
+    def shrink(self, flagged: Iterable[int]) -> "ClusterSpec":
+        """Evict ``flagged`` hosts: same physical cluster, their device
+        blocks excluded from planning/placement.  At least one host must
+        stay healthy.  ``shrink(())`` ≡ :meth:`restore`."""
+        hosts = tuple(sorted({h for h in flagged if 0 <= h < self.n_hosts}))
+        if len(hosts) >= self.n_hosts:
+            raise ValueError(
+                f"cannot flag all {self.n_hosts} hosts — no devices left"
+            )
+        return dataclasses.replace(self, flagged_hosts=hosts)
+
+    def restore(self) -> "ClusterSpec":
+        """Clear every eviction — compares equal to the pre-shrink spec."""
+        return dataclasses.replace(self, flagged_hosts=())
 
 
 @dataclass
@@ -125,14 +198,15 @@ def place(
             f"choose from {PLACEMENT_STRATEGIES}"
         )
     pl = Placement()
-    mem = {d: 0.0 for d in range(cluster.n_devices)}  # high-water per device
+    healthy = cluster.healthy_devices()
+    mem = {d: 0.0 for d in healthy}  # high-water per device
     # Last placement of each MetaOp (for data-flow locality & param reuse).
     last_of_meta: Dict[int, Tuple[int, ...]] = {}
     last_of_group: Dict[str, Tuple[int, ...]] = {}
     preds = mg.predecessors()
 
     for w in sched.waves:
-        free: Set[int] = set(range(cluster.n_devices))
+        free: Set[int] = set(healthy)
         # Continuations (same MetaOp, same width as the previous wave) place
         # first — they can achieve zero-cost flows; then high-communication
         # entries (guideline 2).

@@ -135,7 +135,7 @@ def assemble_plan(
         steps=steps,
         makespan=sched.makespan,
         c_star_total=sched.c_star_total,
-        n_devices=cluster.n_devices,
+        n_devices=cluster.n_healthy,  # schedulable capacity (minus evictions)
         planning_seconds=planning_seconds,
         schedule=sched,
         placement=placement,

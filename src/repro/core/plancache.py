@@ -68,6 +68,7 @@ def _cluster_key(cluster: ClusterSpec) -> str:
     return (
         f"N{cluster.n_devices}/isl{cluster.island_size}/mem{cluster.mem_bytes:.3e}"
         f"/bw{cluster.intra_island_bw:.3e}:{cluster.inter_island_bw:.3e}"
+        f"/host{cluster.host_size}/flag{','.join(map(str, cluster.flagged_hosts))}"
     )
 
 
@@ -397,7 +398,7 @@ def plan_cached(
     )
 
     base = (
-        cache.latest(planner, cluster.n_devices, hw,
+        cache.latest(planner, cluster.n_healthy, hw,
                      placement_strategy=placement_strategy,
                      profile_powers_of_two=profile_powers_of_two,
                      time_fn=time_fn)
@@ -431,7 +432,7 @@ def _incremental_plan(
     ctx = PlanContext(graph=graph, cluster=cluster, hw=hw, time_fn=time_fn)
     mg = contract(graph)
     est = pipe.estimator.build(ctx, mg)
-    N = cluster.n_devices
+    N = cluster.n_healthy
 
     sched = Schedule()
     t_now, widx = 0.0, 0

@@ -26,10 +26,10 @@ and batcher only note admissions/evictions; the session polls and replans.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, List, Protocol, Tuple, runtime_checkable
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Protocol, Tuple, runtime_checkable
 
-from ..ckpt.straggler import StragglerDetector
+from ..ckpt.straggler import StragglerDetector, TimingCollector
 
 
 # --------------------------------------------------------------------------
@@ -115,20 +115,40 @@ class StragglerEventSource:
     """Straggler detection as a session event source.
 
     Producers (the training loop, or the session itself via
-    ``record``) feed per-host step times; ``poll`` emits one
+    ``record``/``record_step``) feed per-host step times; ``poll`` emits one
     :class:`StragglerDetected` per *change* in the flagged host set —
     a host stays flagged across consecutive polls without refiring, so
     one degradation triggers one replan, not one per step.  The event
     always carries the FULL currently-flagged set; recovery (the set
     emptying again) fires ``StragglerDetected(())`` so consumers can
     restore a degraded cluster.
+
+    With a :class:`repro.ckpt.straggler.TimingCollector` attached,
+    ``record_step(local_seconds)`` feeds the detector the AGGREGATED
+    per-host vector (rank-0 allgather, or the in-process skew fallback) —
+    the only feed under which a per-process caller can actually flag.
+    Without one, ``record_step`` degrades to recording the local host
+    only (the detector then never flags by itself; see TimingCollector).
     """
 
     detector: StragglerDetector
+    collector: Optional[TimingCollector] = None
     _last_flagged: Tuple[int, ...] = ()
 
     def record(self, host: int, step_seconds: float) -> None:
         self.detector.record(host, step_seconds)
+
+    def record_step(self, step_seconds: float) -> None:
+        """One local step time in — the full per-host stream (when
+        aggregation is available) into the detector."""
+        if self.collector is None:
+            import jax
+
+            self.detector.record(jax.process_index(), step_seconds)
+            return
+        vec = self.collector.gather(step_seconds)
+        if vec is not None:  # None on non-zero ranks (rank-0 collector)
+            self.detector.record_all(vec)
 
     def poll(self) -> List[Event]:
         hosts = tuple(self.detector.stragglers())
@@ -157,10 +177,45 @@ class RequestQueueSource:
 
 @dataclass
 class ScriptedEventSource:
-    """Deterministic event source for tests/benchmarks: a fixed queue,
-    drained one event per poll."""
+    """Deterministic event source for tests/benchmarks.
+
+    Default: a fixed queue drained one event per poll.  With ``fire_at``
+    (one 0-based poll index per event, ascending), each event instead fires
+    on its scheduled poll — a session polls once per training step, so
+    ``fire_at=[4]`` injects the event after step 4 (the fault-injection CI
+    hook: "straggler at step N").
+    """
 
     events: List[Event]
+    fire_at: Optional[List[int]] = None
+    _polls: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        # own copies: poll() drains destructively and must not consume a
+        # caller-shared list; a partial schedule would silently strand the
+        # unscheduled tail, so it is an error
+        self.events = list(self.events)
+        if self.fire_at is not None:
+            if len(self.fire_at) != len(self.events):
+                raise ValueError(
+                    f"fire_at schedules {len(self.fire_at)} of "
+                    f"{len(self.events)} events — every event needs a slot"
+                )
+            if sorted(self.fire_at) != list(self.fire_at):
+                raise ValueError(
+                    "fire_at must be ascending — the drain loop only ever "
+                    "inspects the head, an out-of-order schedule would "
+                    "silently shift the scenario"
+                )
+            self.fire_at = list(self.fire_at)
 
     def poll(self) -> List[Event]:
-        return [self.events.pop(0)] if self.events else []
+        if self.fire_at is None:
+            return [self.events.pop(0)] if self.events else []
+        i = self._polls
+        self._polls += 1
+        out: List[Event] = []
+        while self.events and self.fire_at and self.fire_at[0] <= i:
+            self.fire_at.pop(0)
+            out.append(self.events.pop(0))
+        return out

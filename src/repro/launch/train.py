@@ -13,13 +13,16 @@ is built through the session's PlanCache, the training loop feeds its step
 times into a :class:`repro.launch.events.StragglerEventSource`, and the
 session polls it every step, so a detected straggler fires the §5.5
 re-plan hook through the one production code path instead of
-driver-inline logic.  Note the detector compares per-host medians, so it
-can only flag when ONE detector instance sees timings from every host —
-this loop records only the local host's times, so a per-process detector
-never fires on its own; a deployment must feed an aggregated per-host
-timing stream (rank-0 collector or allgather — ROADMAP item) into the
-source.  The wiring itself is exercised here and
-`tests/test_session.py` drives the replan path with scripted events.
+driver-inline logic.  The detector compares per-host medians, so it can
+only flag when ONE instance sees timings from every host — the source
+carries a :class:`repro.ckpt.straggler.TimingCollector` that allgathers
+the local step time across processes (rank-0 pattern; in-process fallback
+on single-process runtimes), feeding ``record_all``.
+
+``--elastic-smoke`` runs the fault-injection scenario instead (the CI
+gate): a scripted straggler mid-run must take the checkpoint → re-mesh →
+restore path (``ReplanRecord(mode="restore")``) and keep training on the
+surviving hosts' devices.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
         --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt \
@@ -31,7 +34,7 @@ from __future__ import annotations
 import argparse
 import time
 from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -98,6 +101,102 @@ def plan_preview(
               f"makespan {p.makespan*1e3:.1f} ms/iter "
               f"(planned in {p.planning_seconds*1e3:.0f} ms)")
     return session
+
+
+def elastic_smoke(
+    *,
+    steps: int = 10,
+    straggler_at: int = 4,
+    straggler_hosts: Tuple[int, ...] = (1,),
+    ckpt_dir: Optional[str] = None,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    """Fault-injection scenario: a bound distributed session survives a
+    scripted straggler through the checkpoint → re-mesh → restore path.
+
+    Runs a :class:`repro.session.SpindleSession` over every local device
+    (CI forces 8 via ``XLA_FLAGS=--xla_force_host_platform_device_count``),
+    two devices per host, with a :class:`CheckpointCallbacks`-threaded
+    :class:`CheckpointManager` and a :class:`ScriptedEventSource` that
+    flags ``straggler_hosts`` after step ``straggler_at``.  The run must
+    produce a ``ReplanRecord(mode="restore")`` whose new placement excludes
+    exactly the flagged hosts' devices, then keep training; any violation
+    raises ``SystemExit`` (the CI job greps the transcript on top).
+    """
+    import tempfile
+
+    from ..ckpt import CheckpointManager
+    from ..config import MeshConfig
+    from ..parallel import mesh_over_devices
+    from ..runtime import tiny_multitask_clip
+    from ..session import CheckpointCallbacks, SessionConfig, SpindleSession
+    from .events import ScriptedEventSource, StragglerDetected
+
+    n_dev = jax.device_count()
+    if n_dev < 4:
+        print(f"[elastic] WARNING: only {n_dev} devices visible — set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    per_host = 2 if n_dev >= 4 else 1
+    cluster = MeshConfig(
+        shape=(n_dev,), axes=("data",), devices_per_host=per_host
+    ).cluster_spec(island_size=max(per_host * 2, 2), mem_bytes=1e13)
+    bad = tuple(h for h in straggler_hosts if 0 <= h < cluster.n_hosts)
+    if not bad or len(bad) >= cluster.n_hosts:
+        raise SystemExit("[elastic] no valid straggler host to inject")
+    mgr = CheckpointManager(ckpt_dir or tempfile.mkdtemp(prefix="elastic_"),
+                            every=max(straggler_at, 1), keep=3)
+    src = ScriptedEventSource(
+        [StragglerDetected(bad)], fire_at=[straggler_at]
+    )
+    session = SpindleSession(
+        SessionConfig(
+            cluster=cluster,
+            straggler_shrink=True,
+            mesh=mesh_over_devices(range(n_dev)),
+        ),
+        model_factory=lambda tasks: tiny_multitask_clip(n_tasks=len(tasks)),
+        tasks=("img_text", "audio_text", "audio_vision"),
+        callbacks=[CheckpointCallbacks(mgr)],
+        event_sources=[src],
+    ).bind()
+
+    announced = 0
+    for k in range(steps):
+        loss = session.step()
+        phase = "post-restore" if any(
+            r.mode == "restore" for r in session.replans
+        ) else "healthy"
+        if verbose:
+            print(f"[elastic] step {k:3d}  loss {loss:.4f}  ({phase})")
+        for r in session.replans[announced:]:
+            if r.mode == "restore":
+                print(f"[elastic] straggler {list(bad)} -> replan "
+                      f"mode=restore plan_mode={r.plan_mode} "
+                      f"restored_step={r.restored_step} healthy_devices="
+                      f"{len(session.cluster.healthy_devices())}")
+        announced = len(session.replans)
+
+    restores = [r for r in session.replans if r.mode == "restore"]
+    if not restores:
+        raise SystemExit("[elastic] FAIL: no restore replan occurred")
+    flagged_devs = {d for h in bad for d in cluster.devices_of(h)}
+    plan_devs = {d for s in session.current_plan.steps for d in s.devices}
+    if plan_devs & flagged_devs:
+        raise SystemExit(
+            f"[elastic] FAIL: flagged devices {sorted(plan_devs & flagged_devs)} "
+            "still placed after the restore replan"
+        )
+    if session.step_count <= straggler_at + 1:
+        raise SystemExit("[elastic] FAIL: no post-restore training step")
+    print(f"[elastic] OK: {len(restores)} restore replan(s), "
+          f"{session.step_count - straggler_at - 1} post-restore steps, "
+          f"final loss {session.history[-1]:.4f}")
+    return {
+        "steps": session.step_count,
+        "history": session.history,
+        "replans": session.replans,
+        "session": session,
+    }
 
 
 def make_train_state(model, optimizer, rng, mesh=None, rules=None):
@@ -173,10 +272,13 @@ def train(
     plan_workload: Optional[str] = None,
     planner: str = "spindle",
 ) -> Dict[str, Any]:
+    from ..ckpt import TimingCollector
     from .events import StragglerEventSource
 
+    n_hosts = max(jax.process_count(), 1)
     straggler_src = StragglerEventSource(
-        StragglerDetector(n_hosts=max(jax.process_count(), 1))
+        StragglerDetector(n_hosts=n_hosts),
+        collector=TimingCollector(n_hosts=n_hosts),
     )
     session = None
     if plan_workload:
@@ -245,10 +347,10 @@ def train(
         params, opt_state, loss = step_fn(params, opt_state, b)
         loss = float(loss)
         dt = time.perf_counter() - t0
-        # record under the real host index so an aggregated timing feed
-        # (rank-0 collector / allgather) attributes correctly; a purely
-        # local detector only ever sees this host and cannot flag
-        straggler_src.record(jax.process_index(), dt)
+        # the collector behind record_step turns this process's time into
+        # the aggregated per-host vector (allgather; rank 0 feeds the
+        # detector) — the only feed under which the detector can flag
+        straggler_src.record_step(dt)
         history.append(loss)
         if verbose and (step % log_every == 0 or step == steps - 1):
             tok_s = batch * seq / dt
@@ -269,9 +371,15 @@ def train(
                 elif verbose:
                     print("[train] stragglers recovered")
     wall = time.perf_counter() - t_start
-    if mgr and (steps - 1) % ckpt_every != 0:
-        mgr.maybe_save(steps - 1, {"params": params, "opt": opt_state},
-                       extra={"loss": history[-1] if history else None})
+    interrupted = stop_at_step is not None and stop_at_step < steps
+    if mgr and history and not interrupted and (steps - 1) % ckpt_every != 0:
+        # off-cadence final step of a COMPLETED schedule: save
+        # unconditionally (maybe_save would no-op here by construction and
+        # silently drop the last steps).  Interrupted runs must not stamp
+        # steps-1 onto older state — a real crash saves nothing either,
+        # and resume would otherwise skip the untrained tail.
+        mgr.save(steps - 1, {"params": params, "opt": opt_state},
+                 extra={"loss": history[-1]})
 
     return {
         "arch": arch,
@@ -301,7 +409,25 @@ def main() -> None:
                     help="also plan this MT workload via the PlannerPipeline")
     ap.add_argument("--planner", default="spindle",
                     help="planner strategy for --plan-workload")
+    ap.add_argument("--elastic-smoke", action="store_true",
+                    help="fault-injection scenario: scripted straggler -> "
+                         "checkpointed re-mesh restore (CI gate); ignores "
+                         "the plain-training flags except --steps/--ckpt-dir")
+    ap.add_argument("--straggler-at", type=int, default=4,
+                    help="elastic-smoke: inject the straggler after this step")
+    ap.add_argument("--straggler-hosts", default="1",
+                    help="elastic-smoke: comma-separated host ids to flag")
     args = ap.parse_args()
+    if args.elastic_smoke:
+        elastic_smoke(
+            steps=args.steps,
+            straggler_at=args.straggler_at,
+            straggler_hosts=tuple(
+                int(h) for h in args.straggler_hosts.split(",") if h != ""
+            ),
+            ckpt_dir=args.ckpt_dir,
+        )
+        return
     out = train(
         args.arch,
         reduced_cfg=args.reduced,

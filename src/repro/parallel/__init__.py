@@ -1,6 +1,16 @@
 """Parallelism substrate: mesh axes, sharding rules, collectives."""
 
-from .mesh import AxisNames, DATA, MODEL, POD, axis_size, batch_axes, make_mesh, model_axis
+from .mesh import (
+    AxisNames,
+    DATA,
+    MODEL,
+    POD,
+    axis_size,
+    batch_axes,
+    make_mesh,
+    mesh_over_devices,
+    model_axis,
+)
 from .sharding import (
     ShardingRules,
     tree_batch_specs,
@@ -17,6 +27,7 @@ __all__ = [
     "axis_size",
     "batch_axes",
     "make_mesh",
+    "mesh_over_devices",
     "model_axis",
     "ShardingRules",
     "tree_batch_specs",

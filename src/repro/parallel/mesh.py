@@ -9,9 +9,10 @@ optionally extends over ``"pod"`` (DCN) — see ShardingConfig.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Iterable, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 POD = "pod"
 DATA = "data"
@@ -23,6 +24,28 @@ AxisNames = Tuple[str, ...]
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
     """Build a mesh over the available devices (CPU hosts or TPU chips)."""
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_over_devices(
+    device_ids: Iterable[int],
+    axes: Sequence[str] = (DATA,),
+    shape: Optional[Sequence[int]] = None,
+) -> jax.sharding.Mesh:
+    """Build a mesh over an EXPLICIT device-id subset — the elastic re-mesh
+    primitive: after a straggler eviction, the session rebuilds its mesh
+    from ``ClusterSpec.healthy_devices()`` so restored arrays land only on
+    surviving hosts' devices.  Ids beyond the runtime's device count are
+    dropped (plans are sized for the full cluster; a smaller local runtime
+    keeps a valid prefix).  ``shape`` defaults to 1-D over the survivors.
+    """
+    pool = jax.devices()
+    devs = [pool[d] for d in device_ids if d < len(pool)]
+    if not devs:
+        raise ValueError("mesh_over_devices: no addressable devices in subset")
+    arr = np.array(devs)
+    if shape is not None:
+        arr = arr.reshape(tuple(shape))
+    return jax.sharding.Mesh(arr, tuple(axes))
 
 
 def batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

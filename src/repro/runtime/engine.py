@@ -60,6 +60,9 @@ class WaveEngine:
         # (instance, component, layer range, predecessor roles) — survives
         # rebind() so replanned plans reuse closures for unchanged steps.
         self._fn_cache: Dict[Tuple, Callable] = {}
+        # Device-group mesh cache (distributed mode): one Mesh per distinct
+        # device tuple, shared by activation and parameter placement.
+        self._mesh_cache: Dict[Tuple[int, ...], jax.sharding.Mesh] = {}
         self._bind(plan)
 
     # ------------------------------------------------------------------
@@ -142,22 +145,60 @@ class WaveEngine:
         )
         return preds, pred_info
 
+    def _group_devs(self, step: PlanStep) -> Tuple[int, ...]:
+        return tuple(d for d in step.devices if d < jax.device_count())
+
+    def _group_mesh(self, devs: Tuple[int, ...]) -> jax.sharding.Mesh:
+        mesh = self._mesh_cache.get(devs)
+        if mesh is None:
+            mesh = jax.sharding.Mesh(
+                np.array([jax.devices()[d] for d in devs]), ("dp",)
+            )
+            self._mesh_cache[devs] = mesh
+        return mesh
+
     def _put(self, x, step: PlanStep):
         """Move an activation onto the step's device group (flow transmission)."""
         if not self.distributed:
             return x
-        devs = [d for d in step.devices if d < jax.device_count()]
+        devs = self._group_devs(step)
         if not devs:
             return x
         if len(devs) == 1:
             return jax.device_put(x, jax.devices()[devs[0]])
-        mesh = jax.sharding.Mesh(
-            np.array([jax.devices()[d] for d in devs]), ("dp",)
-        )
         spec = jax.sharding.PartitionSpec(
             "dp" if x.ndim and x.shape[0] % len(devs) == 0 else None
         )
-        return jax.device_put(x, jax.sharding.NamedSharding(mesh, spec))
+        return jax.device_put(
+            x, jax.sharding.NamedSharding(self._group_mesh(devs), spec)
+        )
+
+    def _put_params(self, p, step: PlanStep):
+        """Replicate an instance's params onto the step's device group (the
+        single-controller analogue of parameter broadcast).  Params that
+        went through an optimizer update or an elastic restore are
+        committed somewhere; step math must run on ONE consistent device
+        set with the group-committed activations, so each step re-places
+        its instance's params onto its own group.  Leaves already resident
+        on the target sharding pass through untouched, and loss_and_grads
+        memoizes the placed tree per (instance, group) for the call, so a
+        k-entry instance pays one placement per group, not k."""
+        if not self.distributed:
+            return p
+        devs = self._group_devs(step)
+        if not devs:
+            return p
+        if len(devs) == 1:
+            target = jax.sharding.SingleDeviceSharding(jax.devices()[devs[0]])
+        else:
+            target = jax.sharding.NamedSharding(
+                self._group_mesh(devs), jax.sharding.PartitionSpec()
+            )
+        return jax.tree.map(
+            lambda a: a if getattr(a, "sharding", None) == target
+            else jax.device_put(a, target),
+            p,
+        )
 
     # ------------------------------------------------------------------
     def loss_and_grads(self, params, batches, *,
@@ -171,6 +212,10 @@ class WaveEngine:
         acts: Dict[int, Any] = {}
         losses: Dict[int, Any] = {}
         records: List[_StepRecord] = []
+        # Per-call placement memo: params are constant inside one
+        # loss_and_grads, so each (instance, device group) pair pays for
+        # its replication exactly once per call, not once per wave entry.
+        placed: Dict[Tuple[str, Tuple[int, ...]], Any] = {}
 
         waves = self.plan.waves()
         for widx in sorted(waves):
@@ -185,6 +230,11 @@ class WaveEngine:
                     "contrastive", "decoder"
                 )
 
+                pkey = (inst, self._group_devs(step))
+                inst_p = placed.get(pkey)
+                if inst_p is None:
+                    inst_p = self._put_params(params[inst], step)
+                    placed[pkey] = inst_p
                 if lo == 0:
                     preds, pred_info = self._entry_preds(mid)
                     pred_acts = [self._put(acts[p], step) for p in preds]
@@ -192,14 +242,14 @@ class WaveEngine:
                         c, inst, pred_info, lo, hi, is_loss_step, task
                     )
                     out, vjp = jax.vjp(
-                        partial(fn, batches), params[inst], *pred_acts
+                        partial(fn, batches), inst_p, *pred_acts
                     )
                     rec = _StepRecord(step, mid, inst, "entry", preds, vjp,
                                       is_loss_step, out_like=out)
                 else:
                     h_in = self._put(acts[mid], step)
                     fn = self._make_mid_fn(c, inst, lo, hi, is_loss_step, task)
-                    out, vjp = jax.vjp(partial(fn, batches), params[inst], h_in)
+                    out, vjp = jax.vjp(partial(fn, batches), inst_p, h_in)
                     rec = _StepRecord(step, mid, inst, "mid", [], vjp,
                                       is_loss_step, out_like=out)
                 records.append(rec)

@@ -36,7 +36,6 @@ Sessions come in two flavors:
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass
 from typing import (
@@ -66,6 +65,7 @@ from .launch.events import (
 __all__ = [
     "SessionConfig",
     "SessionCallbacks",
+    "CheckpointCallbacks",
     "ReplanRecord",
     "SpindleSession",
 ]
@@ -99,12 +99,16 @@ class SessionConfig:
     replan_on: Tuple[str, ...] = (
         "task_arrived", "task_completed", "straggler"
     )
-    #: shrink the cluster before a straggler replan: one device per flagged
-    #: host, always relative to the configured size, restored when the
-    #: flagged set empties.  (Deliberate simplification for this
-    #: single-process runtime — topology-aware shrink, removing a flagged
-    #: host's whole device block, is a ROADMAP item.)
+    #: evict flagged hosts before a straggler replan: the flagged hosts'
+    #: OWN device blocks (``ClusterSpec.devices_of``) leave the schedulable
+    #: pool — placement routes around the hole — always relative to the
+    #: configured cluster, restored when the flagged set empties.
     straggler_shrink: bool = False
+    #: jax Mesh for distributed execution: when set, bound sessions stand
+    #: up ``WaveEngine(distributed=True)`` (plan steps dispatch onto their
+    #: device groups) and an elastic restore rebuilds the mesh from the
+    #: healthy-host set.  ``None`` = single-process engine.
+    mesh: Any = None
     # train hyperparameters (bound sessions)
     lr: float = 5e-3
     weight_decay: float = 0.0
@@ -139,6 +143,34 @@ class SessionCallbacks:
         pass
 
 
+class CheckpointCallbacks(SessionCallbacks):
+    """A :class:`repro.ckpt.CheckpointManager` threaded through the session
+    callbacks — the checkpoint ↔ lifecycle seam.
+
+    ``on_step_end`` runs the manager's periodic ``maybe_save`` over the
+    bound session's live ``(params, opt_state)``.  Attaching one of these
+    ALSO arms the elastic restore path: a cluster-changing
+    ``StragglerDetected`` replan snapshots through this manager, rebuilds
+    the mesh from the healthy-host set, and restores the snapshot via
+    :func:`repro.ckpt.remesh.restore_to_mesh` — the session reports it as
+    ``ReplanRecord(mode="restore")``.
+    """
+
+    def __init__(self, manager: Any, *, save_extra: Optional[Dict] = None):
+        self.manager = manager
+        self.save_extra = dict(save_extra or {})
+
+    def on_step_end(self, session: "SpindleSession", step: int,
+                    loss: float, dt: float) -> None:
+        if session.params is None:
+            return  # plan-only sessions have no state to snapshot
+        self.manager.maybe_save(
+            step,
+            {"params": session.params, "opt": session.opt_state},
+            extra={"loss": loss, **self.save_extra},
+        )
+
+
 @dataclass
 class ReplanRecord:
     """What one signal-triggered replan did (handed to ``on_replan``)."""
@@ -147,13 +179,20 @@ class ReplanRecord:
     event: Event
     #: every effective event folded into this single replan
     events: Tuple[Event, ...] = ()
-    #: "hit" (exact cache hit) | "incremental" | "full" | "fallback"
+    #: "hit" (exact cache hit) | "incremental" | "full" | "fallback" |
+    #: "restore" (elastic checkpoint → re-mesh → restore around a
+    #: cluster-changing straggler event)
     mode: str = "full"
+    #: how the underlying plan itself was obtained (== ``mode`` except on
+    #: restore replans, where the planner mode is recorded here)
+    plan_mode: str = ""
     #: wall time THIS replan spent in the cache/planner (≈0 on exact hits)
     planning_seconds: float = 0.0
     #: engine closures retained across the rebind (bound sessions only)
     closures_cached: Optional[int] = None
     model_rebuilt: bool = False
+    #: checkpoint step the restore path snapshotted + restored (restore only)
+    restored_step: Optional[int] = None
 
 
 #: a model factory returns an MTModel or an (MTModel, batches) pair
@@ -191,8 +230,11 @@ class SpindleSession:
         self.tasks: Optional[Tuple[str, ...]] = (
             tuple(tasks) if tasks is not None else None
         )
-        #: live cluster — may shrink on straggler events (straggler_shrink)
+        #: live cluster — flagged hosts' device blocks leave the pool on
+        #: straggler events (straggler_shrink), restored on recovery
         self.cluster = self.config.cluster
+        #: live mesh — rebuilt over the healthy-host set by elastic restores
+        self.mesh = self.config.mesh
         self._straggler_hosts: frozenset = frozenset()
         self.model = None
         self.batches = batches
@@ -341,7 +383,9 @@ class SpindleSession:
             if model_changed or self.params is None:
                 self._refresh_params()
             if self.engine is None:
-                self.engine = WaveEngine(self.model, p)
+                self.engine = WaveEngine(
+                    self.model, p, distributed=self.config.mesh is not None
+                )
             else:
                 self.engine.rebind(
                     p, model=self.model if model_changed else None
@@ -383,10 +427,17 @@ class SpindleSession:
         if self.event_sources:
             import jax
 
-            host = jax.process_index()  # correct attribution for an
-            # aggregated per-host timing feed; a detector fed only this
-            # process's times cannot flag by itself (needs a collector)
+            host = jax.process_index()
             for src in self.event_sources:
+                # Prefer the aggregated per-host feed (a TimingCollector
+                # behind record_step turns this process's time into the
+                # full per-host vector); the raw (host, dt) feed is the
+                # legacy fallback under which a per-process detector can
+                # never flag by itself.
+                rec_step = getattr(src, "record_step", None)
+                if rec_step is not None:
+                    rec_step(dt)
+                    continue
                 rec = getattr(src, "record", None)
                 if rec is not None:
                     rec(host, dt)
@@ -465,11 +516,25 @@ class SpindleSession:
                 model_shift = True
             elif isinstance(event, StragglerDetected):
                 # the event carries the FULL currently-flagged set
-                new_flagged = frozenset(event.hosts)
+                cluster0 = self.config.cluster
+                new_flagged = frozenset(
+                    h for h in event.hosts if 0 <= h < cluster0.n_hosts
+                )
                 if self.config.straggler_shrink:
-                    if new_flagged == flagged:
-                        continue  # same degradation: nothing to adapt
-                    flagged = new_flagged
+                    # never evict the whole cluster: a flood flagging every
+                    # host degrades to a replan without eviction
+                    evictable = (
+                        new_flagged
+                        if len(new_flagged) < cluster0.n_hosts else flagged
+                    )
+                    if evictable != flagged:
+                        flagged = evictable
+                    elif frozenset(event.hosts) == flagged or not event.hosts:
+                        continue  # true duplicate / recovery no-op
+                    # else: the event carries hosts the topology cannot map
+                    # (detector/cluster n_hosts mismatch, or the flood
+                    # above) — still replan rather than silently dropping
+                    # the fault signal
                 elif not event.hosts:
                     continue  # recovery is a no-op when nothing was shrunk
             effective.append(event)
@@ -493,27 +558,73 @@ class SpindleSession:
         # (model, plan) pairs; observers are notified (on_plan/on_replan)
         # only after the whole turn succeeded.
         rollback = (
-            self.tasks, self.cluster, self._straggler_hosts,
+            self.tasks, self.cluster, self.mesh, self._straggler_hosts,
             self.model, self.batches, self.params, self.opt_state,
         )
         self.tasks = tasks
-        if flagged is not self._straggler_hosts:
+        cluster_changed = False
+        if flagged != self._straggler_hosts:
             self._straggler_hosts = flagged
-            n = max(1, self.config.cluster.n_devices - len(flagged))
-            self.cluster = dataclasses.replace(self.cluster, n_devices=n)
+            # topology-aware eviction: the flagged hosts' OWN device blocks
+            # leave the pool (shrink(()) ≡ full recovery — the spec then
+            # compares equal to the configured cluster)
+            self.cluster = self.config.cluster.shrink(flagged)
+            cluster_changed = True
         event = effective[-1]  # the record's headline event
 
+        # Elastic restore path: a cluster-changing straggler event on a
+        # bound session with a CheckpointManager threaded through the
+        # callbacks snapshots, replans around the hole, re-meshes over the
+        # healthy hosts, and restores the snapshot (§5.5 made survivable).
+        ckpt_mgr = (
+            self._checkpoint_manager()
+            if cluster_changed and self.engine is not None
+            and self.step_count > 0 else None
+        )  # nothing trained yet → plain shrink replan, nothing to restore
+        restored_step: Optional[int] = None
         old_plan, old_model = self.current_plan, self.model
         try:
             if model_shift and self.model is not None and (
                 self.model_factory is not None
             ):
                 self._build_model()  # rebuild for the shifted task set
+            if cluster_changed and self.config.mesh is not None:
+                # keep the live mesh in lockstep with the cluster (restore
+                # or not): evictions flatten it to 1-D over the survivors
+                # (the primary axis; re-stacking multi-axis shapes over a
+                # ragged survivor set is a follow-up), full recovery
+                # reinstates the configured mesh EXACTLY
+                if flagged:
+                    from .parallel.mesh import mesh_over_devices
+
+                    self.mesh = mesh_over_devices(
+                        self.cluster.healthy_devices(),
+                        axes=(self.config.mesh.axis_names[0],),
+                    )
+                else:
+                    self.mesh = self.config.mesh
+            if ckpt_mgr is not None:
+                # label = index of the last COMPLETED step — the same
+                # convention as the periodic path (on_step_end) and the
+                # train driver's resume (start_step = manifest.step + 1),
+                # so elastic snapshots and periodic saves interleave
+                # consistently (step_count > 0 guaranteed above).
+                snap_step = self.step_count - 1
+                ckpt_mgr.save(
+                    snap_step,
+                    {"params": self.params, "opt": self.opt_state},
+                    extra={
+                        "flagged_hosts": sorted(flagged),
+                        "tasks": list(self.tasks or ()),
+                    },
+                )
             s = self.cache.stats
             before = (s.hits, s.incremental, s.fallbacks)
             t0 = time.perf_counter()
             p = self._get_or_plan()
             plan_seconds = time.perf_counter() - t0
+            if ckpt_mgr is not None:
+                restored_step = self._remesh_restore(ckpt_mgr)
             if self.engine is not None:
                 if self.model is not old_model:
                     self._refresh_params()
@@ -522,29 +633,75 @@ class SpindleSession:
                     model=self.model if self.model is not old_model else None,
                 )
         except BaseException:
-            (self.tasks, self.cluster, self._straggler_hosts,
+            (self.tasks, self.cluster, self.mesh, self._straggler_hosts,
              self.model, self.batches, self.params, self.opt_state) = rollback
             raise
         if p is not self.current_plan:
             self.current_plan = p
             self._fire("on_plan", p)
         if s.fallbacks > before[2]:
-            mode = "fallback"
+            plan_mode = "fallback"
         elif s.hits > before[0]:
-            mode = "hit"
+            plan_mode = "hit"
         elif s.incremental > before[1]:
-            mode = "incremental"
+            plan_mode = "incremental"
         else:
-            mode = "full"
+            plan_mode = "full"
         info = ReplanRecord(
             event=event,
             events=tuple(effective),
-            mode=mode,
+            mode="restore" if restored_step is not None else plan_mode,
+            plan_mode=plan_mode,
             planning_seconds=plan_seconds,
             model_rebuilt=self.model is not old_model,
+            restored_step=restored_step,
         )
         if self.engine is not None:
             info.closures_cached = rebind_stats["closures_cached"]
         self.replans.append(info)
         self._fire("on_replan", event, old_plan, p, info)
         return p
+
+    # ------------------------------------------------------ elastic restore
+    def _checkpoint_manager(self) -> Optional[Any]:
+        """The CheckpointManager threaded through the callbacks, if any."""
+        for cb in self.callbacks:
+            mgr = getattr(cb, "manager", None)
+            if mgr is not None and hasattr(mgr, "save") and (
+                hasattr(mgr, "restore_latest")
+            ):
+                return mgr
+        return None
+
+    def _restore_targets(self, tree) -> Any:
+        """Per-leaf placement targets for a re-mesh restore.
+
+        With a configured mesh, every leaf restores replicated onto the
+        session's live mesh (already rebuilt over the healthy devices by
+        the cluster-change commit); without one (single-process engine)
+        leaves restore to the default device.
+        """
+        import jax
+
+        if self.config.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            sharding = NamedSharding(self.mesh, PartitionSpec())
+            return jax.tree.map(lambda _: sharding, tree)
+        dev = jax.devices()[0]
+        return jax.tree.map(lambda _: dev, tree)
+
+    def _remesh_restore(self, mgr: Any) -> int:
+        """Restore the latest snapshot onto the (re-built) healthy mesh."""
+        from .ckpt.remesh import restore_to_mesh
+
+        tree, manifest = mgr.restore_latest(
+            {"params": self.params, "opt": self.opt_state}
+        )
+        if tree is None:
+            raise RuntimeError(
+                "elastic restore: checkpoint manager has no snapshot"
+            )
+        placed = restore_to_mesh(tree, self._restore_targets(tree))
+        self.params, self.opt_state = placed["params"], placed["opt"]
+        return int(manifest["step"])

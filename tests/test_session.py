@@ -21,8 +21,9 @@ TASKS = ("img_text", "audio_text", "audio_vision")
 
 
 def make_session(**kw):
+    config = {"cluster": CLUSTER, **kw.pop("config", {})}
     return SpindleSession(
-        SessionConfig(cluster=CLUSTER, **kw.pop("config", {})),
+        SessionConfig(**config),
         model_factory=lambda tasks: tiny_multitask_clip(n_tasks=len(tasks)),
         tasks=TASKS,
         **kw,
@@ -174,30 +175,110 @@ def test_straggler_event_source_debounces():
     assert src.poll() == []  # same flagged set → no refire
 
 
-def test_straggler_shrink_replans_on_smaller_cluster():
-    session = make_session(config={"straggler_shrink": True}).bind()
-    n0 = session.cluster.n_devices
+def test_straggler_shrink_evicts_flagged_hosts_devices():
+    """Topology-aware eviction: a flagged host removes its OWN device block
+    (one device per host here), placement routes around the hole."""
+    cl = ClusterSpec(n_devices=8, island_size=4, devices_per_host=1,
+                     mem_bytes=96e9)
+    session = make_session(
+        config={"straggler_shrink": True, "cluster": cl}
+    ).bind()
+    n0 = cl.n_devices
     session.signal(StragglerDetected((6, 7)))
-    assert session.cluster.n_devices == n0 - 2
+    assert session.cluster.n_healthy == n0 - 2
+    assert session.cluster.healthy_devices() == tuple(range(6))
     assert session.current_plan.n_devices == n0 - 2
-    assert max(len(s.devices) for s in session.current_plan.steps) <= n0 - 2
+    plan_devs = {d for s in session.current_plan.steps for d in s.devices}
+    assert plan_devs.isdisjoint({6, 7})  # the flagged hosts' own devices
     session.step()  # still trains on the degraded cluster's plan
     dl, dg = _reference_delta(session)
     assert dl < 1e-6 and dg < 1e-6
 
-    # events carry the FULL flagged set: a re-fire with a grown set shrinks
+    # events carry the FULL flagged set: a re-fire with a grown set evicts
     # relative to the configured cluster, never compounding prior shrinks,
     # and a partial recovery grows the cluster back
     assert session.signal(StragglerDetected((6, 7))) is None  # same set
-    assert session.cluster.n_devices == n0 - 2
+    assert session.cluster.n_healthy == n0 - 2
     session.signal(StragglerDetected((5, 6, 7)))
-    assert session.cluster.n_devices == n0 - 3
+    assert session.cluster.n_healthy == n0 - 3
     session.signal(StragglerDetected((6,)))
-    assert session.cluster.n_devices == n0 - 1
+    assert session.cluster.n_healthy == n0 - 1
+    plan_devs = {d for s in session.current_plan.steps for d in s.devices}
+    assert 6 not in plan_devs and 5 in plan_devs and 7 in plan_devs
     # full recovery (the source fires an empty set) restores the cluster
     session.signal(StragglerDetected(()))
-    assert session.cluster.n_devices == n0
+    assert session.cluster == cl  # the ORIGINAL spec, exactly
     assert session.current_plan.n_devices == n0
+
+
+def test_unmappable_straggler_hosts_still_replan():
+    """A detector/cluster n_hosts mismatch (or a flood flagging every host)
+    must not silently drop the fault signal: the session replans without
+    evicting anyone instead of ignoring the event."""
+    cl = ClusterSpec(n_devices=8, island_size=4, devices_per_host=4,
+                     mem_bytes=96e9)  # 2 hosts
+    session = make_session(
+        config={"straggler_shrink": True, "cluster": cl}
+    ).bind()
+    # host 7 does not exist in this topology → no eviction, but a replan
+    p = session.signal(StragglerDetected((7,)))
+    assert p is not None and session.replans
+    assert session.cluster == cl  # nobody evicted
+    # a flood flagging every host also degrades to replan-only
+    session.signal(StragglerDetected((0, 1)))
+    assert session.cluster == cl
+    # recovery on an never-shrunk session stays a no-op
+    assert session.signal(StragglerDetected(())) is None
+
+
+def test_straggler_restore_replan_through_checkpoint(tmp_path):
+    """A cluster-changing straggler event on a session with a
+    CheckpointManager threaded through the callbacks snapshots, evicts the
+    host, and restores — ReplanRecord(mode="restore"), and the next step's
+    loss matches a reference run restored from the same checkpoint."""
+    from repro.ckpt import CheckpointManager, restore_checkpoint
+    from repro.session import CheckpointCallbacks
+
+    cl = ClusterSpec(n_devices=8, island_size=4, devices_per_host=2,
+                     mem_bytes=96e9)
+    mgr = CheckpointManager(str(tmp_path), every=0)  # periodic off
+    session = make_session(
+        config={"straggler_shrink": True, "cluster": cl},
+        callbacks=[CheckpointCallbacks(mgr)],
+    ).bind()
+    session.run(steps=2)
+
+    session.signal(StragglerDetected((1,)))
+    rec = session.replans[-1]
+    # snapshot labeled with the LAST COMPLETED step (run(2) → steps 0, 1),
+    # the same convention as periodic saves and driver resume
+    assert rec.mode == "restore" and rec.restored_step == 1
+    assert rec.plan_mode in ("full", "incremental", "fallback")
+    plan_devs = {d for s in session.current_plan.steps for d in s.devices}
+    assert plan_devs.isdisjoint(cl.devices_of(1))  # exactly (2, 3) evicted
+
+    # the restored state IS the snapshot: a reference run restored from the
+    # same checkpoint produces the same next loss
+    ref, manifest = restore_checkpoint(
+        str(tmp_path), {"params": session.params, "opt": session.opt_state}
+    )
+    assert manifest["step"] == 1
+    ref_loss = float(session.model.reference_loss(
+        ref["params"], session.batches
+    ))
+    loss = session.step()
+    assert abs(loss - ref_loss) < 1e-6
+    dl, dg = _reference_delta(session)
+    assert dl < 1e-6 and dg < 1e-6
+
+    # without a snapshot-capable callback the same event replans WITHOUT
+    # the restore mode (plain topology shrink)
+    session2 = make_session(
+        config={"straggler_shrink": True, "cluster": cl}
+    ).bind()
+    session2.signal(StragglerDetected((1,)))
+    assert session2.replans[-1].mode != "restore"
+    assert session2.replans[-1].restored_step is None
 
 
 def test_duplicate_task_events_are_noops():

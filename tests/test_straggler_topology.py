@@ -1,0 +1,138 @@
+"""Elastic host topology: per-host eviction, aggregated detection, recovery.
+
+Covers the three contract points of the elastic subsystem (DESIGN.md §12):
+a flagged host's devices vanish from every placement (spindle AND the
+block-placing optimus baseline), the straggler detector flags only once it
+has ≥ min_samples of the AGGREGATED per-host stream, and shrink → recover
+round-trips to the exact original ClusterSpec.
+"""
+
+import pytest
+
+from repro.ckpt.straggler import StragglerDetector, TimingCollector
+from repro.core import ClusterSpec, plan
+from repro.core.workloads import multitask_clip
+from repro.launch.events import StragglerEventSource
+
+CLUSTER = ClusterSpec(
+    n_devices=16, island_size=8, devices_per_host=4, mem_bytes=96e9
+)
+
+
+# --------------------------------------------------------------------------
+# Host → device map
+# --------------------------------------------------------------------------
+
+
+def test_host_topology_accessors():
+    assert CLUSTER.n_hosts == 4
+    assert CLUSTER.hosts() == [
+        [0, 1, 2, 3], [4, 5, 6, 7], [8, 9, 10, 11], [12, 13, 14, 15]
+    ]
+    assert CLUSTER.devices_of(2) == (8, 9, 10, 11)
+    assert CLUSTER.devices_of(99) == ()  # out of range: empty, not a raise
+    assert all(CLUSTER.host_of(d) == 1 for d in (4, 5, 6, 7))
+    # host size defaults to the island size (one host per NVLink node)
+    c = ClusterSpec(n_devices=16, island_size=8)
+    assert c.n_hosts == 2 and c.devices_of(1) == tuple(range(8, 16))
+    # ragged tail: the last host owns the remainder
+    r = ClusterSpec(n_devices=10, island_size=8, devices_per_host=4)
+    assert r.n_hosts == 3 and r.devices_of(2) == (8, 9)
+
+
+def test_healthy_devices_and_shrink():
+    assert CLUSTER.healthy_devices() == tuple(range(16))
+    assert CLUSTER.healthy_devices((1, 3)) == (
+        0, 1, 2, 3, 8, 9, 10, 11
+    )
+    s = CLUSTER.shrink((1, 3))
+    assert s.flagged_hosts == (1, 3)
+    assert s.n_devices == 16  # the physical cluster did not change
+    assert s.n_healthy == 8
+    with pytest.raises(ValueError, match="all"):
+        CLUSTER.shrink((0, 1, 2, 3))
+    # out-of-range flags are dropped, not errors
+    assert CLUSTER.shrink((2, 77)).flagged_hosts == (2,)
+
+
+def test_meshconfig_cluster_spec_bridge():
+    """MeshConfig → ClusterSpec carries the host map through (the config
+    path the elastic_smoke driver uses)."""
+    from repro.config import MeshConfig
+
+    c = MeshConfig(shape=(4, 4), devices_per_host=4).cluster_spec(
+        island_size=8, mem_bytes=1e12
+    )
+    assert c.n_devices == 16 and c.n_hosts == 4
+    assert c.devices_of(3) == (12, 13, 14, 15)
+    assert c.island_size == 8 and c.mem_bytes == 1e12
+    # devices_per_host=0 defers to the island size, like ClusterSpec itself
+    d = MeshConfig(shape=(2, 8)).cluster_spec()
+    assert d.n_hosts == 2 and d.host_size == 8
+
+
+def test_shrink_recover_restores_original_spec_exactly():
+    s = CLUSTER.shrink((2,))
+    assert s != CLUSTER
+    assert s.restore() == CLUSTER
+    assert s.shrink(()) == CLUSTER  # shrink(()) ≡ restore()
+
+
+# --------------------------------------------------------------------------
+# Flagged host's devices absent from every placement
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("planner", ["spindle", "sequential", "optimus"])
+def test_flagged_host_devices_absent_from_placement(planner):
+    shrunk = CLUSTER.shrink((1,))
+    p = plan(multitask_clip(3), shrunk, planner=planner)
+    assert p.n_devices == 12
+    bad = set(CLUSTER.devices_of(1))
+    for (widx, mid), e in p.placement.entries.items():
+        assert not set(p.placement.devices_for(widx, mid)) & bad
+    used = {d for s in p.steps for d in s.devices}
+    assert used and used.isdisjoint(bad)
+    assert used <= set(shrunk.healthy_devices())
+
+
+def test_healthy_plan_uses_full_cluster():
+    p = plan(multitask_clip(3), CLUSTER)
+    assert p.n_devices == 16
+    assert max(len(s.devices) for s in p.steps) <= 16
+
+
+# --------------------------------------------------------------------------
+# Aggregated per-host timing stream
+# --------------------------------------------------------------------------
+
+
+def test_detector_flags_only_with_min_samples_aggregated():
+    det = StragglerDetector(n_hosts=4, min_samples=8, threshold=1.5)
+    src = StragglerEventSource(
+        det, collector=TimingCollector(n_hosts=4, skew={3: 3.0})
+    )
+    for _ in range(7):  # one short of min_samples: never flags
+        src.record_step(1.0)
+        assert det.stragglers() == []
+        assert src.poll() == []
+    src.record_step(1.0)  # 8th aggregated sample
+    evs = src.poll()
+    assert [e.hosts for e in evs] == [(3,)]
+    assert src.poll() == []  # debounced: same flagged set → no refire
+
+
+def test_record_step_without_collector_cannot_flag():
+    """The per-process fallback feeds one host only — the detector sees a
+    single median and (by design) never crosses the quorum to flag."""
+    det = StragglerDetector(n_hosts=4, min_samples=4, threshold=1.5)
+    src = StragglerEventSource(det)
+    for _ in range(32):
+        src.record_step(5.0)  # "slow", but there is nothing to compare to
+    assert det.stragglers() == []
+    assert src.poll() == []
+
+
+def test_collector_skew_identity_is_uniform():
+    vec = TimingCollector(n_hosts=3).gather(2.0)
+    assert vec == [2.0, 2.0, 2.0]
