@@ -58,6 +58,7 @@ def run(smoke: bool = False) -> List[Dict]:
                     "cached_s": cached,
                     "incremental_s": incremental,
                     "cache_hit_rate": cache.stats.hit_rate,
+                    "bracket_hits": cache.stats.bracket_hits,
                     "n_waves": len(p.waves()),
                     "n_steps": len(p.steps),
                 }
@@ -72,6 +73,7 @@ def main(rows=None) -> None:
               f"plan={r['planner_s']*1e3:8.1f} ms "
               f"hit={r['cached_s']*1e3:6.2f} ms "
               f"incr={r['incremental_s']*1e3:8.1f} ms "
+              f"brk={r['bracket_hits']:4d} "
               f"waves={r['n_waves']:3d} steps={r['n_steps']:3d}")
     worst = max(r["planner_s"] for r in rows)
     print(f"worst planner time: {worst:.2f}s (paper: <3s)")

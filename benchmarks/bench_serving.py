@@ -1,26 +1,34 @@
-"""Serving bench — continuous batching + replanning vs. the baselines.
+"""Serving bench — paged + chunked serving vs. the continuous baselines.
 
-Three policies serve the SAME scripted arrival trace (two request families,
+Four policies serve the SAME scripted arrival trace (two request families,
 mixed prompt buckets and generation lengths, a mid-trace mix shift) over
 the same served model:
 
   * ``static``            — classic batch serving: admit a full batch,
                             decode until EVERY request in it finishes, then
                             refill (the old ``launch/serve.py`` loop).
-  * ``continuous``        — continuous batching (join/evict per step), but
-                            planned ONCE for the initial mix: the plan goes
-                            stale as the mix drifts.
-  * ``continuous_replan`` — continuous batching + the full dynamicity
+  * ``continuous``        — PR 3 continuous batching (batch-1 joins, slab
+                            KV), planned ONCE for the initial mix: the
+                            plan goes stale as the mix drifts.
+  * ``continuous_replan`` — PR 3 continuous batching + the full dynamicity
                             machinery: every mix shift replans through
                             ``session.signal`` / the PlanCache.
+  * ``paged_chunked``     — the serving fast path: paged KV pool +
+                            stacked admission prefills + chunked prefill
+                            interleaved with decode (DIP-style), replanned
+                            per mix shift over chunked-prefill towers.
 
 Reported per policy: throughput at equal output tokens, p50/p99 request
-latency, decode steps, replan counts/modes, planner wall time, and the
-plan-cache stats.  Expected shape: continuous > static on throughput
-(slots refill instead of draining), and continuous_replan ≈ continuous on
-wall time (replans are cache hits / incremental and happen off the decode
-fast path) while keeping the plan fresh (``planned_makespan_ms`` tracks
-the mix instead of the stale initial estimate).
+latency, decode steps, prefill dispatch/chunk counts, the KV page-pool
+high-water vs. the slab footprint, replan counts/modes, planner wall
+time, and the plan-cache stats.  Expected shape: continuous > static on
+throughput (slots refill instead of draining); paged_chunked > continuous
+(stacked prefills cut dispatch overhead, chunks fill decode bubbles) at a
+page-pool high-water BELOW the slots×cache_len slab footprint; and
+continuous_replan ≈ continuous on wall time (replans are cache hits /
+incremental and happen off the decode fast path) while keeping the plan
+fresh (``planned_makespan_ms`` tracks the mix instead of the stale
+initial estimate).
 
 A warmup pass over the same trace pre-compiles the jitted prefill/decode
 executables (shared per served model) and pre-warms each policy's
@@ -44,24 +52,40 @@ ARCH = "qwen3-0.6b"
 SLOTS = 4
 CACHE_LEN = 96
 
-#: (family, prompt_len, gen_len, arrival_step) — phase A is short-prompt
-#: chat traffic with strongly mixed gen lengths (static pays the max of
-#: every group while short requests sit finished in their slots), phase B
-#: shifts the mix to long-prompt code traffic, phase C returns to chat.
+#: (family, prompt_len, gen_len, arrival_step) — a PREFILL-HEAVY mix (the
+#: regime DIP's chunked interleave targets: long prompts, short-to-medium
+#: completions — RAG/code-completion-style traffic).  Phase A is chat with
+#: strongly mixed gen lengths (static pays the max of every group while
+#: short requests sit finished in their slots), phase B shifts the mix to
+#: LONG-prompt code traffic (one-shot, a 64-token prompt stalls the whole
+#: decode batch), phase C returns to chat.  Arrivals come in same-length
+#: BURSTS of 2-3 (batched clients / gateway flushes), so admission sees
+#: stackable groups — one prefill per group vs. k batch-1 calls.
 TRACE: List = (
-    [("chat", 12, 6 if i % 2 else 30, float(i)) for i in range(12)]
-    + [("code", 40, 8 if i % 2 else 24, 20.0 + i) for i in range(8)]
-    + [("chat", 12, 12, 40.0 + i) for i in range(6)]
+    [("chat", 24, 3 if i % 2 else 12, float(2 * (i // 2))) for i in range(12)]
+    + [("code", 64, 3 if i % 2 else 8, 12.0 + 2 * (i // 2)) for i in range(8)]
+    + [("chat", 24, 6, 22.0 + 2 * (i // 3)) for i in range(6)]
 )
 SMOKE_TRACE: List = (
-    [("chat", 12, 4 if i % 2 else 12, float(i)) for i in range(6)]
-    + [("code", 40, 3 if i % 2 else 8, 8.0 + i) for i in range(3)]
+    [("chat", 24, 2 if i % 2 else 6, float(2 * (i // 2))) for i in range(6)]
+    + [("code", 64, 2 if i % 2 else 5, 6.0 + (i // 2)) for i in range(4)]
 )
 
+PAGE_SIZE = 16
+CHUNK = 32
+DUTY = 2.0
+
+#: (policy, admission, replan, extra ServingConfig fields) — the three PR 3
+#: baselines keep batch-1 joins + slab KV so the fast-path delta is honest
+PR3 = {"kv_layout": "slab", "batched_prefill": False}
+FAST = {"kv_layout": "paged", "page_size": PAGE_SIZE,
+        "prefill_chunk": CHUNK, "prefill_duty": DUTY,
+        "batched_prefill": True, "replan_cooldown": 4}
 POLICIES = (
-    ("static", "static", "off"),
-    ("continuous", "continuous", "initial"),
-    ("continuous_replan", "continuous", "mix"),
+    ("static", "static", "off", PR3),
+    ("continuous", "continuous", "initial", PR3),
+    ("continuous_replan", "continuous", "mix", PR3),
+    ("paged_chunked", "continuous", "mix", FAST),
 )
 
 
@@ -81,7 +105,8 @@ def _requests(model, trace) -> List[Request]:
     return reqs
 
 
-def _serve(model, params, trace, *, admission, replan, plan_cache):
+def _serve(model, params, trace, *, admission, replan, plan_cache,
+           extra=None):
     session = ServingSession(
         ServingConfig(
             arch=ARCH,
@@ -89,6 +114,7 @@ def _serve(model, params, trace, *, admission, replan, plan_cache):
             cache_len=CACHE_LEN,
             admission=admission,
             replan=replan,
+            **(extra or {}),
         ),
         model=model,
         params=params,
@@ -106,27 +132,27 @@ def run(smoke: bool = False) -> List[Dict]:
     params = model.init(jax.random.PRNGKey(0))
 
     reps = 2 if smoke else 4
-    caches = {p: PlanCache(maxsize=64) for p, _, _ in POLICIES}
+    caches = {p: PlanCache(maxsize=64) for p, _, _, _ in POLICIES}
     # warmup: compile prefill/decode, pre-plan each policy's mixes
-    for policy, admission, replan in POLICIES:
+    for policy, admission, replan, extra in POLICIES:
         _serve(model, params, trace,
                admission=admission, replan=replan,
-               plan_cache=caches[policy])
+               plan_cache=caches[policy], extra=extra)
     # best-of-reps, reps INTERLEAVED across policies: background load on a
     # shared CPU drifts on a timescale of minutes, so measuring policies in
     # separate windows would compare different machines — interleaving puts
     # every policy in every load epoch and min() picks the quiet one
     best: Dict[str, tuple] = {}
     for _ in range(reps):
-        for policy, admission, replan in POLICIES:
+        for policy, admission, replan, extra in POLICIES:
             session, m = _serve(model, params, trace,
                                 admission=admission, replan=replan,
-                                plan_cache=caches[policy])
+                                plan_cache=caches[policy], extra=extra)
             if (policy not in best
                     or m["busy_seconds"] < best[policy][1]["busy_seconds"]):
                 best[policy] = (session, m)
     rows: List[Dict] = []
-    for policy, admission, replan in POLICIES:
+    for policy, admission, replan, extra in POLICIES:
         session, m = best[policy]
         rows.append(
             {
@@ -136,8 +162,15 @@ def run(smoke: bool = False) -> List[Dict]:
                 "arch": ARCH,
                 "slots": SLOTS,
                 "requests": m["requests"],
+                "kv_layout": m["kv_layout"],
                 "output_tokens": m["output_tokens"],
                 "decode_steps": m["decode_steps"],
+                "prefill_calls": m["prefill_calls"],
+                "chunk_steps": m["chunk_steps"],
+                "interleaved_chunks": m["interleaved_chunks"],
+                "kv_slab_tokens": m["kv_slab_tokens"],
+                "kv_page_hw_tokens": m.get("kv_page_hw_tokens", 0),
+                "kv_mem_saving": m.get("kv_mem_saving", 0.0),
                 "wall_seconds": m["wall_seconds"],
                 "busy_seconds": m["busy_seconds"],
                 "throughput_tok_s": m["throughput_tok_s"],
@@ -156,17 +189,21 @@ def run(smoke: bool = False) -> List[Dict]:
 def main(rows=None) -> None:
     rows = rows if rows is not None else run()
     by = {r["policy"]: r for r in rows}
-    print(f"{'policy':<18} {'tok':>5} {'steps':>6} {'tok/s':>8} "
-          f"{'p50 ms':>8} {'p99 ms':>8} {'replans':>8} {'plan s':>7}")
+    print(f"{'policy':<18} {'tok':>5} {'steps':>6} {'pre':>4} {'tok/s':>8} "
+          f"{'p50 ms':>8} {'p99 ms':>8} {'kv hw':>6} {'replans':>8} "
+          f"{'plan s':>7}")
     for r in rows:
         print(
             f"{r['policy']:<18} {r['output_tokens']:>5} "
-            f"{r['decode_steps']:>6} {r['throughput_tok_s']:>8.0f} "
+            f"{r['decode_steps']:>6} {r['prefill_calls']:>4} "
+            f"{r['throughput_tok_s']:>8.0f} "
             f"{r['p50_latency_s']*1e3:>8.1f} {r['p99_latency_s']*1e3:>8.1f} "
+            f"{r['kv_page_hw_tokens'] or r['kv_slab_tokens']:>6} "
             f"{r['replans']:>8} {r['planning_seconds']:>7.3f}"
         )
     st, ct = by.get("static"), by.get("continuous")
     cr = by.get("continuous_replan")
+    pc = by.get("paged_chunked")
     if st and ct:
         print("continuous vs static throughput: "
               f"{ct['throughput_tok_s'] / max(st['throughput_tok_s'], 1e-9):.2f}x "
@@ -176,6 +213,13 @@ def main(rows=None) -> None:
               f"{cr['throughput_tok_s'] / max(ct['throughput_tok_s'], 1e-9):.2f}x "
               f"(replan overhead {cr['planning_seconds']*1e3:.1f} ms, "
               f"modes: {cr['replan_modes']})")
+    if ct and pc:
+        print("paged+chunked vs continuous throughput: "
+              f"{pc['throughput_tok_s'] / max(ct['throughput_tok_s'], 1e-9):.2f}x "
+              f"({pc['prefill_calls']} vs {ct['prefill_calls']} prefill "
+              f"dispatches, {pc['interleaved_chunks']} interleaved chunks, "
+              f"kv high-water {pc['kv_page_hw_tokens']} vs slab "
+              f"{pc['kv_slab_tokens']} tokens)")
 
 
 if __name__ == "__main__":

@@ -33,16 +33,19 @@ def main() -> None:
     print(f"multitask_clip plan: {len(p.waves())} waves / {len(p.steps)} "
           f"steps, makespan {p.makespan*1e3:.1f} ms/iter")
 
-    # the serving side: submit requests to a queue; the session joins them
-    # into the continuous decode batch, evicts on completion, and replans
-    # through the same PlanCache whenever the request mix shifts
+    # the serving side: submit requests to a queue; the session stacks
+    # same-length admissions into one prefill, streams long prompts into
+    # the shared KV page pool in chunks interleaved with decode steps, and
+    # replans through the same PlanCache whenever the request mix shifts
     serving = ServingSession(
-        ServingConfig(arch="qwen3-0.6b", max_slots=4, cache_len=32)
+        ServingConfig(arch="qwen3-0.6b", max_slots=4, cache_len=32,
+                      page_size=8, prefill_chunk=8)
     )
     rng = jax.random.PRNGKey(0)
     for rid in range(6):
+        plen = 8 if rid < 4 else 12  # the code prompts stream in chunks
         prompt = jax.random.randint(
-            jax.random.fold_in(rng, rid), (8,), 0, serving.model.cfg.vocab
+            jax.random.fold_in(rng, rid), (plen,), 0, serving.model.cfg.vocab
         )
         serving.submit(Request(rid=rid, tokens=prompt, max_new_tokens=6,
                                family="chat" if rid < 4 else "code"))
@@ -50,7 +53,9 @@ def main() -> None:
         serving.step()
     m = serving.metrics()
     print(f"served {m['requests']} requests ({m['output_tokens']} tokens) in "
-          f"{m['decode_steps']} decode steps; {m['replans']} replans "
+          f"{m['decode_steps']} decode steps + {m['chunk_steps']} prefill "
+          f"chunks; kv high-water {m['kv_page_hw_tokens']} of "
+          f"{m['kv_slab_tokens']} slab tokens; {m['replans']} replans "
           f"{m['replan_modes']}")
 
     # a ~100M-class config: qwen3-0.6b reduced in depth/width but real vocab

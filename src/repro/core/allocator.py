@@ -162,11 +162,69 @@ def solve_continuous(
     return c_star, n_star
 
 
+class BracketMemo:
+    """Cross-plan memo of each MetaOp's bi-point bracket ingredients.
+
+    ``discretize`` spends its time enumerating **valid allocations** (an
+    O(N · divisors) sweep of ``best_config``) to bracket the continuous
+    optimum — work that depends only on the MetaOp's shape identity and the
+    cluster width, not on the timing source or the level it sits in.  The
+    PlanCache owns one of these so incremental replans of *changed* levels
+    skip that sweep (and the per-width ``best_config`` query) for every
+    MetaOp whose identity is unchanged — the sub-level analogue of the
+    scaling-curve memo.  Hits surface as the ``bracket_hits`` cache stat.
+
+    Only timing-independent facts are cached (valid widths + best configs);
+    curve estimates still go through the live estimator, so a custom
+    ``time_fn`` can never read stale times through this memo.
+    """
+
+    def __init__(self, maxsize: int = 8192):
+        self.maxsize = maxsize
+        self.hits = 0
+        self._valids: Dict[Tuple, List[int]] = {}
+        self._configs: Dict[Tuple, Optional[ParallelConfig]] = {}
+
+    @staticmethod
+    def _key(m: MetaOp, n_devices: int) -> Tuple:
+        return (m.op_type, m.batch_size, m.seq_len, m.max_tp, n_devices)
+
+    def _bound(self, d: Dict) -> None:
+        if len(d) > self.maxsize:  # drop the oldest half (insertion order)
+            for key in list(d)[: len(d) // 2]:
+                del d[key]
+
+    def valids(self, m: MetaOp, n_devices: int) -> List[int]:
+        key = self._key(m, n_devices)
+        v = self._valids.get(key)
+        if v is None:
+            v = valid_allocations(m, n_devices)
+            self._bound(self._valids)
+            self._valids[key] = v
+        else:
+            self.hits += 1
+        return v
+
+    def config(self, m: MetaOp, n: int) -> Optional[ParallelConfig]:
+        # no hit counting here: every discretize() call goes through
+        # valids() first, so bracket_hits counts each memo-served MetaOp
+        # exactly once — config reuse rides along uncounted by design
+        key = self._key(m, n) + ("cfg",)
+        if key not in self._configs:
+            self._bound(self._configs)
+            self._configs[key] = best_config(m, n)
+        return self._configs[key]
+
+
 def bracket_valid(
-    m: MetaOp, n_star: float, n_devices: int
+    m: MetaOp, n_star: float, n_devices: int,
+    memo: Optional[BracketMemo] = None,
 ) -> Tuple[int, int]:
     """Closest valid integers n̲ ≤ n* ≤ n̄ (n̲ may be the 0 dummy)."""
-    valids = valid_allocations(m, n_devices)
+    valids = (
+        memo.valids(m, n_devices) if memo is not None
+        else valid_allocations(m, n_devices)
+    )
     lo = 0
     hi = valids[-1] if valids else 0
     for v in valids:
@@ -186,11 +244,16 @@ def discretize(
     n_star: float,
     c_star: float,
     n_devices: int,
+    memo: Optional[BracketMemo] = None,
 ) -> List[ASLTuple]:
     """Bi-point discretization of ⟨n*_m, 0, L_m⟩ per conds. (10a)/(10b)."""
-    lo, hi = bracket_valid(m, n_star, n_devices)
+
+    def _config(n: int) -> Optional[ParallelConfig]:
+        return memo.config(m, n) if memo is not None else best_config(m, n)
+
+    lo, hi = bracket_valid(m, n_star, n_devices, memo)
     if lo == hi:
-        cfg = best_config(m, hi)
+        cfg = _config(hi)
         assert cfg is not None
         return [ASLTuple(m.meta_id, hi, m.L, curve.estimate(hi), cfg)]
 
@@ -200,7 +263,7 @@ def discretize(
     if lo == 0 or math.isinf(t_lo):
         # Dummy lower allocation: all L ops run at n̄; (10b) is preserved by
         # the zero-device tuple which is then ignored (§3.3).
-        cfg = best_config(m, hi)
+        cfg = _config(hi)
         assert cfg is not None
         return [ASLTuple(m.meta_id, hi, m.L, t_hi, cfg)]
 
@@ -217,15 +280,15 @@ def discretize(
 
     out: List[ASLTuple] = []
     if l_hi > 0:
-        cfg = best_config(m, hi)
+        cfg = _config(hi)
         assert cfg is not None
         out.append(ASLTuple(m.meta_id, hi, l_hi, t_hi, cfg))
     if l_lo > 0:
-        cfg = best_config(m, lo)
+        cfg = _config(lo)
         assert cfg is not None
         out.append(ASLTuple(m.meta_id, lo, l_lo, t_lo, cfg))
     if not out:  # L rounded away entirely — never valid, restore full run
-        cfg = best_config(m, hi)
+        cfg = _config(hi)
         assert cfg is not None
         out.append(ASLTuple(m.meta_id, hi, m.L, t_hi, cfg))
     return out
@@ -237,14 +300,17 @@ def allocate_level(
     n_devices: int,
     *,
     c_hint: Optional[float] = None,
+    bracket_memo: Optional[BracketMemo] = None,
 ) -> LevelAllocation:
-    """Full §3.3 pipeline for one MetaLevel (``c_hint`` warm-starts eq. 9)."""
+    """Full §3.3 pipeline for one MetaLevel (``c_hint`` warm-starts eq. 9;
+    ``bracket_memo`` reuses unchanged MetaOps' bi-point brackets)."""
     curves = {m.meta_id: estimator.curve(m) for m in metas}
     c_star, n_star = solve_continuous(metas, curves, n_devices, c_hint=c_hint)
     tuples: Dict[int, List[ASLTuple]] = {}
     for m in metas:
         tuples[m.meta_id] = discretize(
-            m, curves[m.meta_id], n_star[m.meta_id], c_star, n_devices
+            m, curves[m.meta_id], n_star[m.meta_id], c_star, n_devices,
+            memo=bracket_memo,
         )
     return LevelAllocation(c_star=c_star, n_star=n_star, tuples=tuples)
 

@@ -31,7 +31,12 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
-from .allocator import LevelAllocation, allocate_balanced, allocate_level
+from .allocator import (
+    BracketMemo,
+    LevelAllocation,
+    allocate_balanced,
+    allocate_level,
+)
 from .contraction import MetaGraph, MetaOp, contract
 from .costmodel import HardwareSpec, V5E, make_time_fn
 from .estimator import (
@@ -128,17 +133,29 @@ class ProfiledEstimatorStage:
         )
 
 
+@dataclass
 class SpindleAllocatorStage:
-    """§3.3 MPSP relaxation + bi-point discretization."""
+    """§3.3 MPSP relaxation + bi-point discretization.
+
+    ``bracket_memo`` (wired by the PlanCache) reuses unchanged MetaOps'
+    bi-point brackets across replans, so ``discretize`` skips its
+    valid-allocation sweep inside changed levels."""
+
+    bracket_memo: Optional[BracketMemo] = None
 
     def allocate(self, metas, estimator, n_devices) -> LevelAllocation:
-        return allocate_level(metas, estimator, n_devices)
+        return allocate_level(
+            metas, estimator, n_devices, bracket_memo=self.bracket_memo
+        )
 
     def allocate_warm(self, metas, estimator, n_devices,
                       c_hint: float) -> LevelAllocation:
         """Changed-level replan path: warm-start the MPSP bisection bracket
         from a cached C̃* (the previous plan's optimum for this level)."""
-        return allocate_level(metas, estimator, n_devices, c_hint=c_hint)
+        return allocate_level(
+            metas, estimator, n_devices, c_hint=c_hint,
+            bracket_memo=self.bracket_memo,
+        )
 
 
 class BalancedAllocatorStage:
@@ -450,6 +467,7 @@ def get_pipeline(
     placement_strategy: str = "spindle",
     profile_powers_of_two: bool = True,
     curve_memo: Optional[Dict[Tuple, ScalingCurve]] = None,
+    bracket_memo: Optional[BracketMemo] = None,
 ) -> PlannerPipeline:
     """Resolve a registered planner pipeline by name."""
     try:
@@ -462,22 +480,25 @@ def get_pipeline(
         placement_strategy=placement_strategy,
         profile_powers_of_two=profile_powers_of_two,
         curve_memo=curve_memo,
+        bracket_memo=bracket_memo,
     )
 
 
 def _spindle_factory(*, placement_strategy="spindle",
-                     profile_powers_of_two=True, curve_memo=None):
+                     profile_powers_of_two=True, curve_memo=None,
+                     bracket_memo=None):
     return PlannerPipeline(
         name="spindle",
         estimator=ProfiledEstimatorStage(profile_powers_of_two, curve_memo),
-        allocator=SpindleAllocatorStage(),
+        allocator=SpindleAllocatorStage(bracket_memo),
         scheduler=WavefrontSchedulerStage(),
         placement=LocalityPlacementStage(placement_strategy),
     )
 
 
 def _sequential_factory(*, placement_strategy="spindle",
-                        profile_powers_of_two=True, curve_memo=None):
+                        profile_powers_of_two=True, curve_memo=None,
+                        bracket_memo=None):
     return PlannerPipeline(
         name="sequential",
         estimator=ProfiledEstimatorStage(profile_powers_of_two, curve_memo),
@@ -488,7 +509,8 @@ def _sequential_factory(*, placement_strategy="spindle",
 
 
 def _distmm_factory(*, placement_strategy="spindle",
-                    profile_powers_of_two=True, curve_memo=None):
+                    profile_powers_of_two=True, curve_memo=None,
+                    bracket_memo=None):
     return PlannerPipeline(
         name="distmm_mt",
         estimator=ProfiledEstimatorStage(profile_powers_of_two, curve_memo),
@@ -499,7 +521,8 @@ def _distmm_factory(*, placement_strategy="spindle",
 
 
 def _optimus_factory(*, placement_strategy="spindle",
-                     profile_powers_of_two=True, curve_memo=None):
+                     profile_powers_of_two=True, curve_memo=None,
+                     bracket_memo=None):
     if placement_strategy != "spindle":
         raise ValueError(
             "the optimus planner places onto fixed task blocks; "

@@ -28,7 +28,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .allocator import ASLTuple, LevelAllocation
+from .allocator import ASLTuple, BracketMemo, LevelAllocation
 from .contraction import MetaOp, contract
 from .costmodel import HardwareSpec, V5E
 from .estimator import ScalingCurve, TimeFn
@@ -126,6 +126,8 @@ class PlanCacheStats:
     levels_replanned: int = 0
     warm_start_hits: int = 0  # changed levels whose MPSP bisection was
     # warm-started from the cached C̃* bracket
+    bracket_hits: int = 0  # MetaOps whose bi-point bracket (valid-width
+    # sweep) was served from the cross-plan BracketMemo
     fallbacks: int = 0  # incremental merge failed validation → full replan
 
     @property
@@ -145,6 +147,7 @@ class PlanCacheStats:
             "levels_reused": self.levels_reused,
             "levels_replanned": self.levels_replanned,
             "warm_start_hits": self.warm_start_hits,
+            "bracket_hits": self.bracket_hits,
             "fallbacks": self.fallbacks,
             "hit_rate": self.hit_rate,
         }
@@ -179,6 +182,9 @@ class PlanCache:
         self.stats = PlanCacheStats()
         self._entries: "OrderedDict[str, _CacheEntry]" = OrderedDict()
         self._curve_memos: Dict[HardwareSpec, Dict[Tuple, ScalingCurve]] = {}
+        # Cross-plan bi-point bracket memo (timing-independent, so one memo
+        # serves every hw/time_fn combination; see BracketMemo).
+        self.bracket_memo = BracketMemo(maxsize=curve_memo_max)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -382,13 +388,16 @@ def plan_cached(
         return hit
 
     # Curve memoization is only sound for the deterministic analytic model;
-    # a user-supplied time_fn may close over anything.
+    # a user-supplied time_fn may close over anything.  The bracket memo
+    # caches only timing-independent combinatorics, so it always applies.
     memo = cache.curve_memo(hw) if time_fn is None else None
+    bracket_hits0 = cache.bracket_memo.hits
     pipe = get_pipeline(
         planner,
         placement_strategy=placement_strategy,
         profile_powers_of_two=profile_powers_of_two,
         curve_memo=memo,
+        bracket_memo=cache.bracket_memo,
     )
     opts = dict(
         hw=hw,
@@ -409,11 +418,13 @@ def plan_cached(
         p.signature = sig
         cache.put(p, **opts)
         cache.stats.misses += 1
+        cache.stats.bracket_hits += cache.bracket_memo.hits - bracket_hits0
         return p
 
     p = _incremental_plan(graph, cluster, cache, pipe, base, sig,
                           hw=hw, time_fn=time_fn)
     cache.put(p, **opts)
+    cache.stats.bracket_hits += cache.bracket_memo.hits - bracket_hits0
     return p
 
 

@@ -328,6 +328,7 @@ def serving_mix_workload(
     *,
     tower: Optional[TowerSpec] = None,
     towers: Optional[Dict[str, TowerSpec]] = None,
+    prefill_chunk: int = 0,
 ) -> TaskGraph:
     """The active request mix of a serving session as a planner TaskGraph.
 
@@ -338,6 +339,13 @@ def serving_mix_workload(
     workload, no backward), joined by ONE merged **decode** component over
     the union batch at seq 1 (all active slots decode together — the
     continuous-batching barrier, exactly ``merge_shared`` semantics).
+
+    ``prefill_chunk`` models DIP-style chunked prefill: buckets longer than
+    the chunk become per-bucket **chunked towers** — ``ceil(bucket/chunk)``
+    times the layer count at seq ``chunk`` — so the planner sees many small
+    interleavable prefill ops instead of one monolithic prompt-length op
+    (the op_type carries the chunk width, so chunked and one-shot plans
+    never alias in the PlanCache).
 
     Families key heterogeneity: a NEW family adds a component and reshapes
     every MetaLevel (incremental reuse finds nothing to keep — a full
@@ -353,10 +361,8 @@ def serving_mix_workload(
         raise ValueError("serving mix is empty: nothing to plan")
     base = tower or DEFAULT_SERVING_TOWER
     fam_tower = dict(towers or {})
-    families = sorted({f for f, _, _ in mix})
 
-    comps: List[ComponentSpec] = []
-    for fam in families:
+    def _prefill_comp(fam: str, name: str, seq_chunks: int) -> ComponentSpec:
         t = fam_tower.get(fam, base)
 
         def prefill_wl(batch: int, seq: int, t=t) -> OpWorkload:
@@ -365,17 +371,36 @@ def serving_mix_workload(
                 training=False,
             )
 
-        comps.append(
-            ComponentSpec(
-                name=f"{fam}_prefill",
-                n_layers=t.n_layers,
-                op_type=f"prefill[{t.d_model}x{t.d_ff}]",
-                workload_fn=prefill_wl,
-                shared=True,
-                merge_shared=False,
-                max_tp=min(t.n_heads, 8),
-            )
+        marker = f"c{prefill_chunk}" if seq_chunks > 1 else ""
+        return ComponentSpec(
+            name=name,
+            n_layers=t.n_layers * seq_chunks,
+            op_type=f"prefill[{t.d_model}x{t.d_ff}]{marker}",
+            workload_fn=prefill_wl,
+            shared=True,
+            merge_shared=False,
+            max_tp=min(t.n_heads, 8),
         )
+
+    comps: List[ComponentSpec] = []
+    prefill_of: Dict[Tuple[str, int], Tuple[str, int]] = {}
+    for fam, bucket, _ in sorted(mix):
+        n_chunks = (
+            -(-bucket // prefill_chunk)
+            if prefill_chunk and bucket > prefill_chunk
+            else 1
+        )
+        if n_chunks > 1:
+            # chunked tower: per-bucket component (chunk count depends on
+            # the bucket), seq shrinks to the chunk width
+            name = f"{fam}_prefill_p{bucket}"
+            seq = min(bucket, prefill_chunk)
+        else:
+            name = f"{fam}_prefill"
+            seq = bucket
+        prefill_of[(fam, bucket)] = (name, seq)
+        if all(c.name != name for c in comps):
+            comps.append(_prefill_comp(fam, name, n_chunks))
 
     def decode_wl(batch: int, seq: int) -> OpWorkload:
         return transformer_layer_workload(
@@ -397,13 +422,14 @@ def serving_mix_workload(
 
     gb = GraphBuilder(comps)
     for fam, bucket, count in sorted(mix):
+        name, seq = prefill_of[(fam, bucket)]
         gb.add_flow(
             FlowSpec(
                 task=f"{fam}:p{bucket}",
-                branches=[[f"{fam}_prefill"]],
+                branches=[[name]],
                 join=["decode"],
                 batch_size=count,
-                seq_lens={f"{fam}_prefill": bucket, "decode": 1},
+                seq_lens={name: seq, "decode": 1},
             )
         )
     return gb.build()

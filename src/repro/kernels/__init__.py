@@ -1,11 +1,18 @@
 """Pallas TPU kernels for the compute hot-spots (+ pure-jnp oracles).
 
 flash_attention — causal GQA flash attention (VMEM online-softmax)
+paged_attention — paged-KV decode attention (page-table scalar prefetch)
 grouped_matmul  — MoE expert grouped matmul with ragged-group skip
 rglru_scan      — chunked linear-recurrence scan (RecurrentGemma)
 """
 
-from .ops import flash_attention, grouped_matmul, rglru_scan
+from .ops import flash_attention, grouped_matmul, paged_attention, rglru_scan
 from . import ref
 
-__all__ = ["flash_attention", "grouped_matmul", "rglru_scan", "ref"]
+__all__ = [
+    "flash_attention",
+    "paged_attention",
+    "grouped_matmul",
+    "rglru_scan",
+    "ref",
+]

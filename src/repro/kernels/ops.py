@@ -16,6 +16,7 @@ import jax
 
 from .flash_attention import flash_attention as _flash
 from .moe_gmm import grouped_matmul as _gmm
+from .paged_attention import paged_attention as _paged
 from .rglru_scan import rglru_scan as _rglru
 
 
@@ -63,6 +64,23 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
                     block_k: int = 512, interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
     return _flash_diff(q, k, v, causal, block_q, block_k, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, page_table, lengths, *,
+                    interpret: bool | None = None):
+    """Paged decode attention: the Mosaic kernel on a TPU runtime; under
+    interpret mode (this container) it falls back to the reference gather —
+    the exact arithmetic the serving decode path uses — instead of
+    interpreting the kernel body token-by-token."""
+    interpret = _default_interpret() if interpret is None else interpret
+    if interpret:
+        from .ref import paged_attention_ref
+
+        return paged_attention_ref(q, k_pool, v_pool, page_table, lengths)
+    return _paged(
+        q, k_pool, v_pool, page_table, lengths, interpret=False
+    )
 
 
 @functools.partial(

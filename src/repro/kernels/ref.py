@@ -26,6 +26,36 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
 
 
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths, *,
+                        sm_scale: Optional[float] = None):
+    """Reference gather for paged decode attention.
+
+    q (B,H,hd); k/v pools (P,K,ps,hd); page_table (B,n_pp) physical page
+    ids; lengths (B,) — positions ``kpos <= lengths[b]`` are valid.  The
+    pool is gathered back into the per-row slab layout and scored exactly
+    like ``repro.models.attention.attn_decode`` — this is the path the
+    model uses off-TPU (interpret mode)."""
+    B, H, hd = q.shape
+    K, ps = k_pool.shape[1], k_pool.shape[2]
+    n_pp = page_table.shape[1]
+    S = n_pp * ps
+
+    def gather(pool):
+        g = jnp.take(pool, page_table, axis=0)  # (B, n_pp, K, ps, hd)
+        return g.transpose(0, 2, 1, 3, 4).reshape(B, K, S, hd)
+
+    kk, vv = gather(k_pool), gather(v_pool)
+    if K != H:
+        kk = jnp.repeat(kk, H // K, axis=1)
+        vv = jnp.repeat(vv, H // K, axis=1)
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhd,bhkd->bhk", q, kk).astype(jnp.float32) * scale
+    valid = jnp.arange(S)[None, :] <= lengths[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p.astype(vv.dtype), vv)
+
+
 def grouped_matmul_ref(x, w, group_sizes=None):
     """x (E,C,d) @ w (E,d,f), rows ≥ group_sizes[e] forced to zero."""
     y = jnp.einsum("ecd,edf->ecf", x, w)

@@ -14,8 +14,13 @@ memories for enc-dec).
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
         --requests 8 --prompt-len 32 --gen-len 16
 
+KV memory defaults to the **paged** layout (``--slab`` restores the PR 3
+per-slot slab), admission prefills are **stacked** per prompt length
+(``--no-batched-prefill`` restores batch-1 joins), and ``--prefill-chunk N``
+streams long prompts into the page pool in N-token chunks interleaved with
+decode steps (``--prefill-duty`` sets the chunk:decode duty cycle).
 ``--static`` switches admission to classic drain-then-refill batching and
-``--no-replan`` serves on the initial plan only (the two baselines
+``--no-replan`` serves on the initial plan only (two of the baselines
 ``benchmarks/bench_serving.py`` measures against).  Exits non-zero when no
 output tokens were generated (the CI serve-smoke contract).
 """
@@ -79,6 +84,12 @@ def serve(
     admission: str = "continuous",
     replan: str = "mix",
     arrival_every: float = 0.0,
+    kv_layout: str = "paged",
+    page_size: int = 16,
+    kv_pages: int = 0,
+    prefill_chunk: int = 0,
+    prefill_duty: float = 1.0,
+    batched_prefill: bool = True,
 ) -> Dict[str, Any]:
     """Serve ``n_requests`` random prompts; returns tokens + metrics."""
     cfg_full = get_arch(arch)
@@ -94,6 +105,12 @@ def serve(
             enc_len=max(prompt_len // 4, 1),
             admission=admission,
             replan=replan,
+            kv_layout=kv_layout,
+            page_size=page_size,
+            kv_pages=kv_pages,
+            prefill_chunk=prefill_chunk,
+            prefill_duty=prefill_duty,
+            batched_prefill=batched_prefill,
         )
     )
     reqs = _build_requests(
@@ -119,6 +136,18 @@ def serve(
             f"{b.decode_steps} decode steps at {tps:.0f} tok/s; "
             f"{metrics['replans']} replans {metrics['replan_modes']}"
         )
+        print(
+            f"[serve] prefill: {metrics['prefill_calls']} calls "
+            f"({b.chunk_steps} chunk steps, {b.interleaved_chunks} "
+            f"interleaved with decode)"
+        )
+        if metrics.get("kv_page_hw") is not None:
+            print(
+                f"[serve] kv pages: high-water "
+                f"{metrics['kv_page_hw_tokens']} tokens over a "
+                f"{metrics['kv_slab_tokens']}-token slab footprint "
+                f"({100 * metrics['kv_mem_saving']:.0f}% saved)"
+            )
         sample = out_tokens[0][:12].tolist() if len(done) else []
         print(f"[serve] generated {metrics['output_tokens']} tokens; "
               f"sample: {sample}")
@@ -142,6 +171,19 @@ def main() -> None:
                     help="classic drain-then-refill batching")
     ap.add_argument("--no-replan", action="store_true",
                     help="serve on the initial plan only")
+    ap.add_argument("--slab", action="store_true",
+                    help="PR 3 per-slot KV slabs instead of the page pool")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size in token positions")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="physical page budget (0 = full coverage)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunk long prompts into N-token prefill chunks "
+                         "interleaved with decode (0 = one-shot)")
+    ap.add_argument("--prefill-duty", type=float, default=1.0,
+                    help="prefill chunks allowed per decode step")
+    ap.add_argument("--no-batched-prefill", action="store_true",
+                    help="batch-1 admission prefills (the PR 3 join path)")
     args = ap.parse_args()
     out = serve(
         args.arch,
@@ -154,6 +196,12 @@ def main() -> None:
         admission="static" if args.static else "continuous",
         replan="initial" if args.no_replan else "mix",
         arrival_every=args.arrival_every,
+        kv_layout="slab" if args.slab else "paged",
+        page_size=args.page_size,
+        kv_pages=args.kv_pages,
+        prefill_chunk=args.prefill_chunk,
+        prefill_duty=args.prefill_duty,
+        batched_prefill=not args.no_batched_prefill,
     )
     if out["output_tokens"] <= 0 or out["requests"] <= 0:
         print("[serve] FAILED: no output tokens generated", file=sys.stderr)

@@ -285,6 +285,36 @@ def attn_apply(
     return y
 
 
+def paged_gather(pool, page_table):
+    """Per-row contiguous KV view of a paged pool.
+
+    pool (P, K, page_size, hd) + page_table (B, n_pages) → (B, K, S, hd)
+    with ``S = n_pages * page_size`` and logical position ``p`` at index
+    ``p`` — the exact slab layout, so everything downstream of the gather
+    (repeat, scoring, masking) is the UNCHANGED slab code and paged decode
+    stays token-identical to slab decode.  The transpose is the gather's
+    relayout cost; the Pallas kernel path avoids it entirely on TPU (the
+    page indirection happens in the BlockSpec index_map)."""
+    B, n_pp = page_table.shape
+    _, K, ps, hd = pool.shape
+    g = jnp.take(pool, page_table, axis=0)  # (B, n_pp, K, ps, hd)
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, K, n_pp * ps, hd)
+
+
+def paged_scatter(pool, page_table, pos_b, vals):
+    """Write one token's K or V per row into a paged pool.
+
+    vals (B, K, hd) lands at each row's logical position ``pos_b`` through
+    its page table.  Rows whose logical page is unmapped write through
+    page-table entry 0 — the reserved trash page — which is how inactive
+    batch rows ride along in the fixed-shape decode step without touching
+    live pages."""
+    ps = pool.shape[2]
+    pg = jnp.take_along_axis(page_table, (pos_b // ps)[:, None], axis=1)[:, 0]
+    off = pos_b % ps
+    return pool.at[pg, :, off, :].set(vals.astype(pool.dtype))
+
+
 def attn_decode(
     params,
     x,
@@ -300,6 +330,8 @@ def attn_decode(
     window: int = 0,
     cross: bool = False,
     cross_len: Optional[jnp.ndarray] = None,
+    page_table: Optional[jnp.ndarray] = None,
+    impl: str = "ref",
 ):
     """One-token decode. x (B,1,d); cache_k/v (B, K, S, hd); pos is a scalar
     int or an (B,) int vector of **per-row** positions (continuous batching:
@@ -307,9 +339,20 @@ def attn_decode(
 
     Returns (y, new_cache_k, new_cache_v).  For ``window>0`` the cache is a
     circular buffer of size ``window``.  ``cross=True`` treats the cache as a
-    fixed encoder memory (no update; valid length ``cross_len``)."""
+    fixed encoder memory (no update; valid length ``cross_len``).
+
+    ``page_table`` switches to the **paged** layout: cache_k/v are shared
+    pools (n_pages, K, page_size, hd) and ``page_table`` (B, pages_per_row)
+    maps each row's logical pages to physical ones.  The new token's K/V is
+    scattered through the table, the row's pages are gathered back into the
+    slab layout, and scoring/masking below is byte-for-byte the slab code —
+    the reference gather path the Pallas paged-decode kernel falls back to
+    under interpret mode."""
     B = x.shape[0]
-    S = cache_k.shape[2]
+    paged = page_table is not None
+    if paged and (cross or window > 0):
+        raise ValueError("paged KV applies to full causal self-attention only")
+    S = page_table.shape[1] * cache_k.shape[2] if paged else cache_k.shape[2]
     pos = jnp.asarray(pos, jnp.int32)
     pos_b = pos if pos.ndim else jnp.full((B,), pos)  # (B,) per-row positions
     q = _split_heads(x @ params["wq"], n_heads, head_dim)  # (B,1,H,hd)
@@ -325,23 +368,40 @@ def attn_decode(
             k = rms_normalize(k)
         if rope_theta > 0:
             k = apply_rope(k, pos_b[:, None], rope_theta)
-        slot = pos_b % window if window > 0 else pos_b
-        # cache layout (B, K, S, hd); per-row scatter at each row's slot
-        def _row_update(c, u, s_):
-            return jax.lax.dynamic_update_slice_in_dim(c, u, s_, axis=1)
+        if paged:
+            cache_k = paged_scatter(cache_k, page_table, pos_b, k[:, 0])
+            cache_v = paged_scatter(cache_v, page_table, pos_b, v[:, 0])
+        else:
+            slot = pos_b % window if window > 0 else pos_b
+            # cache layout (B, K, S, hd); per-row scatter at each row's slot
+            def _row_update(c, u, s_):
+                return jax.lax.dynamic_update_slice_in_dim(c, u, s_, axis=1)
 
-        cache_k = jax.vmap(_row_update)(
-            cache_k, k.transpose(0, 2, 1, 3).astype(cache_k.dtype), slot
-        )
-        cache_v = jax.vmap(_row_update)(
-            cache_v, v.transpose(0, 2, 1, 3).astype(cache_v.dtype), slot
-        )
+            cache_k = jax.vmap(_row_update)(
+                cache_k, k.transpose(0, 2, 1, 3).astype(cache_k.dtype), slot
+            )
+            cache_v = jax.vmap(_row_update)(
+                cache_v, v.transpose(0, 2, 1, 3).astype(cache_v.dtype), slot
+            )
 
-    # scores over the full cache with per-row validity masking
-    rep = n_heads // cache_k.shape[1]
-    kk = jnp.repeat(cache_k, rep, axis=1) if rep > 1 else cache_k  # (B,H,S,hd)
-    vv = jnp.repeat(cache_v, rep, axis=1) if rep > 1 else cache_v
-    s = jnp.einsum("bqhd,bhkd->bhqk", q, kk).astype(jnp.float32) / math.sqrt(head_dim)
+    if paged and impl == "pallas":
+        # Mosaic paged-decode kernel on TPU; the ops wrapper falls back to
+        # the reference gather below under interpret mode
+        from ..kernels import paged_attention as _paged_attn
+
+        ctx = _paged_attn(q[:, 0], cache_k, cache_v, page_table, pos_b)
+        y = ctx.reshape(B, 1, n_heads * head_dim) @ params["wo"]
+        return y, cache_k, cache_v
+
+    # scores over the full cache with per-row validity masking; the paged
+    # layout funnels through the gather into the IDENTICAL slab arithmetic
+    view_k = paged_gather(cache_k, page_table) if paged else cache_k
+    view_v = paged_gather(cache_v, page_table) if paged else cache_v
+    rep = n_heads // view_k.shape[1]
+    kk = jnp.repeat(view_k, rep, axis=1) if rep > 1 else view_k  # (B,H,S,hd)
+    vv = jnp.repeat(view_v, rep, axis=1) if rep > 1 else view_v
+    s = jnp.einsum("bqhd,bhkd->bhqk", q, kk).astype(jnp.float32)
+    s = s / math.sqrt(head_dim)
     kpos = jnp.arange(S)
     if cross:
         valid = jnp.broadcast_to(
@@ -359,3 +419,59 @@ def attn_decode(
     out = jnp.einsum("bhqk,bhkd->bqhd", p.astype(vv.dtype), vv)
     y = out.reshape(B, 1, n_heads * head_dim) @ params["wo"]
     return y, cache_k, cache_v
+
+
+def attn_prefill_chunk(
+    params,
+    x,
+    pool_k,
+    pool_v,
+    page_table,
+    pos0: int,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    qk_norm: bool = False,
+):
+    """One prefill chunk against a paged cache (DIP-style chunked prefill).
+
+    x (B, C, d) holds the chunk's embeddings for positions
+    ``pos0 .. pos0+C-1`` (the same static ``pos0`` for every row — chunked
+    admission groups requests by prompt length, so a group advances in
+    lockstep).  The chunk's K/V is scattered into the paged pools, then the
+    FULL prefix ``[0, pos0+C)`` is gathered back and attended with the same
+    :func:`naive_attention` arithmetic the one-shot prefill path uses — so
+    with a lossless cache dtype the last chunk's outputs are bit-identical
+    to a one-shot prefill (pinned in tests/test_serving.py).
+
+    Returns (y (B, C, d), pool_k, pool_v)."""
+    B, C, _ = x.shape
+    ps = pool_k.shape[2]
+    seen = pos0 + C  # prefix length after this chunk
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)  # (B,C,H,hd)
+    k = _split_heads(x @ params["wk"], n_kv, head_dim)
+    v = _split_heads(x @ params["wv"], n_kv, head_dim)
+    if qk_norm:
+        q, k = rms_normalize(q), rms_normalize(k)
+    pos = (pos0 + jnp.arange(C))[None, :]
+    if rope_theta > 0:
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+
+    # scatter the chunk through the page tables (all C positions at once)
+    pg = jnp.take(page_table, pos[0] // ps, axis=1)  # (B, C)
+    off = jnp.broadcast_to(pos[0] % ps, (B, C))
+    pool_k = pool_k.at[pg, :, off, :].set(k.astype(pool_k.dtype))
+    pool_v = pool_v.at[pg, :, off, :].set(v.astype(pool_v.dtype))
+
+    # gather the prefix (past chunks + this one) back into the slab layout
+    n_need = -(-seen // ps)
+    kf = paged_gather(pool_k, page_table[:, :n_need])[:, :, :seen]
+    vf = paged_gather(pool_v, page_table[:, :n_need])[:, :, :seen]
+    kf = _repeat_kv(kf.transpose(0, 2, 1, 3).astype(x.dtype), n_heads)
+    vf = _repeat_kv(vf.transpose(0, 2, 1, 3).astype(x.dtype), n_heads)
+    out = naive_attention(q, kf, vf, causal=True, q_offset=pos0)
+    y = out.reshape(B, C, n_heads * head_dim) @ params["wo"]
+    return y, pool_k, pool_v

@@ -213,7 +213,25 @@ class EncDecTransformer:
             "cross_v": jnp.zeros((L, batch, K, enc_len, hd), cache_dtype),
         }
 
-    def decode_step(self, params, token, cache, pos, *, mesh=None):
+    def init_paged_cache(self, batch: int, cache_len: int, enc_len: int, *,
+                         n_pages: int, page_size: int,
+                         cache_dtype=jnp.bfloat16):
+        """Paged decode cache: causal self-attn KV pools + slot-major cross
+        memory (read-only, O(enc_len) per slot — nothing grows to page)."""
+        cfg = self.cfg
+        L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        cache = {
+            "self_k": jnp.zeros((L, n_pages, K, page_size, hd), cache_dtype),
+            "self_v": jnp.zeros((L, n_pages, K, page_size, hd), cache_dtype),
+            "cross_k": jnp.zeros((L, batch, K, enc_len, hd), cache_dtype),
+            "cross_v": jnp.zeros((L, batch, K, enc_len, hd), cache_dtype),
+        }
+        layout = {"self_k": "kv1", "self_v": "kv1",
+                  "cross_k": "state1", "cross_v": "state1"}
+        return cache, layout
+
+    def decode_step(self, params, token, cache, pos, *, mesh=None,
+                    pages=None):
         """token: (B,); pos scalar or (B,) per-row → (logits (B,V), cache)."""
         cfg = self.cfg
         cdt = dtype_of(cfg.compute_dtype)
@@ -230,7 +248,8 @@ class EncDecTransformer:
             lp = cast_floats(lp, cdt)
             x = constrain(x, mesh, "batch", None, None)
             y, sk, sv = attn_decode(
-                lp["self_attn"], rmsnorm(lp["norm1"], x), sk, sv, pos, **kw
+                lp["self_attn"], rmsnorm(lp["norm1"], x), sk, sv, pos,
+                page_table=pages, **kw,
             )
             x = x + y
             y, _, _ = attn_decode(

@@ -51,15 +51,16 @@ class Model:
     def loss(self, params, batch, *, mesh=None):
         return self.impl.loss(params, batch, mesh=mesh)
 
-    def prefill(self, params, batch, *, mesh=None, cache_len=None):
+    def prefill(self, params, batch, *, mesh=None, cache_len=None,
+                cache_dtype=jnp.bfloat16):
         if self.cfg.is_encdec:
             return self.impl.prefill(
                 params, batch["tokens"], batch["frames"], mesh=mesh,
-                cache_len=cache_len,
+                cache_len=cache_len, cache_dtype=cache_dtype,
             )
         return self.impl.prefill(
             params, batch["tokens"], batch.get("embeds"), mesh=mesh,
-            cache_len=cache_len,
+            cache_len=cache_len, cache_dtype=cache_dtype,
         )
 
     def init_cache(self, batch: int, cache_len: int, *, enc_len: int = 0,
@@ -70,8 +71,41 @@ class Model:
             )
         return self.impl.init_cache(batch, cache_len, cache_dtype)
 
-    def decode_step(self, params, token, cache, pos, *, mesh=None):
-        return self.impl.decode_step(params, token, cache, pos, mesh=mesh)
+    def init_paged_cache(self, batch: int, cache_len: int, *, n_pages: int,
+                         page_size: int, enc_len: int = 0,
+                         cache_dtype=jnp.bfloat16):
+        """Paged decode cache + per-leaf layout codes (DESIGN.md §13)."""
+        if self.cfg.is_encdec:
+            return self.impl.init_paged_cache(
+                batch, cache_len, enc_len or max(cache_len // 4, 1),
+                n_pages=n_pages, page_size=page_size, cache_dtype=cache_dtype,
+            )
+        return self.impl.init_paged_cache(
+            batch, cache_len, n_pages=n_pages, page_size=page_size,
+            cache_dtype=cache_dtype,
+        )
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill rebuilds attention state from the KV pool chunk
+        by chunk — only all-attention decoder-only stacks qualify."""
+        if self.cfg.is_encdec:
+            return False
+        return self.impl.supports_chunked_prefill
+
+    def decode_step(self, params, token, cache, pos, *, mesh=None,
+                    pages=None):
+        if pages is None:
+            return self.impl.decode_step(params, token, cache, pos, mesh=mesh)
+        return self.impl.decode_step(
+            params, token, cache, pos, mesh=mesh, pages=pages
+        )
+
+    def prefill_chunk(self, params, tokens, cache, pos0: int, *, pages,
+                      mesh=None):
+        return self.impl.prefill_chunk(
+            params, tokens, cache, pos0, pages=pages, mesh=mesh
+        )
 
     # ------------------------------------------------------------- dry specs
     def _stub_len(self, seq_len: int) -> int:

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from ..config import ArchConfig, ShardingConfig
 from ..parallel.sharding import constrain
 from . import recurrent as rec
-from .attention import attn_apply, attn_decode, attn_init
+from .attention import attn_apply, attn_decode, attn_init, attn_prefill_chunk
 from .layers import (
     cast_floats,
     dense_init,
@@ -192,8 +192,14 @@ def _state_init(cfg: ArchConfig, kind: str, batch: int, cache_len: int, cache_dt
     raise ValueError(kind)
 
 
-def _mix_decode(p, x_t, state, pos, cfg: ArchConfig, kind: str):
-    """One-token mixing. x_t: (B, d). Returns (y (B,d), new_state)."""
+def _mix_decode(p, x_t, state, pos, cfg: ArchConfig, kind: str, pages=None,
+                impl: str = "ref"):
+    """One-token mixing. x_t: (B, d). Returns (y (B,d), new_state).
+
+    ``pages`` (the per-row KV page table) routes full-attention layers
+    through the paged cache layout; window/recurrent state stays slot-major
+    (it is O(W)/O(1) per slot — nothing to page).  ``impl="pallas"`` uses
+    the Mosaic paged-decode kernel for paged layers on a TPU runtime."""
     hd = cfg.resolved_head_dim
     if kind in ("attn", "local_attn"):
         window = cfg.local_window if kind == "local_attn" else 0
@@ -209,6 +215,8 @@ def _mix_decode(p, x_t, state, pos, cfg: ArchConfig, kind: str):
             rope_theta=cfg.rope_theta,
             qk_norm=cfg.qk_norm,
             window=window,
+            page_table=pages if kind == "attn" else None,
+            impl=impl,
         )
         return y[:, 0], {"k": ck, "v": cv}
     if kind == "rglru":
@@ -220,13 +228,40 @@ def _mix_decode(p, x_t, state, pos, cfg: ArchConfig, kind: str):
     raise ValueError(kind)
 
 
-def _layer_decode(p, x_t, state, pos, cfg: ArchConfig, kind: str, mesh):
-    y, new_state = _mix_decode(p["mix"], rmsnorm(p["norm1"], x_t), state, pos, cfg, kind)
+def _layer_decode(p, x_t, state, pos, cfg: ArchConfig, kind: str, mesh,
+                  pages=None, impl: str = "ref"):
+    y, new_state = _mix_decode(
+        p["mix"], rmsnorm(p["norm1"], x_t), state, pos, cfg, kind, pages, impl
+    )
     h = x_t + y
     if _has_ffn(cfg):
         y3, _ = _ffn_apply(p["ffn"], rmsnorm(p["norm2"], h[:, None, :]), cfg, mesh)
         h = h + y3[:, 0]
     return h, new_state
+
+
+def _layer_chunk(p, x, pool, page_table, pos0: int, cfg: ArchConfig, mesh):
+    """One (attn + ffn) layer over a prefill chunk x (B, C, d) against the
+    paged cache.  Attn-only patterns — the chunked-prefill admission path
+    gates on :attr:`Decoder.chunkable`."""
+    y, pk, pv = attn_prefill_chunk(
+        p["mix"],
+        rmsnorm(p["norm1"], x),
+        pool["k"],
+        pool["v"],
+        page_table,
+        pos0,
+        n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm,
+    )
+    h = x + y
+    if _has_ffn(cfg):
+        y3, _ = _ffn_apply(p["ffn"], rmsnorm(p["norm2"], h), cfg, mesh)
+        h = h + y3
+    return h, {"k": pk, "v": pv}
 
 
 # ---------------------------------------------------------------------------
@@ -426,17 +461,72 @@ class Decoder:
         rem = [one(self.pattern[r]) for r in range(self.n_rem)]
         return {"groups": groups, "rem": rem}
 
+    @property
+    def chunkable(self) -> bool:
+        """Chunked prefill needs every mixing layer to be paged full
+        attention (recurrent state cannot be rebuilt chunk-by-chunk from a
+        KV pool)."""
+        return all(kind == "attn" for kind in self.pattern)
+
+    def init_paged_cache(self, batch: int, cache_len: int, *, n_pages: int,
+                         page_size: int, cache_dtype=jnp.bfloat16):
+        """Paged decode cache: full-attention KV lives in shared pools
+        (n_pages, K, page_size, hd) indexed through per-row page tables;
+        window/recurrent state stays slot-major exactly as
+        :meth:`init_cache` lays it out.
+
+        Returns ``(cache, layout)`` — ``layout`` mirrors the cache with a
+        per-leaf code ``"kv<ax>"`` (paged pool of (K, page_size, hd) pages,
+        page axis ``ax``) or ``"state<ax>"`` (slot-major, batch axis ``ax``)
+        so the serving batcher can write prefill pages / slot states
+        without knowing the block pattern."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+
+        def one(kind):
+            if kind == "attn":
+                shape = (n_pages, cfg.n_kv_heads, page_size, hd)
+                st = {"k": jnp.zeros(shape, cache_dtype),
+                      "v": jnp.zeros(shape, cache_dtype)}
+                return st, {"k": "kv", "v": "kv"}
+            st = _state_init(cfg, kind, batch, cache_len, cache_dtype)
+            return st, jax.tree.map(lambda _: "state", st)
+
+        groups = lay_groups = None
+        if self.n_groups > 0:
+            groups, lay_groups = {}, {}
+            for j, kind in enumerate(self.pattern):
+                st, lay = one(kind)
+                groups[f"p{j}"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x, (self.n_groups,) + x.shape
+                    ).copy(),
+                    st,
+                )
+                lay_groups[f"p{j}"] = jax.tree.map(lambda c: c + "1", lay)
+        rem, lay_rem = [], []
+        for r in range(self.n_rem):
+            st, lay = one(self.pattern[r])
+            rem.append(st)
+            lay_rem.append(jax.tree.map(lambda c: c + "0", lay))
+        return (
+            {"groups": groups, "rem": rem},
+            {"groups": lay_groups, "rem": lay_rem},
+        )
+
     # --------------------------------------------------------------- decode
-    def decode_step(self, params, x_t, cache, pos, *, mesh=None):
+    def decode_step(self, params, x_t, cache, pos, *, mesh=None, pages=None):
         """x_t: (B,d); cache from init_cache/prefill; pos: scalar position
-        or (B,) per-row positions (continuous batching)."""
+        or (B,) per-row positions (continuous batching).  ``pages`` routes
+        full-attention KV through the paged layout (init_paged_cache)."""
         cfg = self.cfg
         cdt = dtype_of(cfg.compute_dtype)
+        impl = self.attn_impl
         new_rem = []
         for r in range(self.n_rem):
             x_t, st = _layer_decode(
                 cast_floats(params[f"{self.prefix}_rem{r}"], cdt), x_t,
-                cache["rem"][r], pos, cfg, self.pattern[r], mesh,
+                cache["rem"][r], pos, cfg, self.pattern[r], mesh, pages, impl,
             )
             new_rem.append(st)
 
@@ -449,7 +539,8 @@ class Decoder:
                 new_states = {}
                 for j, kind in enumerate(self.pattern):
                     x_t, st = _layer_decode(
-                        gp[f"p{j}"], x_t, states[f"p{j}"], pos, cfg, kind, mesh
+                        gp[f"p{j}"], x_t, states[f"p{j}"], pos, cfg, kind,
+                        mesh, pages, impl,
                     )
                     new_states[f"p{j}"] = st
                 return x_t, new_states
@@ -458,6 +549,45 @@ class Decoder:
                 scan_body, x_t, (params[self.prefix], cache["groups"])
             )
         return x_t, {"groups": new_groups, "rem": new_rem}
+
+    def decode_chunk(self, params, x, cache, pos0: int, *, pages, mesh=None):
+        """One prefill chunk x (B, C, d) at static base position ``pos0``
+        through the paged cache (attn-only patterns — see ``chunkable``).
+        Returns (h (B, C, d), cache)."""
+        if not self.chunkable:
+            raise ValueError(
+                f"chunked prefill needs an all-attention pattern, "
+                f"got {self.pattern}"
+            )
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        new_rem = []
+        for r in range(self.n_rem):
+            x, st = _layer_chunk(
+                cast_floats(params[f"{self.prefix}_rem{r}"], cdt), x,
+                cache["rem"][r], pages, pos0, cfg, mesh,
+            )
+            new_rem.append(st)
+
+        new_groups = cache["groups"]
+        if self.n_groups > 0:
+            def scan_body(x, gp_and_state):
+                gp, states = gp_and_state
+                gp = cast_floats(gp, cdt)
+                x = constrain(x, mesh, "batch", None, None)
+                new_states = {}
+                for j in range(len(self.pattern)):
+                    x, st = _layer_chunk(
+                        gp[f"p{j}"], x, states[f"p{j}"], pages, pos0, cfg,
+                        mesh,
+                    )
+                    new_states[f"p{j}"] = st
+                return x, new_states
+
+            x, new_groups = jax.lax.scan(
+                scan_body, x, (params[self.prefix], cache["groups"])
+            )
+        return x, {"groups": new_groups, "rem": new_rem}
 
 
 # ---------------------------------------------------------------------------
@@ -598,12 +728,44 @@ class Transformer:
     def init_cache(self, batch: int, cache_len: int, cache_dtype=jnp.bfloat16):
         return self.decoder.init_cache(batch, cache_len, cache_dtype)
 
-    def decode_step(self, params, token, cache, pos, *, mesh=None):
+    def init_paged_cache(self, batch: int, cache_len: int, *, n_pages: int,
+                         page_size: int, cache_dtype=jnp.bfloat16):
+        return self.decoder.init_paged_cache(
+            batch, cache_len, n_pages=n_pages, page_size=page_size,
+            cache_dtype=cache_dtype,
+        )
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        return self.decoder.chunkable
+
+    def decode_step(self, params, token, cache, pos, *, mesh=None,
+                    pages=None):
         """token: (B,) int32; pos: scalar or (B,) per-row positions.
         Returns (logits (B,V), cache)."""
         cdt = dtype_of(self.cfg.compute_dtype)
         x = embed_lookup(params["tok_embed"], token).astype(cdt)
-        x, cache = self.decoder.decode_step(params, x, cache, pos, mesh=mesh)
+        x, cache = self.decoder.decode_step(
+            params, x, cache, pos, mesh=mesh, pages=pages
+        )
         x = rmsnorm(params["final_norm"], x[:, None, :])[:, 0]
         logits = (x @ self.head(params).astype(x.dtype)).astype(jnp.float32)
+        return logits, cache
+
+    def prefill_chunk(self, params, tokens, cache, pos0: int, *, pages,
+                      mesh=None):
+        """One chunk of a paged prefill: tokens (B, C) at positions
+        ``pos0..pos0+C-1``.  Returns (logits at the chunk's last position
+        (B, V), cache) — the serving batcher uses the final chunk's logits
+        as the request's first sampled token."""
+        cdt = dtype_of(self.cfg.compute_dtype)
+        h = embed_lookup(params["tok_embed"], tokens).astype(cdt)
+        h = constrain(h, mesh, "batch", None, None)
+        h, cache = self.decoder.decode_chunk(
+            params, h, cache, pos0, pages=pages, mesh=mesh
+        )
+        h = rmsnorm(params["final_norm"], h)
+        logits = (h[:, -1] @ self.head(params).astype(h.dtype)).astype(
+            jnp.float32
+        )
         return logits, cache

@@ -4,17 +4,22 @@ The serving counterpart of the training lifecycle (DESIGN.md §11):
 
   * :mod:`repro.serving.queue`   — requests, admission control, the event
     seam (``RequestArrived`` / ``RequestCompleted``).
+  * :mod:`repro.serving.pages`   — the paged-KV allocator: a shared
+    physical page pool + per-slot page tables (map/unmap on join/evict).
   * :mod:`repro.serving.batcher` — fixed-slot continuous batcher: per-slot
-    decode positions, KV/recurrent-state cache paging across join/evict.
+    decode positions, paged (or slab) KV across join/evict, stacked
+    admission prefills and DIP-style chunked-prefill jobs.
   * :mod:`repro.serving.mix`     — the live request mix bucketized into a
     deterministic workload signature.
-  * :mod:`repro.serving.session` — :class:`ServingSession`: admit → decode
-    → evict → replan through a plan-only :class:`repro.session.
-    SpindleSession` whenever the mix signature drifts.
+  * :mod:`repro.serving.session` — :class:`ServingSession`: admit →
+    prefill chunks → decode → evict → replan through a plan-only
+    :class:`repro.session.SpindleSession` whenever the mix signature
+    drifts.
 """
 
 from .batcher import ContinuousBatcher, SlotState, read_slot, write_slot
 from .mix import DEFAULT_PROMPT_BUCKETS, MixSnapshot, MixTracker, prompt_bucket
+from .pages import PagePool, pages_needed
 from .queue import Request, RequestQueue
 from .session import RequestResult, ServingConfig, ServingSession
 
@@ -23,6 +28,8 @@ __all__ = [
     "SlotState",
     "read_slot",
     "write_slot",
+    "PagePool",
+    "pages_needed",
     "DEFAULT_PROMPT_BUCKETS",
     "MixSnapshot",
     "MixTracker",

@@ -1,19 +1,35 @@
-"""Continuous batcher: slot map + cache paging over one decode batch.
+"""Continuous batcher: slot map + paged KV pool over one decode batch.
 
 The decode batch is a fixed array of ``max_slots`` rows (so the jitted
 decode step never retraces); each row is a **slot** holding one request's
-KV / recurrent / cross-attention state page.  Joining a request prefills
-it alone (batch 1, cache padded to the shared ``cache_len``) and pages the
-resulting cache into a free slot; evicting just frees the slot — stale
-rows are masked by the per-row position vector (attention validity is
-``kpos <= pos[row]``) and fully overwritten by the next join, so no copy
-is needed on eviction.
+decode state.  Two cache layouts serve that state:
+
+  * ``slab`` — the PR 3 layout: every slot owns a fixed-``cache_len`` KV
+    slab; joining copies a request's prefilled cache into its row.
+  * ``paged`` — full-attention KV lives in a shared **page pool**
+    (:mod:`repro.serving.pages`): joining *maps* physical pages through a
+    per-slot page table and evicting *unmaps* them, so KV memory scales
+    with the tokens live requests can reach instead of
+    ``slots × cache_len``.  Window/recurrent/cross-attention state is
+    O(W)/O(1)/O(enc) per slot and stays slot-major.
+
+Admission is **batched**: :meth:`ContinuousBatcher.admit_many` stacks all
+same-length queued requests into ONE prefill call instead of k batch-1
+calls.  Long prompts (paged layout, all-attention archs) are additionally
+**chunked**: admission only maps pages and queues a :class:`PrefillJob`;
+:meth:`prefill_chunk_step` advances it one fixed-size chunk at a time so
+the serving session can interleave prefill chunks *between* decode steps
+(DIP-style mixed waves) instead of stalling the whole decode batch on one
+long prompt.
 
 Correctness contract (tested in ``tests/test_serving.py``): every per-row
 operation of the decode path is batch-independent, so a request decoded in
-a shared batch — joined late, neighbors evicted under it, slot reused —
-produces exactly the tokens it produces decoded alone.  (MoE archs violate
-row independence when capacity drops tokens across the union batch; serve
+a shared batch — joined late, neighbors evicted under it, slot reused,
+pages recycled — produces exactly the tokens it produces decoded alone.
+Paged decode gathers pages back into the slab layout before scoring, and
+inactive rows write through zeroed page-table rows into the pool's trash
+page, so the two layouts are token-identical.  (MoE archs violate row
+independence when capacity drops tokens across the union batch; serve
 those with a high capacity factor, as the decode-equivalence tests do.)
 """
 
@@ -22,17 +38,18 @@ from __future__ import annotations
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .pages import PagePool, pages_needed
 from .queue import Request
 
 
 def cache_batch_axes(cache):
-    """Pytree of per-leaf batch-axis indices for a decode cache.
+    """Pytree of per-leaf batch-axis indices for a slab decode cache.
 
     Decoder-only caches are ``{"groups": ..., "rem": ...}`` — scan-stacked
     group leaves carry a leading (G,) axis so batch is axis 1, remainder
@@ -58,8 +75,21 @@ def write_slot(cache, page, slot):
     return jax.tree.map(ins, cache, page, cache_batch_axes(cache))
 
 
+def write_slots(cache, page, slots):
+    """Scatter a batch-k packed prefill cache into slab rows ``slots`` —
+    the stacked-admission form of :func:`write_slot`."""
+
+    def ins(dst, src, ax):
+        src = src.astype(dst.dtype)
+        if ax == 0:
+            return dst.at[slots].set(src)
+        return dst.at[:, slots].set(src)
+
+    return jax.tree.map(ins, cache, page, cache_batch_axes(cache))
+
+
 def read_slot(cache, slot):
-    """The batch-1 cache page currently held at batch row ``slot``."""
+    """The batch-1 cache page currently held at slab batch row ``slot``."""
 
     def pick(x, ax):
         return jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=ax)
@@ -67,28 +97,130 @@ def read_slot(cache, slot):
     return jax.tree.map(pick, cache, cache_batch_axes(cache))
 
 
-#: jitted (prefill, decode) per live (model, cache_len) — sessions over the
-#: same served model share compiled executables instead of retracing.
-#: Bounded LRU: the strong model ref pins id(model), so unbounded growth
-#: would leak every model (and its executables) ever served.
+def write_pages(cache, page, slots, rows, layout):
+    """Map a batch-k packed prefill cache into the paged layout.
+
+    ``page`` is the slab-layout batch-k cache a prefill produced; ``slots``
+    (k,) are the target slot rows for slot-major state leaves; ``rows``
+    (k, pages_per_slot) are each request's physical page ids for KV-pool
+    leaves (unmapped logical pages point at the trash page 0 — their
+    padded-zero content lands in the sacrificial page).  ``layout`` is the
+    per-leaf code tree from ``model.init_paged_cache``.
+    """
+
+    def w(dst, src, lay):
+        kind, ax = lay[:-1], int(lay[-1])
+        src = src.astype(dst.dtype)
+        if kind == "state":
+            if ax == 0:
+                return dst.at[slots].set(src)
+            return dst.at[:, slots].set(src)
+        # kv pool leaf: src is the packed slab cache — batch at ax, K at
+        # ax+1, seq at ax+2, hd at ax+3; dst has page at ax, then
+        # (K, page_size, hd)
+        ps = dst.shape[ax + 2]
+        n_pp = rows.shape[1]
+        S = src.shape[ax + 2]
+        pad = n_pp * ps - S
+        if pad:
+            padding = [(0, 0)] * src.ndim
+            padding[ax + 2] = (0, pad)
+            src = jnp.pad(src, padding)
+        if ax == 0:
+            k, K, _, hd = src.shape
+            src = src.reshape(k, K, n_pp, ps, hd).transpose(0, 2, 1, 3, 4)
+            return dst.at[rows].set(src)
+        G, k, K, _, hd = src.shape
+        src = src.reshape(G, k, K, n_pp, ps, hd).transpose(0, 1, 3, 2, 4, 5)
+        return dst.at[:, rows].set(src)
+
+    return jax.tree.map(w, cache, page, layout)
+
+
+#: jitted (prefill, decode[, chunk]) per live served-model configuration —
+#: sessions over the same model share compiled executables instead of
+#: retracing.  Bounded LRU: the strong model ref pins id(model), so
+#: unbounded growth would leak every model (and its executables) served.
 _JIT_CACHE: "OrderedDict[Any, Any]" = OrderedDict()
-_JIT_CACHE_MAX = 8
+_JIT_CACHE_MAX = 16
 _WRITE_JIT = jax.jit(write_slot)
+_WRITE_SLOTS_JIT = jax.jit(write_slots)
+
+#: jitted write_pages per layout tree — shared across batcher instances
+#: (a per-batcher jit closure would recompile the page map-in on every
+#: session construction, swamping the stacked-prefill win)
+_WRITE_PAGES_JITS: "OrderedDict[Any, Any]" = OrderedDict()
+_WRITE_PAGES_JITS_MAX = 16
 
 
-def _model_fns(model, cache_len: int):
-    key = (id(model), cache_len)
-    if key not in _JIT_CACHE:
-        _JIT_CACHE[key] = (
-            model,  # strong ref pins the id
-            jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len)),
-            jax.jit(lambda p, tok, cache, pos: model.decode_step(p, tok, cache, pos)),
+def _write_pages_jit(layout):
+    leaves, treedef = jax.tree.flatten(layout)
+    key = (tuple(leaves), treedef)
+    if key not in _WRITE_PAGES_JITS:
+        _WRITE_PAGES_JITS[key] = jax.jit(
+            lambda cache, page, slots, rows, layout=layout: write_pages(
+                cache, page, slots, rows, layout
+            )
         )
+    _WRITE_PAGES_JITS.move_to_end(key)
+    while len(_WRITE_PAGES_JITS) > _WRITE_PAGES_JITS_MAX:
+        _WRITE_PAGES_JITS.popitem(last=False)
+    return _WRITE_PAGES_JITS[key]
+
+
+def _model_fns(model, cache_len: int, cache_dtype, paged: bool):
+    key = (id(model), cache_len, jnp.dtype(cache_dtype).name, paged)
+    if key not in _JIT_CACHE:
+        prefill = jax.jit(
+            lambda p, b: model.prefill(
+                p, b, cache_len=cache_len, cache_dtype=cache_dtype
+            )
+        )
+        if paged:
+            # donate the pool buffers: the batcher always discards the old
+            # cache, so the per-step scatters update pages in place instead
+            # of copy-on-write-ing the whole pool
+            decode = jax.jit(
+                lambda p, tok, cache, pos, pages: model.decode_step(
+                    p, tok, cache, pos, pages=pages
+                ),
+                donate_argnums=(2,),
+            )
+        else:
+            decode = jax.jit(
+                lambda p, tok, cache, pos: model.decode_step(
+                    p, tok, cache, pos
+                )
+            )
+        _JIT_CACHE[key] = (model, prefill, decode)  # model ref pins the id
     _JIT_CACHE.move_to_end(key)
     while len(_JIT_CACHE) > _JIT_CACHE_MAX:
         _JIT_CACHE.popitem(last=False)
     _, prefill, decode = _JIT_CACHE[key]
     return prefill, decode
+
+
+def _chunk_fn(model, pos0: int):
+    """Jitted chunk prefill at static base position ``pos0`` (one trace per
+    (chunk width, pos0) pair — chunk schedules are short, so this is a
+    handful of compilations, cached with the model's other executables).
+    The cache is donated for the same reason the decode step donates: the
+    old pool is always discarded, so chunks scatter in place instead of
+    copy-on-writing every KV leaf per chunk."""
+    key = (id(model), "chunk", pos0)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = (
+            model,
+            jax.jit(
+                lambda p, toks, cache, pages: model.prefill_chunk(
+                    p, toks, cache, pos0, pages=pages
+                ),
+                donate_argnums=(2,),
+            ),
+            None,
+        )
+    _JIT_CACHE.move_to_end(key)
+    return _JIT_CACHE[key][1]
 
 
 @dataclass
@@ -99,6 +231,7 @@ class SlotState:
     slot: int
     prompt_total: int  # prompt tokens + stub positions (vlm embeds)
     generated: List[int] = field(default_factory=list)
+    prefilling: bool = False  # mapped but chunks still streaming in
     t_join: float = 0.0
     t_done: float = 0.0
 
@@ -110,6 +243,24 @@ class SlotState:
         if not self.generated or eos is None:
             return False
         return self.generated[-1] == eos
+
+
+@dataclass
+class PrefillJob:
+    """One admitted group whose prompt streams in chunk by chunk."""
+
+    states: List[SlotState]
+    tokens: Any  # (k, prompt_total) int32, stacked
+    chunk: int
+    progress: int = 0  # positions already prefilled
+
+    @property
+    def prompt_total(self) -> int:
+        return int(self.tokens.shape[1])
+
+    @property
+    def remaining(self) -> int:
+        return self.prompt_total - self.progress
 
 
 class ContinuousBatcher:
@@ -124,32 +275,121 @@ class ContinuousBatcher:
         cache_len: int = 128,
         enc_len: int = 0,
         cache_dtype=jnp.bfloat16,
+        kv_layout: str = "slab",
+        page_size: int = 16,
+        kv_pages: int = 0,
+        prefill_chunk: int = 0,
+        batched_prefill: bool = True,
     ):
+        if kv_layout not in ("slab", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if prefill_chunk and kv_layout != "paged":
+            raise ValueError("chunked prefill requires kv_layout='paged'")
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.cache_len = cache_len
         self.enc_len = enc_len or max(cache_len // 4, 1)
-        self.cache = model.init_cache(
-            max_slots, cache_len, enc_len=self.enc_len, cache_dtype=cache_dtype
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
+        self.page_size = page_size
+        self.batched_prefill = batched_prefill
+        self.prefill_chunk = (
+            prefill_chunk if getattr(model, "supports_chunked_prefill", False)
+            else 0
         )
+
+        self.pool: Optional[PagePool] = None
+        self._layout = None
+        if self.paged:
+            self.pages_per_slot = pages_needed(cache_len, page_size)
+            self.cache, self._layout = model.init_paged_cache(
+                max_slots,
+                cache_len,
+                n_pages=(kv_pages or max_slots * self.pages_per_slot + 1),
+                page_size=page_size,
+                enc_len=self.enc_len,
+                cache_dtype=cache_dtype,
+            )
+            self._has_kv = any(
+                str(lay).startswith("kv")
+                for lay in jax.tree.leaves(self._layout)
+            )
+            if self._has_kv:
+                self.pool = PagePool(
+                    kv_pages or max_slots * self.pages_per_slot + 1, page_size
+                )
+            # physical page ids per (slot, logical page); 0 = trash
+            self._tables = np.zeros(
+                (max_slots, max(self.pages_per_slot, 1)), np.int32
+            )
+            # the table the decode step sees: prefilling slots stay zeroed
+            # (their decode-lane writes must hit the trash page, not the
+            # pages their chunks are still filling)
+            self._visible = self._tables.copy()
+            self._visible_dev = jnp.asarray(self._visible)
+            self._write_pages = _write_pages_jit(self._layout)
+        else:
+            self.pages_per_slot = 0
+            self.cache = model.init_cache(
+                max_slots, cache_len, enc_len=self.enc_len,
+                cache_dtype=cache_dtype,
+            )
+
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
         self.pos = jnp.zeros((max_slots,), jnp.int32)
         self.slots: List[Optional[SlotState]] = [None] * max_slots
+        self._slot_pages: Dict[int, List[int]] = {}
+        self._last_defer_rid: Optional[int] = None
+        self._jobs: List[PrefillJob] = []
         self._finished: List[SlotState] = []
         self.decode_steps = 0
+        self.prefill_calls = 0  # prefill dispatches (stacked counts once)
+        self.chunk_steps = 0
+        self.interleaved_chunks = 0  # chunk steps run with decode work live
         self.prefill_seconds = 0.0
         self.decode_seconds = 0.0
-        self._prefill, self._decode = _model_fns(model, cache_len)
+        self._prefill, self._decode = _model_fns(
+            model, cache_len, cache_dtype, self.paged
+        )
         self._write = _WRITE_JIT
 
     # ------------------------------------------------------------- occupancy
     @property
     def n_active(self) -> int:
+        """Occupied slots (decoding or still prefilling)."""
         return sum(s is not None for s in self.slots)
+
+    @property
+    def n_decoding(self) -> int:
+        return sum(s is not None and not s.prefilling for s in self.slots)
 
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
+
+    def prefill_pending(self) -> bool:
+        return bool(self._jobs)
+
+    def kv_stats(self) -> Dict[str, Any]:
+        """Page-pool occupancy vs. the slab footprint (token positions —
+        per-token KV bytes are identical across layouts, so they cancel)."""
+        slab_tokens = self.max_slots * self.cache_len
+        out: Dict[str, Any] = {
+            "kv_layout": self.kv_layout,
+            "kv_slab_tokens": slab_tokens,
+        }
+        if self.pool is not None:
+            hw = self.pool.high_water_tokens()
+            out.update(
+                kv_page_size=self.page_size,
+                kv_pages=self.pool.n_pages,
+                kv_pages_in_use=self.pool.in_use,
+                kv_page_hw=self.pool.high_water,
+                kv_page_hw_tokens=hw,
+                kv_mem_saving=1.0 - hw / max(slab_tokens, 1),
+                kv_defers=self.pool.defers,
+            )
+        return out
 
     # ------------------------------------------------------------------ join
     def validate(self, req: Request) -> None:
@@ -172,76 +412,316 @@ class ContinuousBatcher:
                     f"request {req.rid}: frames length {got} != batcher "
                     f"enc_len {self.enc_len}"
                 )
+        if self.pool is not None:
+            pages = min(pages_needed(need, self.page_size),
+                        self.pages_per_slot)
+            if pages > self.pool.capacity:
+                # a reservation no pool state can ever satisfy must fail
+                # loudly — deferral would wait forever (the livelock the
+                # reservation design otherwise rules out)
+                raise ValueError(
+                    f"request {req.rid}: needs {pages} KV pages > pool "
+                    f"capacity {self.pool.capacity}; raise kv_pages or "
+                    f"page_size"
+                )
+
+    def _need_tokens(self, req: Request) -> int:
+        stub = 0
+        if "embeds" in req.extras:
+            stub = int(jnp.asarray(req.extras["embeds"]).shape[0])
+        return req.prompt_len + stub + req.max_new_tokens - 1
+
+    def can_admit(self, req: Request) -> bool:
+        """A free slot AND (paged) enough pool pages for the request's full
+        reach — reservation-based admission can defer but never livelock."""
+        if not self.free_slots():
+            return False
+        if self.pool is not None:
+            ok = self.pool.can_alloc(
+                min(pages_needed(self._need_tokens(req), self.page_size),
+                    self.pages_per_slot)
+            )
+            if not ok and req.rid != self._last_defer_rid:
+                # count deferral EVENTS, not per-step admission polls
+                self.pool.defers += 1
+                self._last_defer_rid = req.rid
+            return ok
+        return True
 
     def join(self, req: Request) -> int:
-        """Prefill ``req`` alone and page its cache into a free slot."""
-        self.validate(req)
-        free = self.free_slots()
-        if not free:
-            raise RuntimeError("no free slot: admission outran eviction")
-        slot = free[0]
-        batch: Dict[str, Any] = {"tokens": jnp.asarray(req.tokens)[None]}
-        for k, v in req.extras.items():
-            batch[k] = jnp.asarray(v)[None]
+        """Admit one request on its own (the PR 3 batch-1 prefill path)."""
+        slots = self.admit_many([req])
+        if not slots:
+            raise RuntimeError(
+                "no free slot/pages: admission outran eviction"
+            )
+        return slots[0]
+
+    def admit_many(self, reqs: List[Request]) -> List[int]:
+        """Admit queued requests: map slots (and pages), then prefill in
+        stacked same-shape groups — ONE prefill call for k requests instead
+        of k batch-1 calls.  Long prompts on chunk-capable models become
+        :class:`PrefillJob`s instead of prefilling inline, so the serving
+        loop can interleave their chunks with decode steps.
+
+        Stops at the first request that doesn't fit (FIFO order is
+        preserved; the caller re-offers the rest after evictions free
+        capacity).  Returns the admitted slots, in request order."""
+        admitted: List[Tuple[Request, int]] = []
+        for req in reqs:
+            self.validate(req)
+            if not self.can_admit(req):
+                break
+            slot = self.free_slots()[0]
+            if self.pool is not None:
+                n = min(
+                    pages_needed(self._need_tokens(req), self.page_size),
+                    self.pages_per_slot,
+                )
+                pages = self.pool.alloc(n, rid=req.rid)
+                assert pages is not None  # can_admit checked
+                self._slot_pages[slot] = pages
+                self._tables[slot] = 0
+                self._tables[slot, : len(pages)] = pages
+            stub = 0
+            if "embeds" in req.extras:
+                stub = int(jnp.asarray(req.extras["embeds"]).shape[0])
+            state = SlotState(
+                req=req,
+                slot=slot,
+                prompt_total=req.prompt_len + stub,
+                t_join=time.perf_counter(),
+            )
+            self.slots[slot] = state
+            self._last_defer_rid = None
+            admitted.append((req, slot))
+
+        if not admitted:
+            return []
+
+        # group by stacked-prefill compatibility: identical prompt_total and
+        # extras signature → rows are batch-independent, so a stacked
+        # prefill is token-identical to k solo prefills
+        groups: Dict[Tuple, List[SlotState]] = {}
+        order: List[Tuple] = []
+        for req, slot in admitted:
+            state = self.slots[slot]
+            sig = (
+                state.prompt_total,
+                tuple(sorted(
+                    (k, tuple(jnp.asarray(v).shape))
+                    for k, v in req.extras.items()
+                )),
+            )
+            if sig not in groups:
+                groups[sig] = []
+                order.append(sig)
+            groups[sig].append(state)
+        if not self.batched_prefill:
+            # PR 3 baseline behavior: one batch-1 prefill per request
+            groups = {
+                (i,): [self.slots[slot]]
+                for i, (_, slot) in enumerate(admitted)
+            }
+            order = sorted(groups)
+
+        for sig in order:
+            states = groups[sig]
+            chunkable = (
+                self.prefill_chunk > 0
+                and not states[0].req.extras
+                and states[0].prompt_total > self.prefill_chunk
+            )
+            if chunkable:
+                for s in states:
+                    s.prefilling = True
+                toks = jnp.stack(
+                    [jnp.asarray(s.req.tokens, jnp.int32) for s in states]
+                )
+                self._jobs.append(
+                    PrefillJob(states=states, tokens=toks,
+                               chunk=self.prefill_chunk)
+                )
+            else:
+                try:
+                    self._prefill_group(states)
+                except Exception:
+                    # roll the group's capacity back: a failing prefill must
+                    # not leak slots or pool pages (the request itself is
+                    # lost, exactly like the PR 3 join path)
+                    for st in states:
+                        self._release(st)
+                    if self.paged:
+                        self._refresh_tables()
+                    raise
+        if self.paged:
+            self._refresh_tables()
+        return [slot for _, slot in admitted]
+
+    def _release(self, state: SlotState) -> None:
+        """Return a slot's capacity without completion bookkeeping (error
+        rollback)."""
+        if self.slots[state.slot] is state:
+            self.slots[state.slot] = None
+        pages = self._slot_pages.pop(state.slot, None)
+        if pages is not None and self.pool is not None:
+            self.pool.free(pages)
+            self._tables[state.slot] = 0
+
+    def _refresh_tables(self) -> None:
+        """Rebuild the decode-visible page table: occupied non-prefilling
+        slots expose their mapping, everything else points at trash."""
+        self._visible = self._tables.copy()
+        for i, s in enumerate(self.slots):
+            if s is None or s.prefilling:
+                self._visible[i] = 0
+        self._visible_dev = jnp.asarray(self._visible)
+
+    def _prefill_group(self, states: List[SlotState]) -> None:
+        """One stacked (or solo) one-shot prefill + cache map-in."""
+        reqs = [s.req for s in states]
+        batch: Dict[str, Any] = {
+            "tokens": jnp.stack([jnp.asarray(r.tokens) for r in reqs])
+        }
+        for key in reqs[0].extras:
+            batch[key] = jnp.stack(
+                [jnp.asarray(r.extras[key]) for r in reqs]
+            )
         t0 = time.perf_counter()
         logits, page = self._prefill(self.params, batch)
-        first = int(jnp.argmax(logits[0], axis=-1))
-        prompt_total = req.prompt_len + (
-            batch["embeds"].shape[1] if "embeds" in batch else 0
+        firsts = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        slot_ids = jnp.asarray([s.slot for s in states], jnp.int32)
+        if self.paged:
+            rows = jnp.asarray(
+                self._tables[np.asarray([s.slot for s in states])]
+            )
+            self.cache = self._write_pages(self.cache, page, slot_ids, rows)
+        elif len(states) == 1:
+            self.cache = self._write(
+                self.cache, page, jnp.int32(states[0].slot)
+            )
+        else:
+            self.cache = _WRITE_SLOTS_JIT(self.cache, page, slot_ids)
+        self.tokens = self.tokens.at[slot_ids].set(firsts)
+        self.pos = self.pos.at[slot_ids].set(
+            jnp.asarray([s.prompt_total for s in states], jnp.int32)
         )
-        self.cache = self._write(self.cache, page, jnp.int32(slot))
-        self.tokens = self.tokens.at[slot].set(first)
-        self.pos = self.pos.at[slot].set(prompt_total)
+        self.prefill_calls += 1
         self.prefill_seconds += time.perf_counter() - t0
-        state = SlotState(
-            req=req,
-            slot=slot,
-            prompt_total=prompt_total,
-            generated=[first],
-            t_join=time.perf_counter(),
+        first_host = np.asarray(firsts)
+        for i, s in enumerate(states):
+            s.generated = [int(first_host[i])]
+            s.t_join = time.perf_counter()
+            if s.done:  # max_new_tokens == 1 (or instant EOS)
+                self._evict(s)
+                self._finished.append(s)
+
+    # --------------------------------------------------------------- chunks
+    def prefill_chunk_step(self) -> bool:
+        """Advance the front prefill job by one chunk (DIP-style: the
+        serving session calls this *between* decode steps).  Returns True
+        if a chunk ran."""
+        if not self._jobs:
+            return False
+        job = self._jobs[0]
+        t0 = time.perf_counter()
+        width = min(job.chunk, job.remaining)
+        toks = job.tokens[:, job.progress : job.progress + width]
+        rows = jnp.asarray(
+            self._tables[np.asarray([s.slot for s in job.states])]
         )
-        self.slots[slot] = state
-        if state.done:  # max_new_tokens == 1 (or instant EOS)
-            self._evict(state)
-            self._finished.append(state)
-        return slot
+        fn = _chunk_fn(self.model, job.progress)
+        try:
+            logits, self.cache = fn(self.params, toks, self.cache, rows)
+        except Exception:
+            self._jobs.pop(0)
+            for st in job.states:
+                self._release(st)
+            self._refresh_tables()
+            raise
+        job.progress += width
+        self.chunk_steps += 1
+        if self.n_decoding > 0:
+            self.interleaved_chunks += 1
+        self.prefill_seconds += time.perf_counter() - t0
+        if job.remaining == 0:
+            self._finish_job(job, logits)
+        return True
+
+    def _finish_job(self, job: PrefillJob, logits) -> None:
+        self._jobs.pop(0)
+        firsts = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        slot_ids = jnp.asarray([s.slot for s in job.states], jnp.int32)
+        self.tokens = self.tokens.at[slot_ids].set(firsts)
+        self.pos = self.pos.at[slot_ids].set(
+            jnp.asarray([s.prompt_total for s in job.states], jnp.int32)
+        )
+        self.prefill_calls += 1
+        first_host = np.asarray(firsts)
+        for i, s in enumerate(job.states):
+            s.prefilling = False
+            s.generated = [int(first_host[i])]
+            if s.done:
+                self._evict(s)
+                self._finished.append(s)
+        self._refresh_tables()
 
     # ------------------------------------------------------------------ step
     def step(self) -> List[SlotState]:
-        """Decode ONE token for every occupied slot; return evictions.
+        """Decode ONE token for every decoding slot; return evictions.
 
-        Free slots ride along as masked garbage rows (every per-row op of
-        the decode path is batch-independent, so they cannot perturb live
-        rows); their cache writes land at stale positions that the next
-        join overwrites.
+        Free (and still-prefilling) slots ride along as masked garbage rows
+        (every per-row op of the decode path is batch-independent, so they
+        cannot perturb live rows); their cache writes land at stale slab
+        positions — or in the paged trash page — that the next join
+        overwrites.
         """
         finished, self._finished = self._finished, []
-        if self.n_active == 0:
+        if self.n_decoding == 0:
             return finished
         t0 = time.perf_counter()
-        logits, self.cache = self._decode(
-            self.params, self.tokens, self.cache, self.pos
-        )
+        if self.paged:
+            logits, self.cache = self._decode(
+                self.params, self.tokens, self.cache, self.pos,
+                self._visible_dev,
+            )
+        else:
+            logits, self.cache = self._decode(
+                self.params, self.tokens, self.cache, self.pos
+            )
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        active = np.array([s is not None for s in self.slots], dtype=np.int32)
+        active = np.array(
+            [s is not None and not s.prefilling for s in self.slots],
+            dtype=np.int32,
+        )
         self.tokens = jnp.where(jnp.asarray(active, bool), next_tok, self.tokens)
         self.pos = self.pos + jnp.asarray(active)
         self.decode_steps += 1
         toks = np.asarray(next_tok)
         self.decode_seconds += time.perf_counter() - t0
+        evicted = False
         for s in list(self.slots):
-            if s is None:
+            if s is None or s.prefilling:
                 continue
             s.generated.append(int(toks[s.slot]))
             if s.done:
                 self._evict(s)
                 finished.append(s)
+                evicted = True
+        if evicted and self.paged:
+            self._refresh_tables()
         return finished
 
     # ----------------------------------------------------------------- evict
     def _evict(self, state: SlotState) -> None:
-        """Free the slot.  The cache page stays as-is: stale rows are dead
-        weight masked by ``pos`` until the next join overwrites them."""
+        """Free the slot the step its request finishes (eos-aware: an early
+        EOS returns its pages immediately instead of at max_tokens).  Slab
+        rows stay as-is — stale rows are dead weight masked by ``pos`` until
+        the next join overwrites them; paged rows unmap back to the pool."""
         state.t_done = time.perf_counter()
         if self.slots[state.slot] is state:
             self.slots[state.slot] = None
+            pages = self._slot_pages.pop(state.slot, None)
+            if pages is not None and self.pool is not None:
+                self.pool.free(pages)
+                self._tables[state.slot] = 0

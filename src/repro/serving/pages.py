@@ -1,0 +1,129 @@
+"""Paged KV allocation: a shared physical page pool + per-slot page tables.
+
+The PR 3 batcher gave every slot one fixed-``cache_len`` KV slab, so cache
+memory scaled with ``slots × max(cache_len)`` no matter how short the
+resident requests were.  This module is the serving analogue of an OS page
+table: cache memory is a pool of fixed-size **physical pages** (``page_size``
+token positions each), and each slot owns a small **page table** mapping its
+logical pages (position ``p`` lives in logical page ``p // page_size``) to
+physical pages.  Joining a request *maps* pages in, evicting *unmaps* them —
+no slab copies — and pool occupancy scales with the tokens each live request
+can actually reach (prompt + its own ``max_new_tokens``), not with the
+worst-case prompt every slot must be sized for.
+
+Physical page 0 is reserved as the **trash page**: page-table rows init to
+0, so unmapped logical pages of inactive (or short) slots direct the decode
+step's unavoidable fixed-shape writes into a sacrificial page instead of a
+neighbour's memory.  Reads through unmapped entries return garbage that the
+attention validity mask (``kpos <= pos``) zeroes exactly — the same masking
+contract the slab layout relied on for stale rows.
+
+Allocation is **reservation-based**: ``join`` allocates every page the
+request could ever touch (``ceil((prompt + max_new) / page_size)``) up
+front, and admission defers when the pool cannot cover it.  That forgoes
+the finer-grained grow-on-write policy but can never livelock mid-decode
+with every page in use and every request needing one more page to finish
+(grow-on-write must evict someone to recover; reservation just admits
+later).  DESIGN.md §13 records the tradeoff.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+__all__ = ["PagePool", "pages_needed"]
+
+
+def pages_needed(tokens: int, page_size: int) -> int:
+    """Physical pages covering ``tokens`` positions (0 tokens → 0 pages)."""
+    if tokens <= 0:
+        return 0
+    return -(-tokens // page_size)
+
+
+class PagePool:
+    """Host-side allocator for one cache layout's physical pages.
+
+    Purely bookkeeping — the actual storage lives in the cache pytree's
+    pool-shaped leaves; this class decides which physical rows are free,
+    owns the trash-page convention, and tracks the high-water occupancy the
+    serving benchmarks report against the old slab footprint.
+    """
+
+    TRASH = 0  # physical page 0: the write sink for unmapped entries
+
+    def __init__(self, n_pages: int, page_size: int, *, name: str = "kv"):
+        if n_pages < 2:
+            raise ValueError(
+                f"{name} pool needs >= 2 pages (1 trash + 1 usable), "
+                f"got {n_pages}"
+            )
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.name = name
+        self.n_pages = n_pages
+        self.page_size = page_size
+        #: free physical pages, smallest-first (page 0 never enters)
+        self._free: List[int] = list(range(1, n_pages))
+        self._owner: Dict[int, int] = {}  # physical page -> owning rid
+        self.high_water = 0  # max pages simultaneously mapped
+        self.alloc_calls = 0
+        #: deferral EVENTS — incremented by the admission layer once per
+        #: request that had to wait on pool pressure (and by a failed
+        #: alloc), NOT once per polling attempt
+        self.defers = 0
+
+    # ------------------------------------------------------------- occupancy
+    @property
+    def in_use(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Usable pages (the trash page is not allocatable)."""
+        return self.n_pages - 1
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def high_water_tokens(self) -> int:
+        return self.high_water * self.page_size
+
+    # ------------------------------------------------------------ alloc/free
+    def alloc(self, n: int, *, rid: int = -1) -> Optional[List[int]]:
+        """Map ``n`` physical pages to ``rid`` (None when the pool defers)."""
+        if n > len(self._free):
+            self.defers += 1
+            return None
+        pages = [self._free.pop(0) for _ in range(n)]
+        for p in pages:
+            self._owner[p] = rid
+        self.alloc_calls += 1
+        self.high_water = max(self.high_water, self.in_use)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        """Unmap ``pages`` (evict path).  Double-frees and trash-frees are
+        errors — they mean a page table row leaked or aliased."""
+        for p in pages:
+            if p == self.TRASH:
+                raise ValueError(f"{self.name} pool: cannot free trash page")
+            if p not in self._owner:
+                raise ValueError(f"{self.name} pool: double free of page {p}")
+            del self._owner[p]
+            self._free.append(p)
+        self._free.sort()
+
+    def owner(self, page: int) -> Optional[int]:
+        return self._owner.get(page)
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "in_use": self.in_use,
+            "high_water": self.high_water,
+            "high_water_tokens": self.high_water_tokens(),
+            "alloc_calls": self.alloc_calls,
+            "defers": self.defers,
+        }

@@ -73,6 +73,13 @@ class RequestQueue:
         """Next pending request in arrival order (None when empty)."""
         return self._pending.popleft() if self._pending else None
 
+    def requeue_front(self, reqs: List[Request]) -> None:
+        """Return popped-but-unadmitted requests to the head of the queue
+        in their original order (admission deferral — e.g. page-pool
+        pressure — must not reorder FIFO service)."""
+        for req in reversed(reqs):
+            self._pending.appendleft(req)
+
     def peek(self) -> Optional[Request]:
         return self._pending[0] if self._pending else None
 

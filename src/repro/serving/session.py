@@ -10,11 +10,13 @@ built ON it rather than beside it.  The serving loop is:
         session.step()       # admit → decode one token → evict → replan?
     results = session.results
 
-Each ``step`` admits queued requests into free batch slots (prefill + cache
-page-in, :class:`repro.serving.batcher.ContinuousBatcher`), decodes one
-token for the whole active batch, evicts finished requests, and then drains
-the request lifecycle events (:class:`repro.launch.events.
-RequestQueueSource`).  When the bucketized **mix signature**
+Each ``step`` admits queued requests into free batch slots (stacked
+prefill + page map-in, :class:`repro.serving.batcher.ContinuousBatcher`),
+advances pending chunked-prefill jobs at the ``prefill_duty`` cycle
+(DIP-style: chunks run *between* decode steps), decodes one token for the
+whole active batch, evicts finished requests (returning their KV pages to
+the pool), and then drains the request lifecycle events (:class:`repro.
+launch.events.RequestQueueSource`).  When the bucketized **mix signature**
 (:class:`repro.serving.mix.MixTracker`) actually changed, the event burst
 is driven through the inner plan-only :class:`SpindleSession` via
 ``signal_all`` — one coalesced replan per mix shift, planned through the
@@ -29,9 +31,13 @@ is driven through the inner plan-only :class:`SpindleSession` via
 
 Replan policies: ``"mix"`` (the above), ``"initial"`` (plan the first
 non-empty mix, then serve on the stale plan — the ablation baseline), and
-``"off"`` (no planner, the static-batch baseline).  Admission policies:
-``"continuous"`` (join whenever a slot is free) and ``"static"`` (classic
-batch serving: wait until the whole batch drains, then refill).
+``"off"`` (no planner, the static-batch baseline); ``replan_cooldown``
+coalesces bursty mix churn into one planner turn per window.  Admission
+policies: ``"continuous"`` (join whenever a slot is free) and ``"static"``
+(classic batch serving: wait until the whole batch drains, then refill).
+KV layouts: ``"paged"`` (shared page pool + per-slot page tables — the
+fast path, DESIGN.md §13) and ``"slab"`` (PR 3: one fixed-``cache_len``
+slab per slot).
 """
 
 from __future__ import annotations
@@ -68,10 +74,32 @@ class ServingConfig:
     #: "continuous" (join as slots free) | "static" (drain-then-refill)
     admission: str = "continuous"
     max_pending: int = 1024
+    # KV memory: "paged" (shared page pool + per-slot page tables — the
+    # fast path) | "slab" (PR 3: one fixed-cache_len slab per slot)
+    kv_layout: str = "paged"
+    page_size: int = 16
+    kv_pages: int = 0  # physical pages incl. trash page; 0 → full coverage
+    # prefill: stacked same-length admission (one prefill call for k
+    # requests), and — paged, all-attention archs — chunked prefill
+    # interleaved with decode steps (DIP-style mixed waves)
+    batched_prefill: bool = True
+    prefill_chunk: int = 0  # 0 = one-shot; else chunk width in tokens
+    #: prefill:decode duty cycle — chunk calls allowed per decode step
+    #: (fractional: 0.5 = one chunk every other decode step)
+    prefill_duty: float = 1.0
+    # admissibility caps: reject slab-overflow at CONFIG time instead of
+    # letting a request stream past cache_len mid-decode (0 = derive)
+    max_prompt_len: int = 0  # 0 → cache_len - max_new_tokens
+    max_new_tokens: int = 0  # 0 → no per-request generation cap
     # planning
     #: "mix" (replan on mix shifts) | "initial" (plan once, stale after)
     #: | "off" (no planner at all)
     replan: str = "mix"
+    #: minimum serving steps between replan turns (0 = replan on every mix
+    #: shift).  Bursty admission churns the quantized mix many times within
+    #: a few steps; a cooldown coalesces those shifts into ONE planner turn
+    #: over the settled mix — planner QoS for the decode fast path.
+    replan_cooldown: int = 0
     planner: str = "spindle"
     placement_strategy: str = "spindle"
     cluster: ClusterSpec = ClusterSpec(n_devices=16, island_size=8, mem_bytes=96e9)
@@ -82,8 +110,47 @@ class ServingConfig:
     def __post_init__(self):
         if self.admission not in ("continuous", "static"):
             raise ValueError(f"unknown admission policy {self.admission!r}")
+        if self.replan_cooldown < 0:
+            raise ValueError("replan_cooldown must be >= 0")
         if self.replan not in ("mix", "initial", "off"):
             raise ValueError(f"unknown replan policy {self.replan!r}")
+        if self.kv_layout not in ("paged", "slab"):
+            raise ValueError(f"unknown kv_layout {self.kv_layout!r}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.prefill_chunk < 0 or self.prefill_duty <= 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0 and prefill_duty > 0, got "
+                f"{self.prefill_chunk}/{self.prefill_duty}"
+            )
+        if self.prefill_chunk and self.kv_layout != "paged":
+            raise ValueError(
+                "prefill_chunk requires kv_layout='paged' (chunks stream "
+                "into the page pool)"
+            )
+        # The slab-sizing bug class, rejected at the source: a config whose
+        # admissible prompt + generation budget overruns cache_len would
+        # otherwise truncate KV writes mid-stream (request-level validation
+        # still guards per-request overruns when no caps are set).
+        if self.max_prompt_len < 0 or self.max_new_tokens < 0:
+            raise ValueError("max_prompt_len/max_new_tokens must be >= 0")
+        if self.max_prompt_len and self.max_new_tokens:
+            need = self.max_prompt_len + self.max_new_tokens - 1
+            if need > self.cache_len:
+                raise ValueError(
+                    f"max_prompt_len ({self.max_prompt_len}) + "
+                    f"max_new_tokens ({self.max_new_tokens}) needs {need} "
+                    f"cache positions > cache_len={self.cache_len}; raise "
+                    f"cache_len or lower the admissibility caps"
+                )
+
+    @property
+    def effective_max_prompt_len(self) -> int:
+        if self.max_prompt_len:
+            return self.max_prompt_len
+        if self.max_new_tokens:
+            return self.cache_len - self.max_new_tokens + 1
+        return self.cache_len
 
 
 @dataclass
@@ -141,7 +208,13 @@ class ServingSession:
             cache_len=cfg.cache_len,
             enc_len=cfg.enc_len,
             cache_dtype=jnp.dtype(cfg.cache_dtype),
+            kv_layout=cfg.kv_layout,
+            page_size=cfg.page_size,
+            kv_pages=cfg.kv_pages,
+            prefill_chunk=cfg.prefill_chunk,
+            batched_prefill=cfg.batched_prefill,
         )
+        self._duty_credit = 0.0
         self._tower = tower_from_arch(model.cfg, seq=cfg.cache_len)
         self.planner_session: Optional[SpindleSession] = None
         if cfg.replan != "off":
@@ -156,7 +229,12 @@ class ServingSession:
                     replan_on=("request_arrived", "request_completed"),
                 ),
                 graph_factory=lambda tasks: serving_mix_workload(
-                    self.mix.snapshot().counts, tower=self._tower
+                    self.mix.snapshot().counts,
+                    tower=self._tower,
+                    # the batcher's EFFECTIVE chunk: zero on models that
+                    # cannot chunk, so the planner never models chunked
+                    # towers that won't execute
+                    prefill_chunk=self.batcher.prefill_chunk,
                 ),
                 callbacks=callbacks,
                 cache=plan_cache,
@@ -165,6 +243,7 @@ class ServingSession:
         self._last_families: Optional[Tuple[str, ...]] = None
         self._event_buf: List[Event] = []
         self._planned_once = False
+        self._last_replan_step = -(10**9)
         self._t_submit: Dict[int, float] = {}
         self.results: Dict[int, RequestResult] = {}
         self.steps = 0
@@ -186,7 +265,19 @@ class ServingSession:
         """Admit a request (False = rejected by admission control).
 
         Raises ``ValueError`` up front for a request that could never fit a
-        slot (prompt + generation exceed ``cache_len``)."""
+        slot (prompt + generation exceed ``cache_len``) or that violates the
+        config's admissibility caps."""
+        cfg = self.config
+        if req.prompt_len > cfg.effective_max_prompt_len:
+            raise ValueError(
+                f"request {req.rid}: prompt_len {req.prompt_len} > "
+                f"admissible max {cfg.effective_max_prompt_len}"
+            )
+        if cfg.max_new_tokens and req.max_new_tokens > cfg.max_new_tokens:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens {req.max_new_tokens} > "
+                f"config cap {cfg.max_new_tokens}"
+            )
         self.batcher.validate(req)
         ok = self.queue.submit(req)
         if ok:
@@ -198,10 +289,33 @@ class ServingSession:
         cfg = self.config
         if cfg.admission == "static" and self.batcher.n_active > 0:
             return 0  # classic batch serving: drain before refilling
-        joined = 0
-        while len(self.queue) > 0 and self.batcher.free_slots():
-            req = self.queue.pop()
-            self.batcher.join(req)
+        free = len(self.batcher.free_slots())
+        if free == 0 or len(self.queue) == 0:
+            return 0
+        cand = [self.queue.pop() for _ in range(min(free, len(self.queue)))]
+        try:
+            slots = self.batcher.admit_many(cand)
+            joined = cand[: len(slots)]
+            # page-pool pressure can defer the tail; it stays queued, in
+            # order
+            self.queue.requeue_front(cand[len(slots) :])
+        except Exception:
+            # a group prefill failed mid-admission: the batcher rolled that
+            # group's capacity back, but earlier groups ARE resident — sync
+            # the mix/event bookkeeping for them before propagating, or
+            # every later snapshot would plan an undercounted mix.  The
+            # failing group's requests are lost (PR 3 join semantics).
+            resident = {
+                s.req.rid for s in self.batcher.slots if s is not None
+            }
+            joined = [r for r in cand if r.rid in resident]
+            self._note_joined(joined)
+            raise
+        self._note_joined(joined)
+        return len(slots)
+
+    def _note_joined(self, reqs: Sequence[Request]) -> None:
+        for req in reqs:
             self.mix.joined(req.rid)
             # joining is the mix-changing moment (a queued request's
             # submit-time arrival event may have drained steps ago without
@@ -212,12 +326,30 @@ class ServingSession:
                     rid=req.rid, family=req.family, prompt_len=req.prompt_len
                 )
             )
-            joined += 1
-        return joined
+
+    def _run_prefill_chunks(self) -> None:
+        """DIP-style interleave: advance queued prefill chunks between
+        decode steps, throttled by the prefill:decode duty cycle.  With
+        nothing decoding there is nothing to interleave with — stream
+        chunks until a request becomes decodable."""
+        b = self.batcher
+        if not b.prefill_pending():
+            return
+        if b.n_decoding == 0:
+            while b.prefill_pending() and b.n_decoding == 0:
+                b.prefill_chunk_step()
+            self._duty_credit = 0.0
+            return
+        self._duty_credit += self.config.prefill_duty
+        while b.prefill_pending() and self._duty_credit >= 1.0:
+            b.prefill_chunk_step()
+            self._duty_credit -= 1.0
 
     def step(self) -> List[SlotState]:
-        """One serving step: admit → decode one token → evict → replan."""
+        """One serving step: admit → prefill chunks → decode one token →
+        evict → replan."""
         self._admit()
+        self._run_prefill_chunks()
         finished = self.batcher.step()
         for s in finished:
             self.mix.completed(s.req.rid)
@@ -264,8 +396,12 @@ class ServingSession:
             "rejected": self.queue.rejected,
             "output_tokens": out_tokens,
             "decode_steps": self.batcher.decode_steps,
+            "prefill_calls": self.batcher.prefill_calls,
+            "chunk_steps": self.batcher.chunk_steps,
+            "interleaved_chunks": self.batcher.interleaved_chunks,
             "prefill_seconds": self.batcher.prefill_seconds,
             "decode_seconds": self.batcher.decode_seconds,
+            **self.batcher.kv_stats(),
             "p50_latency_s": float(np.percentile(lats, 50)) if lats else 0.0,
             "p99_latency_s": float(np.percentile(lats, 99)) if lats else 0.0,
             "replans": len(self.replans),
@@ -297,6 +433,11 @@ class ServingSession:
         if ps is None or not self._event_buf:
             self._event_buf = []
             return None
+        cd = self.config.replan_cooldown
+        if cd and self.steps - self._last_replan_step < cd:
+            # cooldown: keep buffering — the burst's shifts coalesce into
+            # one planner turn over the settled mix when the window expires
+            return None
         snap = self.mix.snapshot()
         if not snap.counts:  # drained: nothing to plan until traffic returns
             self._last_key = None
@@ -314,6 +455,7 @@ class ServingSession:
         self._last_key = snap.key
         self._last_families = snap.families
         self._planned_once = True
+        self._last_replan_step = self.steps
         events, self._event_buf = self._event_buf, []
         ps.incremental = not new_family  # structural shift → full replan
         try:

@@ -6,6 +6,7 @@ import pytest
 
 from repro.kernels import flash_attention, grouped_matmul, rglru_scan
 from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention as paged_kernel
 
 ATOL = {jnp.float32: 2e-4, jnp.bfloat16: 2e-1}
 
@@ -61,6 +62,53 @@ def test_flash_attention_block_shape_independence():
     ]
     for o in outs[1:]:
         assert float(jnp.max(jnp.abs(o - outs[0]))) < 1e-5
+
+
+# ------------------------------------------------------------ paged attention
+
+
+@pytest.mark.parametrize("B,H,K,hd,ps,n_pp", [
+    (2, 4, 4, 32, 8, 3),    # MHA
+    (3, 8, 2, 64, 16, 2),   # GQA 4:1
+    (1, 4, 1, 128, 8, 4),   # MQA
+])
+def test_paged_attention_kernel_vs_ref(B, H, K, hd, ps, n_pp):
+    """The Mosaic paged-decode kernel (interpret mode) matches the
+    reference gather the serving decode path uses."""
+    P = B * n_pp + 2  # pool: every row's pages + trash + one spare
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, K, ps, hd))
+    vp = jax.random.normal(ks[2], (P, K, ps, hd))
+    # distinct physical pages per row, deliberately non-contiguous
+    table = jnp.asarray(
+        1 + jnp.arange(B * n_pp).reshape(B, n_pp)[:, ::-1], jnp.int32
+    )
+    lengths = jnp.asarray(
+        [(n_pp * ps - 1) if b % 2 else (ps // 2) for b in range(B)],
+        jnp.int32,
+    )
+    out = paged_kernel(q, kp, vp, table, lengths, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, table, lengths)
+    assert out.shape == want.shape
+    assert float(jnp.max(jnp.abs(out - want))) < 2e-4
+
+
+def test_paged_attention_unmapped_pages_are_masked():
+    """Logical pages past a row's valid length may alias the trash page
+    (entry 0) — their content must never leak into the output."""
+    B, H, K, hd, ps, n_pp = 1, 2, 2, 16, 4, 3
+    P = 5
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, K, ps, hd))
+    vp = jax.random.normal(ks[2], (P, K, ps, hd))
+    lengths = jnp.asarray([ps - 1], jnp.int32)  # only page 0 of the row valid
+    t1 = jnp.asarray([[1, 0, 0]], jnp.int32)  # tail unmapped → trash
+    t2 = jnp.asarray([[1, 3, 4]], jnp.int32)  # tail mapped to random pages
+    out1 = paged_kernel(q, kp, vp, t1, lengths, interpret=True)
+    out2 = paged_kernel(q, kp, vp, t2, lengths, interpret=True)
+    assert float(jnp.max(jnp.abs(out1 - out2))) < 1e-6
 
 
 # ------------------------------------------------------------- grouped matmul

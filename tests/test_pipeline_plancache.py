@@ -240,6 +240,52 @@ def test_incremental_reuses_unchanged_metalevel():
     assert shifted.makespan == pytest.approx(full.makespan, rel=0.05)
 
 
+def _two_tower_graph(dim2: int):
+    """Two concurrent towers (t1 fixed, t2 parameterized) joining a loss:
+    shifting ``dim2`` changes the tower LEVEL while leaving t1's MetaOp
+    identity untouched — the bracket-memo reuse case."""
+    def t1_wl(batch, seq):
+        return OpWorkload(flops=1e12, bytes_hbm=1e9, param_bytes=1e8,
+                          act_bytes=1e7, tp_comm_bytes=1e6)
+
+    def t2_wl(batch, seq):
+        return OpWorkload(flops=1e9 * dim2, bytes_hbm=1e8, param_bytes=1e7,
+                          act_bytes=1e6, tp_comm_bytes=1e5)
+
+    def loss_wl(batch, seq):
+        return OpWorkload(flops=1e9, bytes_hbm=1e8, param_bytes=1e6,
+                          act_bytes=1e6)
+
+    gb = GraphBuilder([
+        ComponentSpec("t1", 8, "xf[t1]", t1_wl, max_tp=4),
+        ComponentSpec("t2", 8, f"xf[t2x{dim2}]", t2_wl, max_tp=4),
+        ComponentSpec("loss", 1, "loss", loss_wl, max_tp=1),
+    ])
+    gb.add_flow(FlowSpec(task="t", branches=[["t1"], ["t2"]], join=["loss"],
+                         batch_size=8, seq_lens={"t1": 64, "t2": 64}))
+    return gb.build()
+
+
+def test_bracket_memo_reuses_unchanged_metaops():
+    """Inside a CHANGED level, MetaOps whose shape identity is unchanged
+    serve their bi-point brackets (valid-allocation sweep) from the
+    cross-plan BracketMemo — surfaced as the ``bracket_hits`` cache stat —
+    and the memoized plan matches a memo-less full plan."""
+    cache = PlanCache()
+    plan(_two_tower_graph(64), CLUSTER, cache=cache)
+    assert cache.stats.bracket_hits == 0  # cold plan: nothing to reuse
+    hits0 = cache.bracket_memo.hits
+    shifted = plan(_two_tower_graph(128), CLUSTER, cache=cache)
+    # t2 changed → the tower level replans; t1 (and the unchanged-level
+    # loss path) serve their valid-allocation sweeps from the memo
+    assert cache.stats.levels_replanned >= 1
+    assert cache.stats.bracket_hits > 0
+    assert cache.bracket_memo.hits > hits0
+    assert "bracket_hits" in cache.stats.as_dict()
+    full = plan(_two_tower_graph(128), CLUSTER)
+    assert shifted.makespan == pytest.approx(full.makespan, rel=0.05)
+
+
 def test_warm_started_bisection_matches_cold():
     """solve_continuous with a (possibly stale) C̃* hint converges to the
     same optimum as the cold bracket."""

@@ -94,21 +94,174 @@ def _solo_tokens(model, params, req):
 )
 def test_continuous_equivalence(arch):
     """Join/evict/slot-reuse keeps every request's decode bit-identical to
-    decoding it alone."""
+    decoding it alone — under BOTH KV layouts: the PR 3 slab and the paged
+    page pool (slot reuse also recycles pages, so the paged run covers
+    map/unmap/remap of physical pages)."""
     model, params = _model(arch)
     reqs = _requests(model, 5)
-    cfg = ServingConfig(
-        max_slots=2,  # forces queueing, eviction, and slot REUSE
-        cache_len=CACHE_LEN,
-        replan="off",
+    solo = {req.rid: _solo_tokens(model, params, req) for req in reqs}
+    for kv_layout, extra in [
+        ("slab", {"batched_prefill": False}),  # the PR 3 path, untouched
+        ("slab", {"batched_prefill": True}),  # stacked write_slots map-in
+        ("paged", {"page_size": 8}),
+    ]:
+        cfg = ServingConfig(
+            max_slots=2,  # forces queueing, eviction, and slot REUSE
+            cache_len=CACHE_LEN,
+            replan="off",
+            kv_layout=kv_layout,
+            **extra,
+        )
+        sess = ServingSession(cfg, model=model, params=params)
+        sess.run(reqs, max_steps=500)
+        assert len(sess.results) == len(reqs)
+        for req in reqs:
+            got = sess.results[req.rid].tokens
+            assert got == solo[req.rid], (
+                f"{arch}/{kv_layout} rid={req.rid}: {got} != solo "
+                f"{solo[req.rid]}"
+            )
+
+
+def test_chunked_prefill_token_and_logit_equivalence():
+    """DIP-style chunked prefill produces exactly the one-shot tokens (and
+    the logits feeding the first token) when the cache dtype is lossless —
+    chunks re-read past K/V from the page pool, so fp32 pins exactness."""
+    model, params = _model("qwen3-0.6b")
+    rng = jax.random.PRNGKey(3)
+    reqs = []
+    for i, p in enumerate((37, 21, 40)):
+        toks = jax.random.randint(
+            jax.random.fold_in(rng, i), (p,), 0, model.cfg.vocab
+        )
+        reqs.append(
+            Request(rid=i, tokens=toks, max_new_tokens=6, arrival=float(i))
+        )
+
+    def serve(**kw):
+        sess = ServingSession(
+            ServingConfig(
+                max_slots=2,
+                cache_len=64,
+                replan="off",
+                cache_dtype="float32",
+                kv_layout="paged",
+                page_size=8,
+                **kw,
+            ),
+            model=model,
+            params=params,
+        )
+        sess.run(reqs, max_steps=500)
+        return sess, {r: sess.results[r].tokens for r in sorted(sess.results)}
+
+    chunked, got = serve(prefill_chunk=16)
+    _, want = serve()
+    assert got == want
+    assert chunked.batcher.chunk_steps > 0, "long prompts must chunk"
+    assert chunked.batcher.interleaved_chunks > 0, (
+        "chunks must interleave with live decode steps"
     )
-    sess = ServingSession(cfg, model=model, params=params)
-    sess.run(reqs, max_steps=500)
+
+
+def test_page_pool_exhaustion_defers_admission():
+    """A small page pool defers admission instead of corrupting state: no
+    physical page is ever double-mapped, eviction returns pages, and every
+    request still completes with its solo tokens."""
+    model, params = _model("qwen3-0.6b")
+    reqs = _requests(model, 5)
+    solo = {req.rid: _solo_tokens(model, params, req) for req in reqs}
+    # every request needs ceil((p + g - 1)/8) <= 3 pages; 4 usable pages
+    # (+1 trash) cover at most two mid-size requests while THREE slots are
+    # available — admission must throttle on pages, not slots
+    sess = ServingSession(
+        ServingConfig(
+            max_slots=3,
+            cache_len=CACHE_LEN,
+            replan="off",
+            kv_layout="paged",
+            page_size=8,
+            kv_pages=5,
+        ),
+        model=model,
+        params=params,
+    )
+    pool = sess.batcher.pool
+    pending = sorted(reqs, key=lambda r: r.arrival)
+    i = 0
+    while i < len(pending) or sess.busy:
+        while i < len(pending) and pending[i].arrival <= sess.steps:
+            sess.submit(pending[i])
+            i += 1
+        sess.step()
+        # invariant: live mappings never alias (no double-mapped page) and
+        # never touch the trash page
+        mapped = [
+            p for pages in sess.batcher._slot_pages.values() for p in pages
+        ]
+        assert len(mapped) == len(set(mapped)), "double-mapped page"
+        assert pool.TRASH not in mapped
+        assert pool.in_use == len(mapped)
+        if sess.steps > 500:
+            raise AssertionError("exhausted pool deadlocked the session")
+    assert pool.defers > 0, "the small pool must defer at least once"
+    assert pool.in_use == 0, "eviction must return every page"
     assert len(sess.results) == len(reqs)
     for req in reqs:
-        got = sess.results[req.rid].tokens
-        want = _solo_tokens(model, params, req)
-        assert got == want, f"{arch} rid={req.rid}: {got} != solo {want}"
+        assert sess.results[req.rid].tokens == solo[req.rid]
+
+
+def test_serving_config_cache_geometry_validation():
+    """The slab-sizing bug class is rejected at config construction, and
+    per-request caps are enforced at submit."""
+    with pytest.raises(ValueError, match="cache_len"):
+        ServingConfig(cache_len=32, max_prompt_len=24, max_new_tokens=16)
+    ServingConfig(cache_len=39, max_prompt_len=24, max_new_tokens=16)
+    with pytest.raises(ValueError, match="paged"):
+        ServingConfig(kv_layout="slab", prefill_chunk=16)
+    with pytest.raises(ValueError, match="kv_layout"):
+        ServingConfig(kv_layout="Paged")
+    with pytest.raises(ValueError, match="replan_cooldown"):
+        ServingConfig(replan_cooldown=-1)
+    model, params = _model("qwen3-0.6b")
+    sess = ServingSession(
+        ServingConfig(
+            max_slots=2, cache_len=48, replan="off",
+            max_prompt_len=10, max_new_tokens=8,
+        ),
+        model=model,
+        params=params,
+    )
+    toks = jnp.zeros((12,), jnp.int32)
+    with pytest.raises(ValueError, match="admissible max"):
+        sess.submit(Request(rid=0, tokens=toks, max_new_tokens=4))
+    with pytest.raises(ValueError, match="config cap"):
+        sess.submit(
+            Request(rid=1, tokens=jnp.zeros((8,), jnp.int32),
+                    max_new_tokens=9)
+        )
+    assert sess.submit(
+        Request(rid=2, tokens=jnp.zeros((8,), jnp.int32), max_new_tokens=8)
+    )
+    # a reservation no pool state can ever satisfy fails loudly at submit
+    # instead of deferring forever (the one livelock reservation admission
+    # could otherwise reintroduce)
+    tiny = ServingSession(
+        ServingConfig(
+            max_slots=2, cache_len=48, replan="off",
+            kv_layout="paged", page_size=8, kv_pages=3,
+        ),
+        model=model,
+        params=params,
+    )
+    with pytest.raises(ValueError, match="pool capacity"):
+        tiny.submit(
+            Request(rid=3, tokens=jnp.zeros((12,), jnp.int32),
+                    max_new_tokens=8)
+        )
+    assert tiny.submit(
+        Request(rid=4, tokens=jnp.zeros((6,), jnp.int32), max_new_tokens=8)
+    )
 
 
 def test_mix_shift_single_replan_and_cache_hits():
