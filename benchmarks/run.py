@@ -32,6 +32,7 @@ from . import (
     bench_dynamicity,
     bench_end_to_end,
     bench_estimator,
+    bench_fleet,
     bench_kernels,
     bench_optimality,
     bench_planner_cost,
@@ -48,12 +49,13 @@ BENCHES = {
     "estimator": bench_estimator,         # Fig. 4
     "dynamicity": bench_dynamicity,       # Appendix D analogue
     "serving": bench_serving,             # continuous batching + replan
+    "fleet": bench_fleet,                 # multi-tenant scheduling policies
     "kernels": bench_kernels,             # substrate
 }
 
 
 #: quick subset exercised by the CI benchmark smoke job
-SMOKE_BENCHES = ("dynamicity", "planner_cost", "serving")
+SMOKE_BENCHES = ("dynamicity", "planner_cost", "serving", "fleet")
 
 
 def write_bench_json(name: str, rows, seconds: float,

@@ -8,7 +8,11 @@ API `train.py --plan-workload`, `dryrun.py --plan`, and the full
 MT demo in ``wavefront_mt_training.py`` are shells over; DESIGN.md §10) —
 and the serving side: a queue-driven :class:`repro.serving.ServingSession`
 continuously batches requests and replans per mix shift (DESIGN.md §11;
-``launch/serve.py`` is the CLI shell).
+``launch/serve.py`` is the CLI shell) — and the multi-tenant tier above
+both: a :class:`repro.fleet.FleetScheduler` admits several jobs onto ONE
+cluster, carves it into per-job device-block leases, and plans every job
+through one shared PlanCache (DESIGN.md §14; ``launch/fleet.py`` is the
+CLI shell).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -57,6 +61,25 @@ def main() -> None:
           f"chunks; kv high-water {m['kv_page_hw_tokens']} of "
           f"{m['kv_slab_tokens']} slab tokens; {m['replans']} replans "
           f"{m['replan_modes']}")
+
+    # the fleet tier: two duplicate training jobs share one cluster — the
+    # lease arbiter carves disjoint device blocks, both plan against
+    # canonical lease views through ONE cache, so the second job's plan is
+    # a cross-job cache hit (it never reaches the planner)
+    from repro.core.placement import ClusterSpec
+    from repro.fleet import FleetConfig, FleetScheduler, JobSpec
+
+    fleet = FleetScheduler(
+        FleetConfig(cluster=ClusterSpec(n_devices=8, island_size=8,
+                                        mem_bytes=96e9, devices_per_host=2)),
+        [JobSpec(name="jobA", workload="multitask_clip", steps=3),
+         JobSpec(name="jobB", workload="multitask_clip", steps=3)],
+    )
+    fm = fleet.run()
+    print(f"fleet: {fm['n_jobs']} jobs on one cluster, makespan "
+          f"{fm['makespan_s']*1e3:.0f} ms (virtual), "
+          f"{fm['cross_job_hits']} cross-job plan-cache hits, "
+          f"device idle {fm['device_idle_frac']:.0%}")
 
     # a ~100M-class config: qwen3-0.6b reduced in depth/width but real vocab
     base = get_arch("qwen3-0.6b")

@@ -31,13 +31,18 @@ class ClusterSpec:
     Besides the flat device range, the spec carries an explicit host
     topology: devices ``[h*host_size, (h+1)*host_size)`` belong to host
     ``h`` (``devices_per_host`` defaults to the island size — one host per
-    NVLink node / ICI neighborhood).  ``flagged_hosts`` marks hosts the
-    straggler detector evicted; planning and placement run over
-    :meth:`healthy_devices` only, so a flagged host removes *its own*
-    device block — placement routes around the hole instead of renumbering
-    a uniformly shrunken range.  Shrink/restore are value-level
-    (:meth:`shrink` / :meth:`restore` return new frozen specs), so a full
-    recovery compares equal to the original spec.
+    NVLink node / ICI neighborhood).  For heterogeneous or non-contiguous
+    topologies — ragged host sizes, or a fleet *lease* carving a sub-set of
+    another cluster's device blocks — ``host_map`` replaces the uniform
+    blocking with explicit per-host device-id lists (``host_map[h]`` is
+    host ``h``'s devices; ids need not be contiguous or consecutive across
+    hosts).  ``flagged_hosts`` marks hosts the straggler detector evicted;
+    planning and placement run over :meth:`healthy_devices` only, so a
+    flagged host removes *its own* device block — placement routes around
+    the hole instead of renumbering a uniformly shrunken range.
+    Shrink/restore are value-level (:meth:`shrink` / :meth:`restore`
+    return new frozen specs), so a full recovery compares equal to the
+    original spec.
     """
 
     n_devices: int
@@ -47,21 +52,41 @@ class ClusterSpec:
     inter_island_bw: float = 50e9  # bytes/s (IB / DCN-class)
     devices_per_host: int = 0  # 0 → island_size (one host per island)
     flagged_hosts: Tuple[int, ...] = ()  # evicted hosts (straggler path)
+    #: explicit per-host device lists; () → the uniform contiguous blocking
+    host_map: Tuple[Tuple[int, ...], ...] = ()
+
+    def __post_init__(self):
+        if not self.host_map:
+            return
+        hm = tuple(tuple(devs) for devs in self.host_map)
+        object.__setattr__(self, "host_map", hm)
+        flat = [d for devs in hm for d in devs]
+        if len(flat) != len(set(flat)):
+            raise ValueError("host_map assigns a device to more than one host")
+        if any(not devs for devs in hm):
+            raise ValueError("host_map hosts must own at least one device")
+        if self.n_devices == 0:
+            object.__setattr__(self, "n_devices", len(flat))
+        elif self.n_devices != len(flat):
+            raise ValueError(
+                f"n_devices={self.n_devices} != {len(flat)} devices in "
+                f"host_map (pass n_devices=0 to derive it)"
+            )
+
+    def all_devices(self) -> Tuple[int, ...]:
+        """Every device id in this cluster (ascending)."""
+        if self.host_map:
+            return tuple(sorted(d for devs in self.host_map for d in devs))
+        return tuple(range(self.n_devices))
 
     def island_of(self, dev: int) -> int:
         return dev // self.island_size
 
     def islands(self) -> List[List[int]]:
-        n_isl = (self.n_devices + self.island_size - 1) // self.island_size
-        return [
-            list(
-                range(
-                    i * self.island_size,
-                    min((i + 1) * self.island_size, self.n_devices),
-                )
-            )
-            for i in range(n_isl)
-        ]
+        by_isl: Dict[int, List[int]] = {}
+        for d in self.all_devices():
+            by_isl.setdefault(self.island_of(d), []).append(d)
+        return [by_isl[i] for i in sorted(by_isl)]
 
     # ------------------------------------------------------- host topology
     @property
@@ -70,15 +95,24 @@ class ClusterSpec:
 
     @property
     def n_hosts(self) -> int:
+        if self.host_map:
+            return len(self.host_map)
         return (self.n_devices + self.host_size - 1) // self.host_size
 
     def host_of(self, dev: int) -> int:
+        if self.host_map:
+            for h, devs in enumerate(self.host_map):
+                if dev in devs:
+                    return h
+            raise ValueError(f"device {dev} is not in this cluster's host_map")
         return dev // self.host_size
 
     def devices_of(self, host: int) -> Tuple[int, ...]:
         """The device block owned by ``host`` (empty for out-of-range ids)."""
         if not 0 <= host < self.n_hosts:
             return ()
+        if self.host_map:
+            return self.host_map[host]
         return tuple(
             range(
                 host * self.host_size,
@@ -100,7 +134,7 @@ class ClusterSpec:
         hosts = self.flagged_hosts if flagged is None else flagged
         for h in hosts:
             bad.update(self.devices_of(h))
-        return tuple(d for d in range(self.n_devices) if d not in bad)
+        return tuple(d for d in self.all_devices() if d not in bad)
 
     @property
     def n_healthy(self) -> int:

@@ -65,10 +65,18 @@ def level_signature(metas: Sequence[MetaOp]) -> str:
 
 
 def _cluster_key(cluster: ClusterSpec) -> str:
+    # explicit host maps (ragged/non-contiguous topologies, fleet lease
+    # views) key on the full per-host device lists; two leases with
+    # identical canonical maps alias — that is the cross-job dedup
+    hm = (
+        "/map" + ";".join(",".join(map(str, h)) for h in cluster.host_map)
+        if cluster.host_map
+        else f"/host{cluster.host_size}"
+    )
     return (
         f"N{cluster.n_devices}/isl{cluster.island_size}/mem{cluster.mem_bytes:.3e}"
         f"/bw{cluster.intra_island_bw:.3e}:{cluster.inter_island_bw:.3e}"
-        f"/host{cluster.host_size}/flag{','.join(map(str, cluster.flagged_hosts))}"
+        f"{hm}/flag{','.join(map(str, cluster.flagged_hosts))}"
     )
 
 
@@ -128,6 +136,8 @@ class PlanCacheStats:
     # warm-started from the cached C̃* bracket
     bracket_hits: int = 0  # MetaOps whose bi-point bracket (valid-width
     # sweep) was served from the cross-plan BracketMemo
+    cross_job_hits: int = 0  # exact hits on a plan another job/owner built
+    # (fleet-shared caches set PlanCache.owner around each job's turn)
     fallbacks: int = 0  # incremental merge failed validation → full replan
 
     @property
@@ -148,6 +158,7 @@ class PlanCacheStats:
             "levels_replanned": self.levels_replanned,
             "warm_start_hits": self.warm_start_hits,
             "bracket_hits": self.bracket_hits,
+            "cross_job_hits": self.cross_job_hits,
             "fallbacks": self.fallbacks,
             "hit_rate": self.hit_rate,
         }
@@ -171,6 +182,8 @@ class _CacheEntry:
     level_metas: List[List[Tuple[str, int]]] = field(default_factory=list)
     level_allocs: List[LevelAllocation] = field(default_factory=list)
     level_waves: List[List[Wave]] = field(default_factory=list)
+    #: job/owner scope that built the plan (fleet-shared caches only)
+    owner: Optional[str] = None
 
 
 class PlanCache:
@@ -185,6 +198,12 @@ class PlanCache:
         # Cross-plan bi-point bracket memo (timing-independent, so one memo
         # serves every hw/time_fn combination; see BracketMemo).
         self.bracket_memo = BracketMemo(maxsize=curve_memo_max)
+        #: active job scope for a fleet-shared cache: the FleetScheduler
+        #: sets this to the job name around each job's planning turn, so an
+        #: exact hit on a plan some OTHER job built counts as a
+        #: ``cross_job_hits`` (identical archs admitted twice plan once).
+        #: ``None`` (the default) disables the accounting entirely.
+        self.owner: Optional[str] = None
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -206,6 +225,8 @@ class PlanCache:
             return None
         if entry.time_fn is not time_fn:  # id-collision guard
             return None
+        if self.owner is not None and entry.owner not in (None, self.owner):
+            self.stats.cross_job_hits += 1
         self._entries.move_to_end(signature)
         return entry.plan
 
@@ -253,6 +274,7 @@ class PlanCache:
             placement_strategy=placement_strategy,
             profile_powers_of_two=profile_powers_of_two,
             time_fn=time_fn,
+            owner=self.owner,
         )
         mg = plan.meta_graph
         levels = mg.levels()

@@ -1,0 +1,23 @@
+"""Multi-tenant fleet scheduling: many sessions, one cluster, one planner.
+
+See DESIGN.md §14.  :class:`FleetScheduler` admits N jobs (plan-only
+training sessions + real serving sessions) onto one
+:class:`repro.core.placement.ClusterSpec`; a :class:`LeaseArbiter` carves
+the host→device map into disjoint per-job leases whose canonical views
+all plan through ONE shared :class:`repro.core.plancache.PlanCache`.
+"""
+
+from .jobs import JobHandle, JobSpec
+from .lease import Lease, LeaseArbiter, lease_view
+from .scheduler import FleetCallbacks, FleetConfig, FleetScheduler
+
+__all__ = [
+    "FleetCallbacks",
+    "FleetConfig",
+    "FleetScheduler",
+    "JobHandle",
+    "JobSpec",
+    "Lease",
+    "LeaseArbiter",
+    "lease_view",
+]

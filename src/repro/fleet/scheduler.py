@@ -1,0 +1,562 @@
+"""FleetScheduler — many sessions, one cluster, one planner.
+
+The multi-tenant tier above :class:`repro.session.SpindleSession` /
+:class:`repro.serving.session.ServingSession` (DESIGN.md §14): N jobs —
+plan-only wavefront training jobs over named workloads plus real serving
+sessions over arches from ``repro.config`` — are admitted onto ONE
+:class:`repro.core.placement.ClusterSpec`.  A :class:`repro.fleet.lease.
+LeaseArbiter` carves the host→device map into disjoint per-job leases
+(priority-weighted, re-carved on every arrival/completion/eviction), each
+job plans against its lease's *canonical view*, and every job plans
+through ONE shared :class:`repro.core.plancache.PlanCache` — identical
+arch + lease shape admitted twice plans once (``cross_job_hits``).
+
+Time is **virtual**: the fleet advances an event-driven clock where one
+training step costs its current plan's makespan (the estimator's own
+seconds — the same quantity the wavefront benchmarks compare) and one
+serving step costs the planner's current mix makespan.  Serving jobs
+still *execute* real decode steps (admission, paged KV, eviction); train
+jobs are plan-only, exactly like the dynamicity benchmark.  Virtual time
+is what makes the three policies comparable and the bench deterministic:
+
+  * ``fleet``   — priority-weighted space sharing, re-carved on every
+                  membership/topology change (this subsystem),
+  * ``static``  — equal partition fixed up front; shares idle while
+                  their job is absent and are never reclaimed,
+  * ``fifo``    — time slicing: each job gets the WHOLE cluster for
+                  ``slice_steps`` steps, round-robin; per-job step
+                  latency absorbs every other job's slices.
+
+Straggler events route to the FLEET, not to any one job: the cluster
+shrinks, the arbiter strips evicted blocks from every lease immediately
+and re-carves the survivors under the grant/apply deferral rule, and
+each surviving job adopts its shrunken lease at its next step boundary
+(``LeaseChanged`` → one replan through the shared cache).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core.placement import ClusterSpec
+from ..core.plancache import PlanCache
+from ..launch.events import (
+    Event,
+    JobArrived,
+    JobFinished,
+    LeaseChanged,
+    StragglerDetected,
+)
+from ..session import SessionCallbacks, SessionConfig, SpindleSession
+from .jobs import JobHandle, JobSpec
+from .lease import Lease, LeaseArbiter, lease_view
+
+__all__ = ["FleetConfig", "FleetCallbacks", "FleetScheduler"]
+
+POLICIES = ("fleet", "static", "fifo")
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Typed, immutable inputs of one fleet run."""
+
+    cluster: ClusterSpec = ClusterSpec(
+        n_devices=32, island_size=8, mem_bytes=96e9, devices_per_host=4
+    )
+    #: "fleet" (lease arbiter) | "static" (fixed equal partition) |
+    #: "fifo" (whole-cluster time slicing)
+    policy: str = "fleet"
+    planner: str = "spindle"
+    placement_strategy: str = "spindle"
+    #: fifo quantum: steps a job runs before yielding the cluster
+    slice_steps: int = 4
+    #: shared-PlanCache capacity (one cache for the whole fleet)
+    cache_maxsize: int = 64
+    #: serving replan policy forwarded to ServingSession ("mix"/"initial")
+    serve_replan: str = "mix"
+    #: virtual cost of a serving step before the first mix plan exists
+    serve_fallback_dt: float = 1e-3
+    #: safety valve on the cooperative loop (total steps across all jobs)
+    max_ticks: int = 100_000
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown fleet policy {self.policy!r}; "
+                f"choose from {POLICIES}"
+            )
+        if self.slice_steps < 1:
+            raise ValueError("slice_steps must be >= 1")
+
+
+class FleetCallbacks(SessionCallbacks):
+    """Fleet observer protocol — the per-session hooks (``on_plan`` /
+    ``on_replan`` / ...) still fire from each job's inner session (the
+    fleet threads its callback list through every session it builds);
+    these add the fleet-level lifecycle."""
+
+    def on_job_admitted(self, fleet: "FleetScheduler",
+                        handle: JobHandle) -> None:
+        pass
+
+    def on_job_step(self, fleet: "FleetScheduler", handle: JobHandle,
+                    step: int, dt: float) -> None:
+        pass
+
+    def on_job_finished(self, fleet: "FleetScheduler",
+                        handle: JobHandle) -> None:
+        pass
+
+    def on_rebalance(self, fleet: "FleetScheduler", event: Event,
+                     leases: Dict[str, Lease]) -> None:
+        pass
+
+
+class FleetScheduler:
+    """Admit N jobs onto one cluster; plan them all through one cache."""
+
+    def __init__(
+        self,
+        config: Optional[FleetConfig] = None,
+        jobs: Sequence[JobSpec] = (),
+        *,
+        callbacks: Sequence[SessionCallbacks] = (),
+        event_sources: Sequence[Any] = (),
+        cache: Optional[PlanCache] = None,
+        model_cache: Optional[Dict[str, Any]] = None,
+    ):
+        self.config = config or FleetConfig()
+        # NOT `cache or ...`: an empty shared cache is falsy but still the
+        # caller's cache (same aliasing rule as SpindleSession)
+        self.cache = cache if cache is not None else PlanCache(
+            maxsize=self.config.cache_maxsize
+        )
+        self.callbacks: List[SessionCallbacks] = list(callbacks)
+        self.event_sources: List[Any] = list(event_sources)
+        #: live fleet topology (config.cluster minus evicted hosts)
+        self.cluster = self.config.cluster
+        self.arbiter = LeaseArbiter(self.cluster)
+        self.jobs: Dict[str, JobHandle] = {}
+        #: reduced model/params per arch, shared by same-arch serve jobs
+        self._model_cache = model_cache if model_cache is not None else {}
+        #: fleet virtual clock (seconds)
+        self.t = 0.0
+        self.busy_device_seconds = 0.0
+        self.rebalances = 0
+        self._flagged: frozenset = frozenset()
+        self.events: List[Event] = []
+        self.ticks = 0
+        for spec in jobs:
+            self.submit(spec)
+
+    # ------------------------------------------------------------- plumbing
+    def _fire(self, name: str, *args) -> None:
+        for cb in self.callbacks:
+            fn = getattr(cb, name, None)
+            if fn is not None:
+                fn(self, *args)
+
+    @contextlib.contextmanager
+    def _owner(self, name: str):
+        """Scope the shared cache's owner to ``name`` for one planning
+        turn — hits on entries planned by a DIFFERENT job count as
+        ``cross_job_hits`` (the dedup the shared cache exists for)."""
+        prev = self.cache.owner
+        self.cache.owner = name
+        try:
+            yield
+        finally:
+            self.cache.owner = prev
+
+    # ------------------------------------------------------------- registry
+    def submit(self, spec: JobSpec) -> JobHandle:
+        """Register a job (admission happens when its arrival time comes)."""
+        if spec.name in self.jobs:
+            raise ValueError(f"duplicate job name {spec.name!r}")
+        handle = JobHandle(spec=spec)
+        self.jobs[spec.name] = handle
+        return handle
+
+    def _model(self, arch: str) -> Tuple[Any, Any]:
+        if arch not in self._model_cache:
+            import jax
+
+            from ..config import default_sharding, get_arch, reduced
+            from ..models import build_model
+
+            cfg = reduced(get_arch(arch))
+            model = build_model(cfg, default_sharding(cfg))
+            params = model.init(jax.random.PRNGKey(0))
+            self._model_cache[arch] = (model, params)
+        return self._model_cache[arch]
+
+    def _make_requests(self, spec: JobSpec) -> List[Any]:
+        import jax.numpy as jnp
+
+        from ..serving.queue import Request
+
+        toks = (jnp.arange(spec.prompt_len, dtype=jnp.int32) % 13) + 1
+        return [
+            Request(
+                rid=i,
+                tokens=toks,
+                max_new_tokens=spec.gen_len,
+                family=spec.name,
+                arrival=float(i),  # serving-step units: one per step
+            )
+            for i in range(spec.requests)
+        ]
+
+    def _build_session(self, handle: JobHandle) -> None:
+        spec = handle.spec
+        if spec.kind == "train":
+            # plan-only: the cluster here is a placeholder — the first
+            # lease apply adopts the canonical view before any planning
+            handle.session = SpindleSession(
+                SessionConfig(
+                    cluster=self.config.cluster,
+                    planner=self.config.planner,
+                    placement_strategy=self.config.placement_strategy,
+                    workload=spec.workload,
+                    cache_maxsize=self.config.cache_maxsize,
+                ),
+                callbacks=self.callbacks,
+                cache=self.cache,
+            )
+        else:
+            from ..serving.session import ServingConfig, ServingSession
+
+            model, params = self._model(spec.arch)
+            handle.session = ServingSession(
+                ServingConfig(
+                    arch=spec.arch,
+                    max_slots=spec.slots,
+                    cache_len=spec.cache_len,
+                    cluster=self.config.cluster,
+                    planner=self.config.planner,
+                    placement_strategy=self.config.placement_strategy,
+                    replan=self.config.serve_replan,
+                    cache_maxsize=self.config.cache_maxsize,
+                ),
+                model=model,
+                params=params,
+                callbacks=self.callbacks,
+                plan_cache=self.cache,
+            )
+            handle.pending_requests = self._make_requests(spec)
+
+    # ------------------------------------------------------------ lifecycle
+    def _admit_due(self) -> None:
+        """Admit every registered job whose arrival time has come; grants
+        settle over the WHOLE admission burst before anyone plans."""
+        due = [
+            h for h in self.jobs.values()
+            if h.state == "pending" and h.spec.arrival <= self.t
+        ]
+        for h in due:
+            self._build_session(h)
+            h.state = "queued"
+            h.admitted_at = max(self.t, h.spec.arrival)
+            h.clock = h.admitted_at
+            h.last_end = h.admitted_at
+            self.arbiter.admit(h.name, priority=h.spec.priority)
+            self.events.append(
+                JobArrived(name=h.name, job_kind=h.spec.kind)
+            )
+            self._fire("on_job_admitted", h)
+
+    def _apply_lease(self, handle: JobHandle) -> bool:
+        """Adopt the job's granted lease (step boundary).  Returns False
+        when the grant is empty — the job parks as ``queued`` until a
+        promotion re-grants it devices."""
+        name = handle.name
+        grant = self.arbiter.granted[name]
+        if not grant.hosts:
+            self.arbiter.apply(name)  # releases survivors it still held
+            handle.lease = None
+            handle.state = "queued"
+            return False
+        if handle.lease is not None:
+            handle.renewals += 1
+        applied = self.arbiter.apply(name)
+        handle.lease = applied
+        handle.state = "running"
+        sess = handle.session
+        view = applied.view
+        with self._owner(name):
+            if handle.spec.kind == "train":
+                if sess.current_plan is None:
+                    sess.adopt_cluster(view)
+                    sess.plan()
+                else:
+                    # an equal-shaped re-grant (same view, new physical
+                    # blocks) is a signal-level no-op: the plan still
+                    # holds, only the arbiter's mapping moved
+                    sess.signal(LeaseChanged(cluster=view))
+            else:
+                sess.apply_lease(view)
+        return True
+
+    def _sync_queued(self) -> None:
+        for h in self.jobs.values():
+            if h.state == "queued" and self.arbiter.granted[h.name].hosts:
+                self._apply_lease(h)
+
+    def _job_done(self, handle: JobHandle) -> bool:
+        if handle.spec.kind == "train":
+            return handle.steps_done >= handle.spec.steps
+        return not handle.pending_requests and not handle.session.busy
+
+    def _execute_step(self, handle: JobHandle) -> float:
+        """Run one job step; returns its virtual cost in seconds."""
+        sess = handle.session
+        if handle.spec.kind == "serve":
+            while (
+                handle.pending_requests
+                and handle.pending_requests[0].arrival <= sess.steps
+            ):
+                sess.submit(handle.pending_requests.pop(0))
+            with self._owner(handle.name):
+                sess.step()
+            ps = sess.planner_session
+            plan = ps.current_plan if ps is not None else None
+            return (
+                plan.makespan if plan is not None
+                else self.config.serve_fallback_dt
+            )
+        return sess.current_plan.makespan
+
+    def _account_step(self, handle: JobHandle, start: float,
+                      dt: float, n_devices: int) -> None:
+        end = start + dt
+        handle.step_times.append(end - handle.last_end)
+        handle.last_end = end
+        handle.clock = end
+        handle.steps_done += 1
+        if self.rebalances > 0:
+            handle.post_rebalance_steps += 1
+        self.busy_device_seconds += dt * n_devices
+        self.ticks += 1
+        self._fire("on_job_step", handle, handle.steps_done - 1, dt)
+
+    def _finish(self, handle: JobHandle, end: float) -> None:
+        handle.state = "done"
+        handle.done_at = end
+        handle.lease = None
+        self.arbiter.release(handle.name)
+        self.events.append(JobFinished(name=handle.name))
+        self._fire("on_job_finished", handle)
+
+    def _step_job(self, handle: JobHandle) -> None:
+        if self.arbiter.needs_renewal(handle.name):
+            if not self._apply_lease(handle):
+                return  # parked: no devices until a promotion
+        start = max(self.t, handle.clock)
+        dt = self._execute_step(handle)
+        self.t = start + dt if self.config.policy == "fifo" else self.t
+        self._account_step(handle, start, dt, handle.lease.n_devices)
+        if self._job_done(handle):
+            self._finish(handle, start + dt)
+
+    # --------------------------------------------------------------- events
+    def poll(self) -> List[Event]:
+        """Drain the fleet's event sources (one poll per cooperative tick)."""
+        fired: List[Event] = []
+        for src in self.event_sources:
+            fired.extend(src.poll())
+        for ev in fired:
+            self.signal(ev)
+        return fired
+
+    def signal(self, event: Event) -> None:
+        """Route one fleet-level event.
+
+        ``StragglerDetected`` (host-indexed against the FLEET cluster)
+        shrinks the live topology and re-carves every lease — the evicted
+        host leaves the *lease map*; each surviving job adopts its
+        shrunken view at its next step boundary.  Recovery (an empty
+        flagged set) restores the full cluster the same way.
+        """
+        self.events.append(event)
+        if not isinstance(event, StragglerDetected):
+            return
+        flagged = frozenset(
+            h for h in event.hosts
+            if 0 <= h < self.config.cluster.n_hosts
+        )
+        if flagged == self._flagged:
+            return
+        if len(flagged) >= self.config.cluster.n_hosts:
+            return  # never evict the whole fleet
+        self._flagged = flagged
+        self.cluster = self.config.cluster.shrink(tuple(sorted(flagged)))
+        self.arbiter.evict_hosts(self.cluster)
+        self.rebalances += 1
+        for h in self.jobs.values():
+            h.post_rebalance_steps = 0
+            if h.state == "running":
+                applied = self.arbiter.applied.get(h.name)
+                if applied is None or not applied.hosts:
+                    h.lease = None
+                    h.state = "queued"
+                else:
+                    h.lease = applied
+        self._fire("on_rebalance", event, dict(self.arbiter.granted))
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> Dict[str, Any]:
+        """Drive every job to completion; returns the fleet metrics."""
+        if self.config.policy == "fifo":
+            return self._run_fifo()
+        if self.config.policy == "static" and self.arbiter.fixed is None:
+            self._carve_static()
+        while self.ticks < self.config.max_ticks:
+            self._admit_due()
+            self._sync_queued()
+            runnable = [
+                h for h in self.jobs.values() if h.state == "running"
+            ]
+            if not runnable:
+                pending = [
+                    h.spec.arrival for h in self.jobs.values()
+                    if h.state == "pending"
+                ]
+                if pending:
+                    self.t = max(self.t, min(pending))
+                    continue
+                queued = [
+                    h for h in self.jobs.values() if h.state == "queued"
+                ]
+                if queued:
+                    # nothing running holds devices, so a re-carve must be
+                    # able to grant the queued jobs — if not, the carve
+                    # itself is infeasible (e.g. a static share of zero)
+                    self.arbiter.recarve()
+                    self._sync_queued()
+                    if not any(
+                        h.state == "running" for h in self.jobs.values()
+                    ):
+                        raise RuntimeError(
+                            "fleet stalled: queued jobs "
+                            f"{[h.name for h in queued]} hold no grantable "
+                            "devices (static share empty, or more jobs "
+                            "than hosts)"
+                        )
+                    continue
+                break  # everything done
+            h = min(runnable, key=lambda h: (h.clock, h.spec.name))
+            self.t = max(self.t, h.clock)
+            self._step_job(h)
+            self.poll()
+        return self.metrics()
+
+    def _carve_static(self) -> None:
+        """Equal fixed partition over ALL registered jobs, carved up front
+        (the static baseline: shares are reserved from t=0 and never move,
+        idling while their job is pending or finished)."""
+        names = list(self.jobs)
+        hosts = list(range(self.config.cluster.n_hosts))
+        if not names:
+            return
+        base, rem = divmod(len(hosts), len(names))
+        fixed: Dict[str, Tuple[int, ...]] = {}
+        i = 0
+        for k, name in enumerate(names):
+            n = base + (1 if k < rem else 0)
+            fixed[name] = tuple(hosts[i:i + n])
+            i += n
+        self.arbiter.fixed = fixed
+
+    def _run_fifo(self) -> Dict[str, Any]:
+        """Whole-cluster time slicing, round-robin in arrival order."""
+        order = sorted(
+            self.jobs.values(),
+            key=lambda h: (h.spec.arrival, list(self.jobs).index(h.name)),
+        )
+        pending = deque(order)
+        ready: deque = deque()
+        fifo_view: Optional[ClusterSpec] = None
+        while (pending or ready) and self.ticks < self.config.max_ticks:
+            if not ready and pending:
+                self.t = max(self.t, pending[0].spec.arrival)
+            while pending and pending[0].spec.arrival <= self.t:
+                h = pending.popleft()
+                self._build_session(h)
+                h.state = "queued"
+                h.admitted_at = max(self.t, h.spec.arrival)
+                h.clock = h.admitted_at
+                h.last_end = h.admitted_at
+                self.events.append(
+                    JobArrived(name=h.name, job_kind=h.spec.kind)
+                )
+                self._fire("on_job_admitted", h)
+                ready.append(h)
+            h = ready.popleft()
+            # swap in: the whole (healthy) cluster as one canonical view
+            healthy = [
+                hh for hh in range(self.cluster.n_hosts)
+                if hh not in self.cluster.flagged_hosts
+            ]
+            view = lease_view(self.cluster, healthy)
+            if view != fifo_view:
+                fifo_view = view
+            h.state = "running"
+            sess = h.session
+            with self._owner(h.name):
+                if h.spec.kind == "train":
+                    if sess.current_plan is None:
+                        sess.adopt_cluster(view)
+                        sess.plan()
+                    else:
+                        sess.signal(LeaseChanged(cluster=view))
+                else:
+                    sess.apply_lease(view)
+            for _ in range(self.config.slice_steps):
+                if self._job_done(h):
+                    break
+                start = self.t
+                dt = self._execute_step(h)
+                self.t = start + dt
+                self._account_step(h, start, dt, view.n_devices)
+                self.poll()
+            if self._job_done(h):
+                self._finish(h, self.t)
+            else:
+                h.state = "queued"
+                ready.append(h)
+        return self.metrics()
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, Any]:
+        import numpy as np
+
+        rows = [h.summary() for h in self.jobs.values()]
+        done_at = [
+            h.done_at for h in self.jobs.values() if h.done_at is not None
+        ]
+        makespan = max(done_at) if done_at else self.t
+        total_device_seconds = self.config.cluster.n_devices * makespan
+        p99s = [r["p99_step_s"] for r in rows if r["steps_done"] > 0]
+        cache = self.cache.stats.as_dict()
+        return {
+            "policy": self.config.policy,
+            "jobs": rows,
+            "n_jobs": len(rows),
+            "ticks": self.ticks,
+            "makespan_s": makespan,
+            "worst_p99_step_s": max(p99s) if p99s else 0.0,
+            "mean_p99_step_s": float(np.mean(p99s)) if p99s else 0.0,
+            "busy_device_seconds": self.busy_device_seconds,
+            "device_idle_frac": (
+                max(0.0, 1.0 - self.busy_device_seconds
+                    / total_device_seconds)
+                if total_device_seconds > 0 else 0.0
+            ),
+            "rebalances": self.rebalances,
+            "lease": self.arbiter.stats(),
+            "cross_job_hits": cache["cross_job_hits"],
+            "cache": cache,
+        }

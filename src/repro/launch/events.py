@@ -88,12 +88,46 @@ class RequestCompleted(Event):
     kind = "request_completed"
 
 
+@dataclass(frozen=True)
+class LeaseChanged(Event):
+    """An externally-arbitrated device lease replaced the session's cluster.
+
+    Carries the new sub-cluster view (a :class:`repro.core.placement.
+    ClusterSpec`, typically a canonical fleet-lease view with an explicit
+    ``host_map``).  The session replans over it exactly like a topology
+    change — the lease arbiter, not the session, owns which physical
+    devices back the view."""
+
+    cluster: Any  # repro.core.placement.ClusterSpec (kept Any: no dep cycle)
+    kind = "lease_changed"
+
+
+@dataclass(frozen=True)
+class JobArrived(Event):
+    """A job joined the fleet's compound workload (multi-tenant scheduler)."""
+
+    name: str
+    job_kind: str = "train"
+    kind = "job_arrived"
+
+
+@dataclass(frozen=True)
+class JobFinished(Event):
+    """A fleet job drained its workload and released its device lease."""
+
+    name: str
+    kind = "job_finished"
+
+
 EVENT_KINDS = (
     "task_arrived",
     "task_completed",
     "straggler",
     "request_arrived",
     "request_completed",
+    "lease_changed",
+    "job_arrived",
+    "job_finished",
 )
 
 

@@ -1,0 +1,217 @@
+"""Fleet driver: N jobs, one cluster, one planner (DESIGN.md §14).
+
+A thin shell over :class:`repro.fleet.FleetScheduler`: registers a mix of
+plan-only training jobs and a real serving job, admits them onto one
+``ClusterSpec`` under the chosen policy, and drives the cooperative loop
+to completion, printing one line per fleet lifecycle event.
+
+    PYTHONPATH=src python -m repro.launch.fleet --policy fleet
+    PYTHONPATH=src python -m repro.launch.fleet --smoke --straggler-at 6
+
+``--smoke`` is the CI contract (the ``fleet-smoke`` job): 2 duplicate
+training jobs + 1 serving job with a scripted straggler at step N.  It
+exits non-zero unless (a) every job drains, (b) at least one fleet
+rebalance fired, (c) every job still live at the rebalance made at least
+one step AFTER it (progress post-eviction), and (d) the duplicate-arch
+pair deduplicated through the shared PlanCache (``cross_job_hits > 0``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Set
+
+from ..core.placement import ClusterSpec
+from ..fleet import FleetCallbacks, FleetConfig, FleetScheduler, JobSpec
+from ..launch.events import ScriptedEventSource, StragglerDetected
+
+
+class FleetPrinter(FleetCallbacks):
+    """One line per fleet lifecycle event; remembers which jobs were still
+    live at each rebalance (the smoke contract's survivor set)."""
+
+    def __init__(self, verbose: bool = True):
+        self.verbose = verbose
+        self.survivors_at_rebalance: List[Set[str]] = []
+
+    def on_job_admitted(self, fleet, handle):
+        if self.verbose:
+            lease = fleet.arbiter.granted[handle.name]
+            print(
+                f"[fleet] t={fleet.t:.3f} admitted {handle.name} "
+                f"({handle.spec.kind}, prio {handle.spec.priority}): "
+                f"granted hosts {lease.hosts}"
+            )
+
+    def on_rebalance(self, fleet, event, leases):
+        live = {
+            h.name for h in fleet.jobs.values()
+            if h.state in ("running", "queued")
+        }
+        self.survivors_at_rebalance.append(live)
+        if self.verbose:
+            carve = {j: lease.hosts for j, lease in leases.items()}
+            print(
+                f"[fleet] t={fleet.t:.3f} rebalance #{fleet.rebalances}: "
+                f"evicted hosts {tuple(event.hosts)}; re-carved leases "
+                f"{carve}"
+            )
+
+    def on_job_finished(self, fleet, handle):
+        if self.verbose:
+            print(
+                f"[fleet] t={fleet.t:.3f} finished {handle.name} "
+                f"after {handle.steps_done} steps "
+                f"(p99 step {handle.summary()['p99_step_s'] * 1e3:.1f} ms)"
+            )
+
+
+def default_jobs(steps: int = 8, requests: int = 3) -> List[JobSpec]:
+    """The heterogeneous reference mix (also the bench_fleet scenario):
+    two duplicate CLIP jobs (the cross-job dedup pair), a priority-2
+    OFASys job, a late-arriving priority-3 validation job, and a real
+    serving job over a ``configs/`` arch."""
+    return [
+        JobSpec(name="trainA", kind="train", workload="multitask_clip",
+                steps=steps),
+        JobSpec(name="trainB", kind="train", workload="multitask_clip",
+                steps=steps),
+        JobSpec(name="trainC", kind="train", workload="ofasys",
+                steps=max(2, steps - 2), priority=2),
+        JobSpec(name="trainD", kind="train", workload="qwen_val",
+                steps=max(2, steps // 2), priority=3, arrival=0.3),
+        JobSpec(name="serve0", kind="serve", arch="qwen3-0.6b",
+                requests=requests, prompt_len=8, gen_len=4, slots=2,
+                cache_len=32),
+    ]
+
+
+def smoke_jobs(steps: int = 8, requests: int = 3) -> List[JobSpec]:
+    """The CI smoke mix: 2 duplicate train jobs + 1 serving job."""
+    return [
+        JobSpec(name="trainA", kind="train", workload="multitask_clip",
+                steps=steps),
+        JobSpec(name="trainB", kind="train", workload="multitask_clip",
+                steps=steps),
+        JobSpec(name="serve0", kind="serve", arch="qwen3-0.6b",
+                requests=requests, prompt_len=8, gen_len=4, slots=2,
+                cache_len=32),
+    ]
+
+
+def run_fleet(
+    policy: str = "fleet",
+    *,
+    smoke: bool = False,
+    steps: int = 8,
+    requests: int = 3,
+    n_hosts: int = 8,
+    devices_per_host: int = 4,
+    slice_steps: int = 4,
+    straggler_at: int = -1,
+    verbose: bool = True,
+) -> Dict:
+    """Build the mix, run it under ``policy``, return metrics + checks."""
+    cluster = ClusterSpec(
+        n_devices=n_hosts * devices_per_host,
+        island_size=8,
+        mem_bytes=96e9,
+        devices_per_host=devices_per_host,
+    )
+    jobs = (smoke_jobs if smoke else default_jobs)(steps, requests)
+    sources = []
+    if straggler_at >= 0:
+        # flag the last host after the Nth cooperative tick
+        sources.append(
+            ScriptedEventSource(
+                [StragglerDetected((n_hosts - 1,))], fire_at=[straggler_at]
+            )
+        )
+    printer = FleetPrinter(verbose=verbose)
+    fleet = FleetScheduler(
+        FleetConfig(cluster=cluster, policy=policy,
+                    slice_steps=slice_steps),
+        jobs,
+        callbacks=[printer],
+        event_sources=sources,
+    )
+    metrics = fleet.run()
+    fleet.arbiter.check()  # lease invariants must hold at exit
+    if verbose:
+        print(
+            f"[fleet] policy={policy}: {metrics['n_jobs']} jobs, "
+            f"{metrics['ticks']} steps, makespan {metrics['makespan_s']:.3f} s"
+            f" (virtual), device idle {metrics['device_idle_frac']:.1%}, "
+            f"{metrics['rebalances']} rebalances, "
+            f"plan cache hit rate {metrics['cache']['hit_rate']:.2f} "
+            f"({metrics['cross_job_hits']} cross-job hits)"
+        )
+    metrics["_survivors_at_rebalance"] = printer.survivors_at_rebalance
+    metrics["_handles"] = fleet.jobs
+    return metrics
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--policy", default="fleet",
+                    choices=("fleet", "static", "fifo"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI contract: 2 train + 1 serving job, scripted "
+                         "straggler, hard checks on the outcome")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="training steps per train job")
+    ap.add_argument("--requests", type=int, default=3,
+                    help="request-trace length of the serving job")
+    ap.add_argument("--hosts", type=int, default=8)
+    ap.add_argument("--devices-per-host", type=int, default=4)
+    ap.add_argument("--slice-steps", type=int, default=4,
+                    help="fifo policy: steps per whole-cluster slice")
+    ap.add_argument("--straggler-at", type=int, default=-1,
+                    help="inject a straggler after the Nth fleet step "
+                         "(-1 = none; --smoke defaults to 6)")
+    args = ap.parse_args()
+
+    straggler_at = args.straggler_at
+    if args.smoke and straggler_at < 0:
+        straggler_at = 6
+    m = run_fleet(
+        args.policy,
+        smoke=args.smoke,
+        steps=args.steps,
+        requests=args.requests,
+        n_hosts=args.hosts,
+        devices_per_host=args.devices_per_host,
+        slice_steps=args.slice_steps,
+        straggler_at=straggler_at,
+    )
+
+    failures = []
+    not_done = [r["name"] for r in m["jobs"] if r["state"] != "done"]
+    if not_done:
+        failures.append(f"jobs did not drain: {not_done}")
+    if args.smoke:
+        if m["rebalances"] < 1:
+            failures.append("no fleet rebalance fired")
+        handles = m["_handles"]
+        for live in m["_survivors_at_rebalance"]:
+            stalled = [
+                n for n in live if handles[n].post_rebalance_steps < 1
+            ]
+            if stalled:
+                failures.append(
+                    f"no post-rebalance step for surviving jobs {stalled}"
+                )
+        if m["cross_job_hits"] < 1:
+            failures.append(
+                "duplicate-arch jobs did not dedup through the shared "
+                "PlanCache (cross_job_hits == 0)"
+            )
+    if failures:
+        for f in failures:
+            print(f"[fleet] FAILED: {f}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

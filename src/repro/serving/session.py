@@ -50,7 +50,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.placement import ClusterSpec
-from ..launch.events import Event, RequestArrived, RequestQueueSource
+from ..launch.events import (
+    Event,
+    LeaseChanged,
+    RequestArrived,
+    RequestQueueSource,
+)
 from ..session import ReplanRecord, SessionConfig, SpindleSession
 from .batcher import ContinuousBatcher, SlotState
 from .mix import DEFAULT_PROMPT_BUCKETS, MixTracker, tower_from_arch
@@ -226,7 +231,10 @@ class ServingSession:
                     planner=cfg.planner,
                     placement_strategy=cfg.placement_strategy,
                     cache_maxsize=cfg.cache_maxsize,
-                    replan_on=("request_arrived", "request_completed"),
+                    replan_on=(
+                        "request_arrived", "request_completed",
+                        "lease_changed",
+                    ),
                 ),
                 graph_factory=lambda tasks: serving_mix_workload(
                     self.mix.snapshot().counts,
@@ -422,6 +430,25 @@ class ServingSession:
             if self.current_plan is not None:
                 m["planned_makespan_ms"] = self.current_plan.makespan * 1e3
         return m
+
+    def apply_lease(self, cluster: ClusterSpec) -> Optional[ReplanRecord]:
+        """Inject an externally-arbitrated sub-cluster (a fleet lease).
+
+        With live traffic the inner planner session replans the current
+        mix over the new view immediately (one ``LeaseChanged`` turn
+        through the shared PlanCache); with nothing to plan — no mix yet,
+        or a drained queue — the lease is adopted silently and the next
+        mix shift plans over it.  No-op under ``replan="off"``.
+        """
+        ps = self.planner_session
+        if ps is None:
+            return None
+        if not self.mix.snapshot().counts:
+            ps.adopt_cluster(cluster)
+            self._last_key = None  # replan as soon as traffic returns
+            return None
+        ps.signal(LeaseChanged(cluster=cluster))
+        return ps.replans[-1] if ps.replans else None
 
     # ---------------------------------------------------------------- replan
     def _maybe_replan(self) -> Optional[ReplanRecord]:

@@ -57,6 +57,7 @@ from .core.plan import ExecutionPlan, PlanStep
 from .core.plancache import PlanCache
 from .launch.events import (
     Event,
+    LeaseChanged,
     StragglerDetected,
     TaskArrived,
     TaskCompleted,
@@ -97,7 +98,7 @@ class SessionConfig:
     curve_memo_max: int = 8192
     #: event kinds that trigger a replan (subset of launch.events.EVENT_KINDS)
     replan_on: Tuple[str, ...] = (
-        "task_arrived", "task_completed", "straggler"
+        "task_arrived", "task_completed", "straggler", "lease_changed"
     )
     #: evict flagged hosts before a straggler replan: the flagged hosts'
     #: OWN device blocks (``ClusterSpec.devices_of``) leave the schedulable
@@ -233,6 +234,11 @@ class SpindleSession:
         #: live cluster — flagged hosts' device blocks leave the pool on
         #: straggler events (straggler_shrink), restored on recovery
         self.cluster = self.config.cluster
+        #: externally-arbitrated lease view (fleet scheduler): when set, it
+        #: replaces ``config.cluster`` as the base the live cluster derives
+        #: from — straggler shrinks then apply to the lease's own host
+        #: indices (view-local), and the arbiter owns the physical mapping
+        self._lease: Optional[ClusterSpec] = None
         #: live mesh — rebuilt over the healthy-host set by elastic restores
         self.mesh = self.config.mesh
         self._straggler_hosts: frozenset = frozenset()
@@ -485,6 +491,20 @@ class SpindleSession:
         """
         return self.signal_all((event,))
 
+    def adopt_cluster(self, cluster: ClusterSpec) -> None:
+        """Adopt an externally-arbitrated cluster view WITHOUT replanning.
+
+        The silent counterpart of signalling :class:`LeaseChanged`: the
+        lease becomes the session's base topology immediately, but no
+        planner turn runs — the next ``plan()``/``signal`` plans over it.
+        For sessions with nothing plannable right now (a drained serving
+        mix, a job queued behind admission) where a replan turn would have
+        no workload to plan.
+        """
+        self._lease = cluster
+        base = cluster if cluster is not None else self.config.cluster
+        self.cluster = base.shrink(self._straggler_hosts)
+
     def signal_all(self, events: Sequence[Event]) -> Optional[ExecutionPlan]:
         """Handle a burst of events with ONE coalesced replan.
 
@@ -501,6 +521,7 @@ class SpindleSession:
         effective: List[Event] = []
         tasks = self.tasks
         flagged = self._straggler_hosts
+        lease = self._lease
         for event in events:
             if event.kind not in self.config.replan_on:
                 continue
@@ -514,9 +535,18 @@ class SpindleSession:
                     continue  # untracked membership / absent task: no-op
                 tasks = tuple(t for t in tasks if t != event.task)
                 model_shift = True
+            elif isinstance(event, LeaseChanged):
+                base = lease if lease is not None else self.config.cluster
+                if event.cluster == base:
+                    continue  # re-granted the same view: no-op
+                lease = event.cluster
             elif isinstance(event, StragglerDetected):
-                # the event carries the FULL currently-flagged set
-                cluster0 = self.config.cluster
+                # the event carries the FULL currently-flagged set,
+                # host-indexed against the session's base topology (the
+                # lease view when one is injected)
+                cluster0 = (
+                    lease if lease is not None else self.config.cluster
+                )
                 new_flagged = frozenset(
                     h for h in event.hosts if 0 <= h < cluster0.n_hosts
                 )
@@ -559,16 +589,20 @@ class SpindleSession:
         # only after the whole turn succeeded.
         rollback = (
             self.tasks, self.cluster, self.mesh, self._straggler_hosts,
-            self.model, self.batches, self.params, self.opt_state,
+            self._lease, self.model, self.batches, self.params,
+            self.opt_state,
         )
         self.tasks = tasks
         cluster_changed = False
-        if flagged != self._straggler_hosts:
+        if flagged != self._straggler_hosts or lease is not self._lease:
             self._straggler_hosts = flagged
-            # topology-aware eviction: the flagged hosts' OWN device blocks
-            # leave the pool (shrink(()) ≡ full recovery — the spec then
-            # compares equal to the configured cluster)
-            self.cluster = self.config.cluster.shrink(flagged)
+            self._lease = lease
+            # topology-aware eviction over the session's base topology (an
+            # injected lease view, else the configured cluster): the
+            # flagged hosts' OWN device blocks leave the pool (shrink(())
+            # ≡ full recovery — the spec then compares equal to the base)
+            base = lease if lease is not None else self.config.cluster
+            self.cluster = base.shrink(flagged)
             cluster_changed = True
         event = effective[-1]  # the record's headline event
 
@@ -634,7 +668,8 @@ class SpindleSession:
                 )
         except BaseException:
             (self.tasks, self.cluster, self.mesh, self._straggler_hosts,
-             self.model, self.batches, self.params, self.opt_state) = rollback
+             self._lease, self.model, self.batches, self.params,
+             self.opt_state) = rollback
             raise
         if p is not self.current_plan:
             self.current_plan = p

@@ -1,0 +1,322 @@
+"""Fleet scheduler tests: host maps, canonical lease views, the shared
+PlanCache's cross-job dedup, lease-arbiter invariants (including the
+deferred-renewal double-assignment regression), and a small end-to-end
+fleet run with a scripted straggler."""
+
+import pytest
+
+from repro.core.placement import ClusterSpec
+from repro.core.plancache import PlanCache, _cluster_key, workload_signature
+from repro.core.workloads import multitask_clip
+from repro.fleet import (
+    FleetConfig,
+    FleetScheduler,
+    JobSpec,
+    LeaseArbiter,
+    lease_view,
+)
+from repro.launch.events import ScriptedEventSource, StragglerDetected
+
+CLUSTER = ClusterSpec(
+    n_devices=16, island_size=8, mem_bytes=96e9, devices_per_host=2
+)
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec host_map (non-contiguous host→device maps)
+# ---------------------------------------------------------------------------
+
+
+class TestHostMap:
+    def test_noncontiguous_map(self):
+        c = ClusterSpec(
+            n_devices=0, island_size=8, host_map=((0, 1), (6, 7), (2, 3))
+        )
+        assert c.n_devices == 6
+        assert c.n_hosts == 3
+        assert c.all_devices() == (0, 1, 2, 3, 6, 7)
+        assert c.devices_of(1) == (6, 7)
+        assert c.host_of(7) == 1
+        assert c.host_of(2) == 2
+
+    def test_unknown_device_rejected(self):
+        c = ClusterSpec(n_devices=0, host_map=((0, 1), (4, 5)))
+        with pytest.raises(ValueError, match="not in this cluster"):
+            c.host_of(2)
+
+    def test_duplicate_and_empty_hosts_rejected(self):
+        with pytest.raises(ValueError, match="more than one host"):
+            ClusterSpec(n_devices=0, host_map=((0, 1), (1, 2)))
+        with pytest.raises(ValueError, match="at least one device"):
+            ClusterSpec(n_devices=0, host_map=((0, 1), ()))
+
+    def test_n_devices_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="n_devices"):
+            ClusterSpec(n_devices=5, host_map=((0, 1), (2, 3)))
+
+    def test_shrink_excludes_mapped_block(self):
+        c = ClusterSpec(n_devices=0, host_map=((0, 1), (6, 7), (2, 3)))
+        s = c.shrink((1,))
+        assert s.healthy_devices() == (0, 1, 2, 3)
+        assert s.n_healthy == 4
+        assert s.restore() == c
+
+    def test_cluster_key_distinguishes_maps(self):
+        uniform = ClusterSpec(n_devices=4, devices_per_host=2)
+        mapped = ClusterSpec(n_devices=0, host_map=((0, 1), (2, 3)))
+        ragged = ClusterSpec(n_devices=0, host_map=((0,), (1, 2, 3)))
+        keys = {_cluster_key(c) for c in (uniform, mapped, ragged)}
+        assert len(keys) == 3
+
+
+# ---------------------------------------------------------------------------
+# Canonical lease views
+# ---------------------------------------------------------------------------
+
+
+class TestLeaseView:
+    def test_equal_shapes_alias(self):
+        # different physical blocks, same shape → identical view (the
+        # cross-job plan-dedup key)
+        v1 = lease_view(CLUSTER, (0, 1))
+        v2 = lease_view(CLUSTER, (5, 3))
+        assert v1 == v2
+        assert v1.n_devices == 4
+        assert v1.host_map == ((0, 1), (2, 3))
+
+    def test_signature_aliases_across_equal_views(self):
+        g = multitask_clip(n_tasks=2, batch_per_task=8)
+        v1 = lease_view(CLUSTER, (0, 1))
+        v2 = lease_view(CLUSTER, (6, 2))
+        assert workload_signature(g, v1) == workload_signature(g, v2)
+
+    def test_different_shapes_distinct(self):
+        g = multitask_clip(n_tasks=2, batch_per_task=8)
+        v1 = lease_view(CLUSTER, (0, 1))
+        v3 = lease_view(CLUSTER, (0, 1, 2))
+        assert workload_signature(g, v1) != workload_signature(g, v3)
+
+
+# ---------------------------------------------------------------------------
+# Shared PlanCache: cross-job dedup
+# ---------------------------------------------------------------------------
+
+
+class TestCrossJobDedup:
+    def test_same_arch_twice_plans_once(self):
+        cache = PlanCache(maxsize=8)
+        g = multitask_clip(n_tasks=2, batch_per_task=8)
+        view_a = lease_view(CLUSTER, (0, 1))
+        view_b = lease_view(CLUSTER, (7, 4))  # same shape, other blocks
+
+        cache.owner = "jobA"
+        p1 = cache.get_or_plan(g, view_a, planner="spindle")
+        cache.owner = "jobB"
+        p2 = cache.get_or_plan(g, view_b, planner="spindle")
+
+        assert p2 is p1  # one plan, shared
+        assert cache.stats.misses == 1
+        assert cache.stats.hits == 1
+        assert cache.stats.cross_job_hits == 1
+
+    def test_own_rehit_is_not_cross_job(self):
+        cache = PlanCache(maxsize=8)
+        g = multitask_clip(n_tasks=2, batch_per_task=8)
+        view = lease_view(CLUSTER, (0, 1))
+        cache.owner = "jobA"
+        cache.get_or_plan(g, view, planner="spindle")
+        cache.get_or_plan(g, view, planner="spindle")
+        assert cache.stats.hits == 1
+        assert cache.stats.cross_job_hits == 0
+
+    def test_different_batch_sizes_distinct_signatures(self):
+        view = lease_view(CLUSTER, (0, 1))
+        g8 = multitask_clip(n_tasks=2, batch_per_task=8)
+        g16 = multitask_clip(n_tasks=2, batch_per_task=16)
+        assert workload_signature(g8, view) != workload_signature(g16, view)
+        cache = PlanCache(maxsize=8)
+        cache.owner = "jobA"
+        cache.get_or_plan(g8, view, planner="spindle")
+        cache.owner = "jobB"
+        cache.get_or_plan(g16, view, planner="spindle")
+        assert cache.stats.cross_job_hits == 0  # no false sharing
+        assert cache.stats.hits == 0
+
+
+# ---------------------------------------------------------------------------
+# Lease arbiter invariants
+# ---------------------------------------------------------------------------
+
+
+def _assert_disjoint_and_healthy(arb: LeaseArbiter):
+    arb.check()  # the arbiter's own invariant pass
+    healthy = set(arb.cluster.healthy_devices())
+    for leases in (arb.granted, arb.applied):
+        seen = set()
+        for lease in leases.values():
+            devs = set(lease.devices)
+            assert not devs & seen, "leases overlap"
+            assert devs <= healthy, "lease holds evicted devices"
+            seen |= devs
+
+
+class TestLeaseArbiter:
+    def test_carve_disjoint_and_weighted(self):
+        arb = LeaseArbiter(ClusterSpec(n_devices=16, devices_per_host=2))
+        arb.admit("a", priority=1)
+        arb.admit("b", priority=2)
+        arb.admit("c", priority=1)
+        _assert_disjoint_and_healthy(arb)
+        hosts = {j: len(arb.granted[j].hosts) for j in ("a", "b", "c")}
+        assert hosts["b"] == 4  # weight 2 of total 4 over 8 hosts
+        assert hosts["a"] == hosts["c"] == 2
+        # all hosts carved: union of grants covers the cluster
+        covered = set()
+        for lease in arb.granted.values():
+            covered.update(lease.hosts)
+        assert covered == set(range(8))
+
+    def test_release_returns_blocks(self):
+        arb = LeaseArbiter(ClusterSpec(n_devices=8, devices_per_host=2))
+        arb.admit("a")
+        arb.admit("b")
+        for j in ("a", "b"):
+            arb.apply(j)
+        arb.release("a")
+        arb.recarve()
+        _assert_disjoint_and_healthy(arb)
+        assert len(arb.granted["b"].hosts) == 4  # b reclaims everything
+
+    def test_eviction_strips_applied_immediately(self):
+        cluster = ClusterSpec(n_devices=8, devices_per_host=2)
+        arb = LeaseArbiter(cluster)
+        arb.admit("a")
+        arb.apply("a")
+        assert arb.applied["a"].hosts == (0, 1, 2, 3)
+        arb.evict_hosts(cluster.shrink((1,)))
+        _assert_disjoint_and_healthy(arb)
+        assert 1 not in arb.applied["a"].hosts
+        assert 1 not in arb.granted["a"].hosts
+
+    def test_deferred_renewal_no_double_assignment(self):
+        """The satellite regression: an eviction-driven re-carve wants to
+        hand job A a block job B still runs on — A's expansion must DEFER
+        until B applies its shrunken lease, never overlap it."""
+        cluster = ClusterSpec(n_devices=8, devices_per_host=2)
+        arb = LeaseArbiter(cluster)
+        arb.admit("a")
+        arb.admit("b")  # grants settle before anyone applies
+        arb.apply("a")  # a runs on (0, 1)
+        arb.apply("b")  # b runs on (2, 3)
+        assert arb.applied["a"].hosts == (0, 1)
+        assert arb.applied["b"].hosts == (2, 3)
+
+        # evict host 1: a's share shrinks to one host; the re-carve's
+        # ideal target gives a a replacement block — but both free-able
+        # hosts are still APPLIED to b, so a's expansion defers
+        arb.evict_hosts(cluster.shrink((1,)))
+        _assert_disjoint_and_healthy(arb)
+        assert arb.deferred_renewals > 0
+        assert set(arb.granted["a"].hosts).isdisjoint(
+            arb.applied["b"].hosts
+        )
+        before = set(arb.granted["a"].hosts)
+
+        # b reaches its step boundary and applies its (possibly shrunken)
+        # grant — the promotion pass may now expand a, still disjointly
+        arb.apply("b")
+        _assert_disjoint_and_healthy(arb)
+        arb.apply("a")
+        _assert_disjoint_and_healthy(arb)
+        after = set(arb.granted["a"].hosts) | set(arb.granted["b"].hosts)
+        assert after == {0, 2, 3}  # survivors fully re-carved, no overlap
+        assert set(arb.granted["a"].hosts) >= before
+
+    def test_more_jobs_than_hosts_queue_empty(self):
+        arb = LeaseArbiter(ClusterSpec(n_devices=4, devices_per_host=2))
+        arb.admit("a")
+        arb.admit("b")
+        arb.admit("c")
+        _assert_disjoint_and_healthy(arb)
+        granted = [j for j in ("a", "b", "c") if arb.granted[j].hosts]
+        assert len(granted) == 2  # third job parks with an empty lease
+
+
+# ---------------------------------------------------------------------------
+# End-to-end fleet run (2 train + 1 serve, scripted straggler)
+# ---------------------------------------------------------------------------
+
+
+class TestFleetEndToEnd:
+    @pytest.fixture(scope="class")
+    def fleet_result(self):
+        cluster = ClusterSpec(
+            n_devices=16, island_size=8, mem_bytes=96e9, devices_per_host=4
+        )
+        jobs = [
+            JobSpec(name="trainA", kind="train", workload="multitask_clip",
+                    steps=5),
+            JobSpec(name="trainB", kind="train", workload="multitask_clip",
+                    steps=5),
+            JobSpec(name="serve0", kind="serve", arch="qwen3-0.6b",
+                    requests=2, prompt_len=8, gen_len=4, slots=2,
+                    cache_len=32),
+        ]
+        src = ScriptedEventSource([StragglerDetected((3,))], fire_at=[4])
+        fleet = FleetScheduler(
+            FleetConfig(cluster=cluster, policy="fleet"),
+            jobs,
+            event_sources=[src],
+        )
+        return fleet, fleet.run()
+
+    def test_all_jobs_drain(self, fleet_result):
+        fleet, m = fleet_result
+        assert all(r["state"] == "done" for r in m["jobs"])
+        assert m["makespan_s"] > 0
+
+    def test_rebalance_fired_and_jobs_progressed(self, fleet_result):
+        fleet, m = fleet_result
+        assert m["rebalances"] == 1
+        # the train jobs outlive the eviction and keep stepping on their
+        # re-carved leases
+        for name in ("trainA", "trainB"):
+            assert fleet.jobs[name].post_rebalance_steps >= 1
+
+    def test_lease_invariants_hold_at_exit(self, fleet_result):
+        fleet, _ = fleet_result
+        _assert_disjoint_and_healthy(fleet.arbiter)
+        # evicted host 3's block never re-enters any lease
+        evicted = set(fleet.config.cluster.devices_of(3))
+        for lease in fleet.arbiter.granted.values():
+            assert not evicted & set(lease.devices)
+
+    def test_duplicate_arch_dedups_across_jobs(self, fleet_result):
+        fleet, m = fleet_result
+        assert m["cross_job_hits"] >= 1
+
+    def test_serving_job_produced_tokens(self, fleet_result):
+        fleet, _ = fleet_result
+        serve = fleet.jobs["serve0"].session
+        assert len(serve.results) == 2
+        assert all(len(r.tokens) > 0 for r in serve.results.values())
+
+    def test_fifo_policy_runs_same_work(self, fleet_result):
+        _, m_fleet = fleet_result
+        cluster = ClusterSpec(
+            n_devices=16, island_size=8, mem_bytes=96e9, devices_per_host=4
+        )
+        jobs = [
+            JobSpec(name="trainA", kind="train", workload="multitask_clip",
+                    steps=5),
+            JobSpec(name="trainB", kind="train", workload="multitask_clip",
+                    steps=5),
+        ]
+        fifo = FleetScheduler(
+            FleetConfig(cluster=cluster, policy="fifo", slice_steps=2), jobs
+        )
+        m = fifo.run()
+        assert all(r["state"] == "done" for r in m["jobs"])
+        assert m["ticks"] == 10
+        # whole-cluster slices: the duplicate pair still dedups
+        assert m["cross_job_hits"] >= 1
