@@ -29,6 +29,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 from . import (
     bench_breakdown,
     bench_case_study,
+    bench_colocation,
     bench_dynamicity,
     bench_end_to_end,
     bench_estimator,
@@ -50,12 +51,14 @@ BENCHES = {
     "dynamicity": bench_dynamicity,       # Appendix D analogue
     "serving": bench_serving,             # continuous batching + replan
     "fleet": bench_fleet,                 # multi-tenant scheduling policies
+    "colocation": bench_colocation,       # decode in training idle windows
     "kernels": bench_kernels,             # substrate
 }
 
 
 #: quick subset exercised by the CI benchmark smoke job
-SMOKE_BENCHES = ("dynamicity", "planner_cost", "serving", "fleet")
+SMOKE_BENCHES = ("dynamicity", "planner_cost", "serving", "fleet",
+                 "colocation")
 
 
 def write_bench_json(name: str, rows, seconds: float,

@@ -12,7 +12,9 @@ continuously batches requests and replans per mix shift (DESIGN.md §11;
 both: a :class:`repro.fleet.FleetScheduler` admits several jobs onto ONE
 cluster, carves it into per-job device-block leases, and plans every job
 through one shared PlanCache (DESIGN.md §14; ``launch/fleet.py`` is the
-CLI shell).
+CLI shell) — and bubble co-location: the plan-timeline API exposes every
+wavefront plan's idle windows and the fleet's ``colocate`` policy slots
+a serving tenant's decode steps into them (DESIGN.md §15).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -80,6 +82,32 @@ def main() -> None:
           f"{fm['makespan_s']*1e3:.0f} ms (virtual), "
           f"{fm['cross_job_hits']} cross-job plan-cache hits, "
           f"device idle {fm['device_idle_frac']:.0%}")
+
+    # bubble co-location (DESIGN.md §15): every plan exposes its idle
+    # windows — per-device gaps with the memory headroom the placement
+    # left unclaimed — and the fleet's "colocate" policy slots a serving
+    # job's decode steps into them instead of granting it devices
+    tl = p.timeline()
+    gangs = tl.gang_windows(k=2)
+    print(f"plan timeline: {len(tl.windows)} idle windows "
+          f"({tl.idle_fraction():.0%} of device-time idle), "
+          f"{len(gangs)} gang windows with >= 2 devices; widest "
+          f"{max(gangs, key=lambda g: g.duration).duration*1e3:.2f} ms "
+          f"across {max(gangs, key=lambda g: g.duration).n_devices} devices")
+    co = FleetScheduler(
+        FleetConfig(cluster=ClusterSpec(n_devices=8, island_size=8,
+                                        mem_bytes=96e9, devices_per_host=2),
+                    policy="colocate"),
+        [JobSpec(name="hostjob", workload="multitask_clip", steps=3),
+         JobSpec(name="tenant", kind="serve", arch="qwen3-0.6b",
+                 requests=2, prompt_len=8, gen_len=4, slots=2,
+                 cache_len=32)],
+    )
+    cm = co.run()
+    tenant = co.jobs["tenant"]
+    print(f"colocate: tenant decoded {tenant.colocated_steps} steps inside "
+          f"{tenant.windows_seen} training idle windows "
+          f"({cm['lease']['colocations']} binding, no lease of its own)")
 
     # a ~100M-class config: qwen3-0.6b reduced in depth/width but real vocab
     base = get_arch("qwen3-0.6b")

@@ -12,7 +12,7 @@ flattens any (MetaGraph, Schedule, Placement) triple into concrete steps.
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass
+from dataclasses import dataclass, field as dc_field
 from typing import Dict, List, Optional, Tuple
 
 from .contraction import MetaGraph
@@ -52,8 +52,28 @@ class ExecutionPlan:
     meta_graph: MetaGraph
     planner: str = "spindle"  # registry name of the pipeline that built it
     signature: Optional[str] = None  # workload signature (plancache key)
+    cluster: Optional[ClusterSpec] = None  # cluster the plan was built against
+    # memoized PlanTimeline — excluded from equality so cached plans with
+    # and without a computed timeline still compare equal
+    _timeline: Optional[object] = dc_field(
+        default=None, repr=False, compare=False
+    )
 
     # ------------------------------------------------------------------
+    def timeline(self, cluster: Optional[ClusterSpec] = None):
+        """The plan's idle-window structure (see :mod:`repro.core.timeline`).
+
+        With no argument, uses the recorded assembly cluster and memoizes;
+        an explicit ``cluster`` (e.g. a lease view) always recomputes.
+        """
+        from .timeline import compute_timeline
+
+        if cluster is not None:
+            return compute_timeline(self, cluster)
+        if self._timeline is None:
+            object.__setattr__(self, "_timeline", compute_timeline(self))
+        return self._timeline
+
     def waves(self) -> Dict[int, List[PlanStep]]:
         out: Dict[int, List[PlanStep]] = {}
         for s in self.steps:
@@ -141,6 +161,7 @@ def assemble_plan(
         placement=placement,
         meta_graph=mg,
         planner=planner,
+        cluster=cluster,
     )
 
 

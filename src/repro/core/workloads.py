@@ -442,13 +442,15 @@ def serving_default_mix() -> TaskGraph:
     )
 
 
-# NOTE: serving mixes are parameterized per live request mix (the
-# ServingSession builds them through a graph_factory) and deliberately NOT
-# registered in WORKLOADS — that registry is the paper's fixed training
-# evaluation suite (several tests assert properties over every entry).
+# Live serving mixes stay parameterized per request mix (the
+# ServingSession builds them through a graph_factory); the registry entry
+# below is the *representative* fixed mix, so the planner evaluation suite
+# (tests iterate every entry) and plan-only drivers exercise a serving
+# workload alongside the paper's training suite.
 WORKLOADS = {
     "multitask_clip": multitask_clip,
     "ofasys": ofasys,
     "qwen_val": qwen_val,
     "mt_backbone_suite": mt_backbone_suite,
+    "serving_mix": serving_default_mix,
 }

@@ -104,6 +104,19 @@ class JobHandle:
     renewals: int = 0
     #: scripted request trace not yet submitted (serve jobs)
     pending_requests: List[Any] = field(default_factory=list)
+    # --- co-location (colocate policy; serve jobs riding a train lease) ---
+    #: name of the training job whose idle windows this tenant fills
+    co_host: Optional[str] = None
+    #: decode/chunk steps that landed inside a host idle window
+    colocated_steps: int = 0
+    #: idle windows offered across all host steps
+    windows_seen: int = 0
+    #: windows skipped because the serve step did not fit (too short)
+    deferred_windows: int = 0
+    #: tenant KV pool budget in device bytes ((kv_pages-1) * page bytes)
+    kv_budget_bytes: float = 0.0
+    #: min per-device memory headroom of the host plan at bind time
+    window_headroom_bytes: float = 0.0
 
     @property
     def name(self) -> str:
@@ -125,4 +138,10 @@ class JobHandle:
             "post_rebalance_steps": self.post_rebalance_steps,
             "p50_step_s": float(np.percentile(st, 50)) if st else 0.0,
             "p99_step_s": float(np.percentile(st, 99)) if st else 0.0,
+            "co_host": self.co_host,
+            "colocated_steps": self.colocated_steps,
+            "windows_seen": self.windows_seen,
+            "deferred_windows": self.deferred_windows,
+            "kv_budget_bytes": self.kv_budget_bytes,
+            "window_headroom_bytes": self.window_headroom_bytes,
         }

@@ -123,6 +123,12 @@ class LeaseArbiter:
         self.grants = 0  # non-empty (re-)grants handed out
         self.deferred_renewals = 0  # expansions held back by the apply rule
         self.evictions = 0
+        #: co-resident tenants: tenant job -> host job whose lease's idle
+        #: WINDOWS it occupies.  A tenant holds no hosts of its own — it is
+        #: deliberately outside granted/applied, so the disjointness
+        #: invariants and quota carving never see it.
+        self.co_tenants: Dict[str, str] = {}
+        self.colocations = 0  # tenant bindings handed out
 
     # ------------------------------------------------------------ membership
     def jobs(self) -> List[str]:
@@ -141,13 +147,41 @@ class LeaseArbiter:
         return self.granted[job]
 
     def release(self, job: str) -> None:
-        """Job finished/left: its blocks return to the carvable pool."""
+        """Job finished/left: its blocks return to the carvable pool.
+
+        Releasing a host job also unbinds its co-tenants (their windows
+        died with the lease — the scheduler rehomes or promotes them);
+        releasing a tenant just drops its binding."""
         self._weights.pop(job, None)
         if job in self._order:
             self._order.remove(job)
         self.granted.pop(job, None)
         self.applied.pop(job, None)
+        self.co_tenants.pop(job, None)
+        for tenant, host in list(self.co_tenants.items()):
+            if host == job:
+                del self.co_tenants[tenant]
         self.recarve()
+
+    # ----------------------------------------------------------- co-tenancy
+    def colocate(self, tenant: str, host: str) -> None:
+        """Bind ``tenant`` as a co-resident of ``host``'s lease.
+
+        The tenant occupies *idle windows* of the host's plan, not hosts:
+        it must not be (and never becomes) a lease-holder, and the host
+        must hold a live grant.  Re-binding to a new host is allowed (the
+        scheduler rehomes tenants when their host finishes)."""
+        if tenant in self._weights:
+            raise ValueError(
+                f"co-tenant {tenant!r} already holds a lease of its own"
+            )
+        if host not in self._weights:
+            raise ValueError(f"co-location host {host!r} is not admitted")
+        if host in self.co_tenants:
+            raise ValueError(f"host {host!r} is itself a co-tenant")
+        self.co_tenants[tenant] = host
+        self.colocations += 1
+        self.check()
 
     # -------------------------------------------------------------- topology
     def evict_hosts(self, cluster: ClusterSpec) -> None:
@@ -282,7 +316,16 @@ class LeaseArbiter:
         * applied leases are pairwise disjoint, union ⊆ healthy devices
         * no job's grant contains a device another job still has applied
           (the deferral rule — the double-assignment regression guard)
+        * co-tenants hold no hosts of their own, and each is bound to a
+          job that IS a lease-holder (windows, not devices)
         """
+        for tenant, host in self.co_tenants.items():
+            assert tenant not in self._weights, (
+                f"co-tenant {tenant!r} holds a lease of its own"
+            )
+            assert host in self._weights, (
+                f"co-tenant {tenant!r} bound to released host {host!r}"
+            )
         healthy = set(self.cluster.healthy_devices())
         for kind, leases in (("granted", self.granted),
                              ("applied", self.applied)):
@@ -311,4 +354,6 @@ class LeaseArbiter:
             "grants": self.grants,
             "deferred_renewals": self.deferred_renewals,
             "evictions": self.evictions,
+            "colocations": self.colocations,
+            "co_tenants": len(self.co_tenants),
         }

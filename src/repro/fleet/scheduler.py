@@ -47,7 +47,6 @@ from ..launch.events import (
     Event,
     JobArrived,
     JobFinished,
-    LeaseChanged,
     StragglerDetected,
 )
 from ..session import SessionCallbacks, SessionConfig, SpindleSession
@@ -56,7 +55,7 @@ from .lease import Lease, LeaseArbiter, lease_view
 
 __all__ = ["FleetConfig", "FleetCallbacks", "FleetScheduler"]
 
-POLICIES = ("fleet", "static", "fifo")
+POLICIES = ("fleet", "static", "fifo", "colocate")
 
 
 @dataclass(frozen=True)
@@ -67,7 +66,10 @@ class FleetConfig:
         n_devices=32, island_size=8, mem_bytes=96e9, devices_per_host=4
     )
     #: "fleet" (lease arbiter) | "static" (fixed equal partition) |
-    #: "fifo" (whole-cluster time slicing)
+    #: "fifo" (whole-cluster time slicing) | "colocate" (fleet leases for
+    #: train jobs; serve jobs ride a train lease's idle windows as
+    #: co-resident tenants — decode steps slot into the plan timeline's
+    #: bubbles whose memory headroom fits the tenant's KV page budget)
     policy: str = "fleet"
     planner: str = "spindle"
     placement_strategy: str = "spindle"
@@ -146,6 +148,10 @@ class FleetScheduler:
         self.t = 0.0
         self.busy_device_seconds = 0.0
         self.rebalances = 0
+        #: live co-tenant bindings (colocate policy): tenant name -> host
+        #: job name (mirrors arbiter.co_tenants; the scheduler side also
+        #: tracks unbound tenants waiting for a plannable host)
+        self._tenants: Dict[str, str] = {}
         self._flagged: frozenset = frozenset()
         self.events: List[Event] = []
         self.ticks = 0
@@ -257,12 +263,21 @@ class FleetScheduler:
             if h.state == "pending" and h.spec.arrival <= self.t
         ]
         for h in due:
-            self._build_session(h)
+            tenant = (
+                self.config.policy == "colocate" and h.spec.kind == "serve"
+            )
+            if tenant:
+                # co-tenants never hold a lease: the session is built at
+                # bind time (its KV budget comes from the host plan's
+                # headroom), and the arbiter only learns the window binding
+                h.pending_requests = self._make_requests(h.spec)
+            else:
+                self._build_session(h)
+                self.arbiter.admit(h.name, priority=h.spec.priority)
             h.state = "queued"
             h.admitted_at = max(self.t, h.spec.arrival)
             h.clock = h.admitted_at
             h.last_end = h.admitted_at
-            self.arbiter.admit(h.name, priority=h.spec.priority)
             self.events.append(
                 JobArrived(name=h.name, job_kind=h.spec.kind)
             )
@@ -287,22 +302,17 @@ class FleetScheduler:
         sess = handle.session
         view = applied.view
         with self._owner(name):
-            if handle.spec.kind == "train":
-                if sess.current_plan is None:
-                    sess.adopt_cluster(view)
-                    sess.plan()
-                else:
-                    # an equal-shaped re-grant (same view, new physical
-                    # blocks) is a signal-level no-op: the plan still
-                    # holds, only the arbiter's mapping moved
-                    sess.signal(LeaseChanged(cluster=view))
-            else:
-                sess.apply_lease(view)
+            # one protocol method for both job kinds: first lease plans,
+            # later leases signal LeaseChanged (an equal-shaped re-grant —
+            # same view, new physical blocks — is a signal-level no-op)
+            sess.apply_lease(view)
         return True
 
     def _sync_queued(self) -> None:
         for h in self.jobs.values():
-            if h.state == "queued" and self.arbiter.granted[h.name].hosts:
+            # unbound co-tenants are queued without an arbiter grant
+            grant = self.arbiter.granted.get(h.name)
+            if h.state == "queued" and grant is not None and grant.hosts:
                 self._apply_lease(h)
 
     def _job_done(self, handle: JobHandle) -> bool:
@@ -329,6 +339,189 @@ class FleetScheduler:
             )
         return sess.current_plan.makespan
 
+    # ------------------------------------------------------- co-location
+    def _build_cotenant_session(self, handle: JobHandle,
+                                host: JobHandle) -> bool:
+        """Stand up the tenant's ServingSession against the host's lease
+        view, with ``kv_pages`` budgeted from the host plan's memory
+        headroom (the placement high-water the timeline exposes).  Returns
+        False when even one request's KV reach cannot fit the headroom —
+        the caller promotes the tenant to a real lease instead."""
+        import jax.numpy as jnp
+
+        from ..models.paging import kv_page_bytes
+        from ..serving.pages import pages_needed
+        from ..serving.session import ServingConfig, ServingSession
+
+        spec = handle.spec
+        model, params = self._model(spec.arch)
+        view = host.lease.view
+        tl = host.session.current_plan.timeline()
+        head = min(tl.headroom.values()) if tl.headroom else 0.0
+        page_size = ServingConfig.page_size
+        probe, lay = model.init_paged_cache(
+            1, spec.cache_len, n_pages=2, page_size=page_size,
+            cache_dtype=jnp.bfloat16,
+        )
+        pb = kv_page_bytes(probe, lay)
+        pps = pages_needed(spec.cache_len, page_size)
+        full_need = spec.slots * pps + 1
+        if pb <= 0:
+            budget = full_need  # stateless-KV arch: nothing pooled to cap
+        else:
+            fit = 1 + int(head // pb)
+            reach = pages_needed(
+                spec.prompt_len + spec.gen_len - 1, page_size
+            )
+            if fit < reach + 1:
+                return False  # headroom can't hold even one request
+            budget = min(full_need, fit)
+        handle.session = ServingSession(
+            ServingConfig(
+                arch=spec.arch,
+                max_slots=spec.slots,
+                cache_len=spec.cache_len,
+                kv_pages=budget,
+                cluster=view,
+                planner=self.config.planner,
+                placement_strategy=self.config.placement_strategy,
+                replan=self.config.serve_replan,
+                cache_maxsize=self.config.cache_maxsize,
+            ),
+            model=model,
+            params=params,
+            callbacks=self.callbacks,
+            plan_cache=self.cache,
+        )
+        handle.kv_budget_bytes = float((budget - 1) * pb)
+        handle.window_headroom_bytes = float(head)
+        return True
+
+    def _bind_or_promote_tenants(self) -> None:
+        """Give every waiting colocate serve job a home.
+
+        Preference order: bind as co-tenant of a running train job that
+        already has a plan (windows exist); else keep waiting while any
+        train job could still run; else *promote* to an ordinary
+        arbiter-leased job so the fleet always drains."""
+        waiting = [
+            h for h in self.jobs.values()
+            if h.spec.kind == "serve" and h.state == "queued"
+            and h.name not in self._tenants
+            and h.name not in self.arbiter.granted
+        ]
+        if not waiting:
+            return
+        hosts = [
+            h for h in self.jobs.values()
+            if h.spec.kind == "train" and h.state == "running"
+            and h.lease is not None
+            and h.session.current_plan is not None
+        ]
+        train_alive = any(
+            h.spec.kind == "train" and h.state != "done"
+            for h in self.jobs.values()
+        )
+        for h in waiting:
+            if hosts:
+                host = min(hosts, key=lambda x: (x.clock, x.spec.name))
+                if h.session is None:
+                    if not self._build_cotenant_session(h, host):
+                        self._promote_tenant(h)
+                        continue
+                else:
+                    # re-homed tenant: adopt the new host's lease view and
+                    # re-baseline the headroom contract against its plan
+                    with self._owner(h.name):
+                        h.session.apply_lease(host.lease.view)
+                    tl = host.session.current_plan.timeline()
+                    if tl.headroom:
+                        h.window_headroom_bytes = float(
+                            min(tl.headroom.values())
+                        )
+                self.arbiter.colocate(h.name, host.name)
+                self._tenants[h.name] = host.name
+                h.co_host = host.name
+                h.state = "running"
+                h.clock = max(h.clock, host.clock)
+                h.last_end = h.clock
+            elif not train_alive:
+                self._promote_tenant(h)
+
+    def _promote_tenant(self, handle: JobHandle) -> None:
+        """Fall back to a real lease (no windows to ride): the tenant
+        becomes an ordinary arbiter-arbitrated serve job."""
+        handle.co_host = None
+        self.arbiter.admit(handle.name, priority=handle.spec.priority)
+        if handle.session is None:
+            reqs = handle.pending_requests
+            self._build_session(handle)
+            handle.pending_requests = reqs  # keep trace progress
+
+    def _serve_dt(self, tenant: JobHandle) -> float:
+        """Virtual cost of ONE co-located serve step: the decode wave of
+        the tenant's mix plan (a window hosts decode steps and prefill
+        chunks, not the whole mix), or the configured floor pre-plan."""
+        ps = getattr(tenant.session, "planner_session", None)
+        plan = ps.current_plan if ps is not None else None
+        if plan is None:
+            return self.config.serve_fallback_dt
+        dec = [s.duration for s in plan.steps if "decode" in s.meta_name]
+        return max(dec) if dec else plan.makespan
+
+    def _tenant_step(self, tenant: JobHandle) -> None:
+        sess = tenant.session
+        while (
+            tenant.pending_requests
+            and tenant.pending_requests[0].arrival <= sess.steps
+        ):
+            sess.submit(tenant.pending_requests.pop(0))
+        with self._owner(tenant.name):
+            sess.step()
+
+    def _colocate_tenant_steps(self, host: JobHandle, start: float) -> None:
+        """Slot tenant serve steps into the idle windows of the host step
+        that just ran over ``[start, start + makespan]``.  Each gang window
+        fits ``floor(duration / serve_dt)`` steps; a window too short for
+        even one step counts as a deferral (the tenant waits for the next
+        host step instead of stretching the training critical path)."""
+        tenants = [t for t, hn in self._tenants.items() if hn == host.name]
+        if not tenants:
+            return
+        plan = host.session.current_plan
+        if plan is None:
+            return
+        tl = plan.timeline()
+        for tname in tenants:
+            tenant = self.jobs[tname]
+            if tenant.state != "running":
+                continue
+            gangs = tl.gang_windows(
+                k=1, min_headroom=tenant.kv_budget_bytes
+            )
+            tenant.windows_seen += len(gangs)
+            for win in gangs:
+                if self._job_done(tenant):
+                    break
+                used = 0.0
+                stepped = False
+                while not self._job_done(tenant):
+                    serve_dt = self._serve_dt(tenant)
+                    if used + serve_dt > win.duration:
+                        break
+                    self._tenant_step(tenant)
+                    tenant.colocated_steps += 1
+                    self._account_step(
+                        tenant, start + win.start + used, serve_dt,
+                        len(win.devices),
+                    )
+                    used += serve_dt
+                    stepped = True
+                if not stepped and not self._job_done(tenant):
+                    tenant.deferred_windows += 1
+            if self._job_done(tenant):
+                self._finish(tenant, tenant.clock)
+
     def _account_step(self, handle: JobHandle, start: float,
                       dt: float, n_devices: int) -> None:
         end = start + dt
@@ -346,7 +539,18 @@ class FleetScheduler:
         handle.state = "done"
         handle.done_at = end
         handle.lease = None
-        self.arbiter.release(handle.name)
+        self.arbiter.release(handle.name)  # also drops co-tenant bindings
+        # orphaned tenants re-enter the bind-or-promote pipeline: the next
+        # loop iteration rebinds them to another running train job, or
+        # promotes them to a real lease if no train job remains
+        for tname, hname in list(self._tenants.items()):
+            if hname == handle.name:
+                del self._tenants[tname]
+                tenant = self.jobs[tname]
+                tenant.co_host = None
+                if tenant.state == "running":
+                    tenant.state = "queued"
+        self._tenants.pop(handle.name, None)
         self.events.append(JobFinished(name=handle.name))
         self._fire("on_job_finished", handle)
 
@@ -358,6 +562,14 @@ class FleetScheduler:
         dt = self._execute_step(handle)
         self.t = start + dt if self.config.policy == "fifo" else self.t
         self._account_step(handle, start, dt, handle.lease.n_devices)
+        if (
+            self.config.policy == "colocate"
+            and handle.spec.kind == "train"
+            and self._tenants
+        ):
+            # the step that just ran over [start, start+dt] carried this
+            # plan's idle windows — fill them with tenant decode steps
+            self._colocate_tenant_steps(handle, start)
         if self._job_done(handle):
             self._finish(handle, start + dt)
 
@@ -416,8 +628,14 @@ class FleetScheduler:
         while self.ticks < self.config.max_ticks:
             self._admit_due()
             self._sync_queued()
+            if self.config.policy == "colocate":
+                self._bind_or_promote_tenants()
+                self._sync_queued()  # a promoted tenant may now hold a grant
+            # bound co-tenants never step standalone: their steps ride
+            # their host's windows inside _step_job
             runnable = [
-                h for h in self.jobs.values() if h.state == "running"
+                h for h in self.jobs.values()
+                if h.state == "running" and h.name not in self._tenants
             ]
             if not runnable:
                 pending = [
@@ -506,14 +724,7 @@ class FleetScheduler:
             h.state = "running"
             sess = h.session
             with self._owner(h.name):
-                if h.spec.kind == "train":
-                    if sess.current_plan is None:
-                        sess.adopt_cluster(view)
-                        sess.plan()
-                    else:
-                        sess.signal(LeaseChanged(cluster=view))
-                else:
-                    sess.apply_lease(view)
+                sess.apply_lease(view)
             for _ in range(self.config.slice_steps):
                 if self._job_done(h):
                     break
@@ -556,6 +767,9 @@ class FleetScheduler:
                 if total_device_seconds > 0 else 0.0
             ),
             "rebalances": self.rebalances,
+            "colocated_steps": sum(r["colocated_steps"] for r in rows),
+            "windows_seen": sum(r["windows_seen"] for r in rows),
+            "deferred_windows": sum(r["deferred_windows"] for r in rows),
             "lease": self.arbiter.stats(),
             "cross_job_hits": cache["cross_job_hits"],
             "cache": cache,

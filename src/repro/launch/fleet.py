@@ -7,6 +7,7 @@ to completion, printing one line per fleet lifecycle event.
 
     PYTHONPATH=src python -m repro.launch.fleet --policy fleet
     PYTHONPATH=src python -m repro.launch.fleet --smoke --straggler-at 6
+    PYTHONPATH=src python -m repro.launch.fleet --policy colocate --smoke
 
 ``--smoke`` is the CI contract (the ``fleet-smoke`` job): 2 duplicate
 training jobs + 1 serving job with a scripted straggler at step N.  It
@@ -14,6 +15,14 @@ exits non-zero unless (a) every job drains, (b) at least one fleet
 rebalance fired, (c) every job still live at the rebalance made at least
 one step AFTER it (progress post-eviction), and (d) the duplicate-arch
 pair deduplicated through the shared PlanCache (``cross_job_hits > 0``).
+
+``--policy colocate --smoke`` is the ``colocation-smoke`` contract: the
+serving job rides a training lease as a co-resident tenant instead of
+holding hosts.  It exits non-zero unless (a) every job drains, (b) at
+least one decode step landed inside a training idle window
+(``colocated_steps >= 1``), and (c) every tenant's KV page-pool
+high-water stayed within the window memory headroom it was budgeted
+against.
 """
 
 from __future__ import annotations
@@ -37,11 +46,15 @@ class FleetPrinter(FleetCallbacks):
 
     def on_job_admitted(self, fleet, handle):
         if self.verbose:
-            lease = fleet.arbiter.granted[handle.name]
+            lease = fleet.arbiter.granted.get(handle.name)
+            grant = (
+                f"granted hosts {lease.hosts}" if lease is not None
+                else "co-tenant (no lease: rides a training job's windows)"
+            )
             print(
                 f"[fleet] t={fleet.t:.3f} admitted {handle.name} "
                 f"({handle.spec.kind}, prio {handle.spec.priority}): "
-                f"granted hosts {lease.hosts}"
+                f"{grant}"
             )
 
     def on_rebalance(self, fleet, event, leases):
@@ -147,15 +160,38 @@ def run_fleet(
             f"plan cache hit rate {metrics['cache']['hit_rate']:.2f} "
             f"({metrics['cross_job_hits']} cross-job hits)"
         )
+    if policy == "colocate" and verbose:
+        for h in fleet.jobs.values():
+            if h.spec.kind != "serve" or h.colocated_steps < 1:
+                continue
+            hw = _tenant_kv_high_water_bytes(h)
+            print(
+                f"[fleet] colocated decode steps: {h.colocated_steps} "
+                f"({h.windows_seen} windows, {h.deferred_windows} deferred) "
+                f"for {h.name}"
+            )
+            print(
+                f"[fleet] tenant {h.name} kv high-water {hw:.0f} B "
+                f"<= window headroom {h.window_headroom_bytes:.0f} B: "
+                f"{hw <= h.window_headroom_bytes}"
+            )
     metrics["_survivors_at_rebalance"] = printer.survivors_at_rebalance
     metrics["_handles"] = fleet.jobs
     return metrics
 
 
+def _tenant_kv_high_water_bytes(handle) -> float:
+    """Device bytes the tenant's KV page pool actually peaked at."""
+    batcher = getattr(handle.session, "batcher", None)
+    if batcher is None or batcher.pool is None:
+        return 0.0
+    return float(batcher.pool.high_water * batcher.kv_page_bytes)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--policy", default="fleet",
-                    choices=("fleet", "static", "fifo"))
+                    choices=("fleet", "static", "fifo", "colocate"))
     ap.add_argument("--smoke", action="store_true",
                     help="CI contract: 2 train + 1 serving job, scripted "
                          "straggler, hard checks on the outcome")
@@ -173,7 +209,8 @@ def main() -> None:
     args = ap.parse_args()
 
     straggler_at = args.straggler_at
-    if args.smoke and straggler_at < 0:
+    if args.smoke and straggler_at < 0 and args.policy != "colocate":
+        # the colocate smoke exercises the window contract, not eviction
         straggler_at = 6
     m = run_fleet(
         args.policy,
@@ -190,7 +227,23 @@ def main() -> None:
     not_done = [r["name"] for r in m["jobs"] if r["state"] != "done"]
     if not_done:
         failures.append(f"jobs did not drain: {not_done}")
-    if args.smoke:
+    if args.smoke and args.policy == "colocate":
+        if m["colocated_steps"] < 1:
+            failures.append(
+                "no decode step landed inside a training idle window "
+                "(colocated_steps == 0)"
+            )
+        handles = m["_handles"]
+        for h in handles.values():
+            if h.spec.kind != "serve" or h.colocated_steps < 1:
+                continue
+            hw = _tenant_kv_high_water_bytes(h)
+            if hw > h.window_headroom_bytes:
+                failures.append(
+                    f"tenant {h.name} kv high-water {hw:.0f} B exceeds "
+                    f"window headroom {h.window_headroom_bytes:.0f} B"
+                )
+    elif args.smoke:
         if m["rebalances"] < 1:
             failures.append("no fleet rebalance fired")
         handles = m["_handles"]

@@ -33,6 +33,7 @@ from .layers import (
     rmsnorm,
     rmsnorm_init,
 )
+from .paging import paginate_cache
 from .transformer import chunked_xent
 
 
@@ -218,17 +219,12 @@ class EncDecTransformer:
                          cache_dtype=jnp.bfloat16):
         """Paged decode cache: causal self-attn KV pools + slot-major cross
         memory (read-only, O(enc_len) per slot — nothing grows to page)."""
-        cfg = self.cfg
-        L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
-        cache = {
-            "self_k": jnp.zeros((L, n_pages, K, page_size, hd), cache_dtype),
-            "self_v": jnp.zeros((L, n_pages, K, page_size, hd), cache_dtype),
-            "cross_k": jnp.zeros((L, batch, K, enc_len, hd), cache_dtype),
-            "cross_v": jnp.zeros((L, batch, K, enc_len, hd), cache_dtype),
-        }
         layout = {"self_k": "kv1", "self_v": "kv1",
                   "cross_k": "state1", "cross_v": "state1"}
-        return cache, layout
+        return paginate_cache(
+            self.init_cache(batch, cache_len, enc_len, cache_dtype),
+            layout, n_pages=n_pages, page_size=page_size,
+        )
 
     def decode_step(self, params, token, cache, pos, *, mesh=None,
                     pages=None):

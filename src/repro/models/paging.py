@@ -1,0 +1,77 @@
+"""Shared paged-KV cache construction (DESIGN.md §13, §15).
+
+Every model family's paged decode cache is the same transform of its slab
+decode cache: each full-attention KV leaf — ``(..., batch @ ax, K,
+cache_len @ ax+2, hd)`` — becomes a shared page pool ``(..., n_pages @ ax,
+K, page_size @ ax+2, hd)`` indexed through per-row page tables, while
+window/recurrent/cross-memory state stays slot-major untouched.  Before
+this module that transform was hand-expanded four times
+(``models/model.py``, ``models/transformer.py`` ×2, ``models/encdec.py``);
+:func:`paginate_cache` is now the single implementation and the per-class
+``init_paged_cache`` methods are thin wrappers that only supply their
+layout codes.
+
+Layout codes (one string per cache leaf, mirroring the cache tree):
+
+  * ``"kv<ax>"``    — paged pool; ``ax`` is the page axis (was the batch
+    axis of the slab leaf; ``ax+2`` was the sequence axis, now pages).
+  * ``"state<ax>"`` — slot-major state; ``ax`` is the batch axis.
+
+:func:`kv_page_bytes` prices one page across every pool leaf — the unit
+the fleet's co-location mode uses to fit a tenant's KV budget inside a
+training plan's memory headroom.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["paginate_cache", "kv_page_bytes"]
+
+
+def paginate_cache(
+    slab: Any, layout: Any, *, n_pages: int, page_size: int
+) -> Tuple[Any, Any]:
+    """Turn a slab decode cache into its paged counterpart.
+
+    ``slab`` is what ``init_cache`` built; ``layout`` is the matching tree
+    of per-leaf codes.  KV-coded leaves are reallocated as page pools
+    (batch axis → ``n_pages``, sequence axis → ``page_size``); state-coded
+    leaves pass through unchanged.  Returns ``(cache, layout)`` — the pair
+    every ``init_paged_cache`` wrapper returns.
+    """
+
+    def one(leaf, code):
+        if not code.startswith("kv"):
+            return leaf
+        ax = int(code[len("kv"):])
+        shape = list(leaf.shape)
+        shape[ax] = n_pages
+        shape[ax + 2] = page_size
+        return jnp.zeros(tuple(shape), leaf.dtype)
+
+    return jax.tree.map(one, slab, layout), layout
+
+
+def kv_page_bytes(cache: Any, layout: Any) -> int:
+    """Bytes one KV page occupies summed across every pool leaf.
+
+    For a pool leaf of shape ``(..., n_pages @ ax, K, page_size, hd)`` a
+    single page costs ``size * itemsize / n_pages`` bytes; the sum over
+    all kv-coded leaves is the marginal device memory of allocating one
+    more page — the quantum co-location budgets against headroom.
+    """
+    total = 0
+
+    def one(leaf, code):
+        nonlocal total
+        if code.startswith("kv"):
+            ax = int(code[len("kv"):])
+            total += (leaf.size * leaf.dtype.itemsize) // leaf.shape[ax]
+        return leaf
+
+    jax.tree.map(one, cache, layout)
+    return int(total)

@@ -43,6 +43,7 @@ from .layers import (
     rmsnorm_init,
 )
 from .moe import moe_apply, moe_init
+from .paging import paginate_cache
 
 DEFAULT_PATTERN = ("attn",)
 
@@ -480,38 +481,27 @@ class Decoder:
         page axis ``ax``) or ``"state<ax>"`` (slot-major, batch axis ``ax``)
         so the serving batcher can write prefill pages / slot states
         without knowing the block pattern."""
-        cfg = self.cfg
-        hd = cfg.resolved_head_dim
 
-        def one(kind):
+        def codes(kind):
             if kind == "attn":
-                shape = (n_pages, cfg.n_kv_heads, page_size, hd)
-                st = {"k": jnp.zeros(shape, cache_dtype),
-                      "v": jnp.zeros(shape, cache_dtype)}
-                return st, {"k": "kv", "v": "kv"}
-            st = _state_init(cfg, kind, batch, cache_len, cache_dtype)
-            return st, jax.tree.map(lambda _: "state", st)
+                return {"k": "kv", "v": "kv"}
+            st = _state_init(self.cfg, kind, 1, cache_len, cache_dtype)
+            return jax.tree.map(lambda _: "state", st)
 
-        groups = lay_groups = None
+        lay_groups = None
         if self.n_groups > 0:
-            groups, lay_groups = {}, {}
-            for j, kind in enumerate(self.pattern):
-                st, lay = one(kind)
-                groups[f"p{j}"] = jax.tree.map(
-                    lambda x: jnp.broadcast_to(
-                        x, (self.n_groups,) + x.shape
-                    ).copy(),
-                    st,
-                )
-                lay_groups[f"p{j}"] = jax.tree.map(lambda c: c + "1", lay)
-        rem, lay_rem = [], []
-        for r in range(self.n_rem):
-            st, lay = one(self.pattern[r])
-            rem.append(st)
-            lay_rem.append(jax.tree.map(lambda c: c + "0", lay))
-        return (
-            {"groups": groups, "rem": rem},
+            lay_groups = {
+                f"p{j}": jax.tree.map(lambda c: c + "1", codes(kind))
+                for j, kind in enumerate(self.pattern)
+            }
+        lay_rem = [
+            jax.tree.map(lambda c: c + "0", codes(self.pattern[r]))
+            for r in range(self.n_rem)
+        ]
+        return paginate_cache(
+            self.init_cache(batch, cache_len, cache_dtype),
             {"groups": lay_groups, "rem": lay_rem},
+            n_pages=n_pages, page_size=page_size,
         )
 
     # --------------------------------------------------------------- decode

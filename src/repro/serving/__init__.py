@@ -17,17 +17,18 @@ The serving counterpart of the training lifecycle (DESIGN.md §11):
     drifts.
 """
 
-from .batcher import ContinuousBatcher, SlotState, read_slot, write_slot
+from .batcher import CacheIO, ContinuousBatcher, SlotState, read_slot, write_slot
 from .mix import DEFAULT_PROMPT_BUCKETS, MixSnapshot, MixTracker, prompt_bucket
 from .pages import PagePool, pages_needed
 from .queue import Request, RequestQueue
 from .session import RequestResult, ServingConfig, ServingSession
 
 __all__ = [
+    "CacheIO",
     "ContinuousBatcher",
     "SlotState",
-    "read_slot",
-    "write_slot",
+    "read_slot",  # deprecated — CacheIO.read_slot
+    "write_slot",  # deprecated — CacheIO.write_prefill
     "PagePool",
     "pages_needed",
     "DEFAULT_PROMPT_BUCKETS",

@@ -36,6 +36,7 @@ those with a high capacity factor, as the decode-equivalence tests do.)
 from __future__ import annotations
 
 import time
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -64,7 +65,7 @@ def cache_batch_axes(cache):
     return jax.tree.map(lambda _: 1, cache)
 
 
-def write_slot(cache, page, slot):
+def _write_slot_impl(cache, page, slot):
     """Page a batch-1 request cache into ``cache`` at batch row ``slot``."""
 
     def ins(dst, src, ax):
@@ -75,9 +76,9 @@ def write_slot(cache, page, slot):
     return jax.tree.map(ins, cache, page, cache_batch_axes(cache))
 
 
-def write_slots(cache, page, slots):
+def _write_slots_impl(cache, page, slots):
     """Scatter a batch-k packed prefill cache into slab rows ``slots`` —
-    the stacked-admission form of :func:`write_slot`."""
+    the stacked-admission form of :func:`_write_slot_impl`."""
 
     def ins(dst, src, ax):
         src = src.astype(dst.dtype)
@@ -88,7 +89,7 @@ def write_slots(cache, page, slots):
     return jax.tree.map(ins, cache, page, cache_batch_axes(cache))
 
 
-def read_slot(cache, slot):
+def _read_slot_impl(cache, slot):
     """The batch-1 cache page currently held at slab batch row ``slot``."""
 
     def pick(x, ax):
@@ -97,7 +98,7 @@ def read_slot(cache, slot):
     return jax.tree.map(pick, cache, cache_batch_axes(cache))
 
 
-def write_pages(cache, page, slots, rows, layout):
+def _write_pages_impl(cache, page, slots, rows, layout):
     """Map a batch-k packed prefill cache into the paged layout.
 
     ``page`` is the slab-layout batch-k cache a prefill produced; ``slots``
@@ -143,8 +144,8 @@ def write_pages(cache, page, slots, rows, layout):
 #: unbounded growth would leak every model (and its executables) served.
 _JIT_CACHE: "OrderedDict[Any, Any]" = OrderedDict()
 _JIT_CACHE_MAX = 16
-_WRITE_JIT = jax.jit(write_slot)
-_WRITE_SLOTS_JIT = jax.jit(write_slots)
+_WRITE_JIT = jax.jit(_write_slot_impl)
+_WRITE_SLOTS_JIT = jax.jit(_write_slots_impl)
 
 #: jitted write_pages per layout tree — shared across batcher instances
 #: (a per-batcher jit closure would recompile the page map-in on every
@@ -158,7 +159,7 @@ def _write_pages_jit(layout):
     key = (tuple(leaves), treedef)
     if key not in _WRITE_PAGES_JITS:
         _WRITE_PAGES_JITS[key] = jax.jit(
-            lambda cache, page, slots, rows, layout=layout: write_pages(
+            lambda cache, page, slots, rows, layout=layout: _write_pages_impl(
                 cache, page, slots, rows, layout
             )
         )
@@ -166,6 +167,92 @@ def _write_pages_jit(layout):
     while len(_WRITE_PAGES_JITS) > _WRITE_PAGES_JITS_MAX:
         _WRITE_PAGES_JITS.popitem(last=False)
     return _WRITE_PAGES_JITS[key]
+
+
+class CacheIO:
+    """Layout-aware decode-cache I/O — THE single dispatch point between
+    the slab and paged layouts.
+
+    One instance per batcher, constructed with the per-leaf layout tree
+    from ``model.init_paged_cache`` (or ``None`` for slab caches).  Every
+    prefill map-in goes through :meth:`write_prefill`, which picks the
+    right jitted kernel (paged page-scatter, slab batch-1 dynamic-slice,
+    or slab stacked scatter) so no caller ever branches on layout again.
+    The old free functions (``write_slot`` / ``write_slots`` /
+    ``write_pages`` / ``read_slot``) survive as deprecated shims.
+    """
+
+    def __init__(self, layout: Any = None):
+        self.layout = layout
+        self._write_pages = (
+            _write_pages_jit(layout) if layout is not None else None
+        )
+
+    @property
+    def paged(self) -> bool:
+        return self.layout is not None
+
+    def write_prefill(self, cache, page, slots, rows=None):
+        """Map a packed batch-k prefill cache into ``cache``.
+
+        ``slots`` is the k target slot rows.  Paged layouts additionally
+        need ``rows`` — each request's (pages_per_slot,) physical page
+        ids; slab layouts ignore it and take the batch-1 fast path when
+        k == 1.
+        """
+        if self.layout is not None:
+            if rows is None:
+                raise ValueError(
+                    "paged CacheIO.write_prefill needs rows (page ids)"
+                )
+            return self._write_pages(
+                cache, page,
+                jnp.asarray(slots, jnp.int32), jnp.asarray(rows),
+            )
+        slots = [int(s) for s in slots]
+        if len(slots) == 1:
+            return _WRITE_JIT(cache, page, jnp.int32(slots[0]))
+        return _WRITE_SLOTS_JIT(cache, page, jnp.asarray(slots, jnp.int32))
+
+    def read_slot(self, cache, slot: int):
+        """The batch-1 cache page at slab row ``slot`` (slab only — paged
+        KV lives in the pool and is read through page tables)."""
+        if self.layout is not None:
+            raise ValueError("read_slot is slab-only; paged KV is pooled")
+        return _read_slot_impl(cache, slot)
+
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated; construct a CacheIO and use its methods "
+        "(write_prefill / read_slot)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def write_slot(cache, page, slot):
+    """Deprecated shim — see :class:`CacheIO`."""
+    _deprecated("write_slot")
+    return _write_slot_impl(cache, page, slot)
+
+
+def write_slots(cache, page, slots):
+    """Deprecated shim — see :class:`CacheIO`."""
+    _deprecated("write_slots")
+    return _write_slots_impl(cache, page, slots)
+
+
+def read_slot(cache, slot):
+    """Deprecated shim — see :class:`CacheIO`."""
+    _deprecated("read_slot")
+    return _read_slot_impl(cache, slot)
+
+
+def write_pages(cache, page, slots, rows, layout):
+    """Deprecated shim — see :class:`CacheIO`."""
+    _deprecated("write_pages")
+    return _write_pages_impl(cache, page, slots, rows, layout)
 
 
 def _model_fns(model, cache_len: int, cache_dtype, paged: bool):
@@ -328,13 +415,13 @@ class ContinuousBatcher:
             # pages their chunks are still filling)
             self._visible = self._tables.copy()
             self._visible_dev = jnp.asarray(self._visible)
-            self._write_pages = _write_pages_jit(self._layout)
         else:
             self.pages_per_slot = 0
             self.cache = model.init_cache(
                 max_slots, cache_len, enc_len=self.enc_len,
                 cache_dtype=cache_dtype,
             )
+        self.io = CacheIO(self._layout)
 
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
         self.pos = jnp.zeros((max_slots,), jnp.int32)
@@ -352,7 +439,6 @@ class ContinuousBatcher:
         self._prefill, self._decode = _model_fns(
             model, cache_len, cache_dtype, self.paged
         )
-        self._write = _WRITE_JIT
 
     # ------------------------------------------------------------- occupancy
     @property
@@ -369,6 +455,16 @@ class ContinuousBatcher:
 
     def prefill_pending(self) -> bool:
         return bool(self._jobs)
+
+    @property
+    def kv_page_bytes(self) -> int:
+        """Device bytes one KV page costs across all pool leaves (0 for
+        slab layouts) — the budgeting quantum for co-location headroom."""
+        if not self.paged:
+            return 0
+        from ..models.paging import kv_page_bytes
+
+        return kv_page_bytes(self.cache, self._layout)
 
     def kv_stats(self) -> Dict[str, Any]:
         """Page-pool occupancy vs. the slab footprint (token positions —
@@ -590,18 +686,12 @@ class ContinuousBatcher:
         t0 = time.perf_counter()
         logits, page = self._prefill(self.params, batch)
         firsts = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        slot_ids = jnp.asarray([s.slot for s in states], jnp.int32)
-        if self.paged:
-            rows = jnp.asarray(
-                self._tables[np.asarray([s.slot for s in states])]
-            )
-            self.cache = self._write_pages(self.cache, page, slot_ids, rows)
-        elif len(states) == 1:
-            self.cache = self._write(
-                self.cache, page, jnp.int32(states[0].slot)
-            )
-        else:
-            self.cache = _WRITE_SLOTS_JIT(self.cache, page, slot_ids)
+        slot_list = [s.slot for s in states]
+        slot_ids = jnp.asarray(slot_list, jnp.int32)
+        rows = self._tables[np.asarray(slot_list)] if self.paged else None
+        self.cache = self.io.write_prefill(
+            self.cache, page, slot_list, rows=rows
+        )
         self.tokens = self.tokens.at[slot_ids].set(firsts)
         self.pos = self.pos.at[slot_ids].set(
             jnp.asarray([s.prompt_total for s in states], jnp.int32)

@@ -36,6 +36,7 @@ Sessions come in two flavors:
 
 from __future__ import annotations
 
+import inspect
 import time
 from dataclasses import dataclass
 from typing import (
@@ -131,7 +132,13 @@ class SessionCallbacks:
         pass
 
     def on_wave(self, session: "SpindleSession", wave_index: int,
-                steps: List[PlanStep]) -> None:
+                steps: List[PlanStep], windows=None) -> None:
+        """``windows`` is the wave's list of
+        :class:`repro.core.timeline.IdleWindow` records (the bubbles a
+        co-located tenant could fill), or ``None`` when the plan carries
+        no timeline.  Overrides that omit the parameter keep working —
+        the session only passes it to callbacks whose signature accepts
+        it."""
         pass
 
     def on_replan(self, session: "SpindleSession", event: Event,
@@ -265,6 +272,42 @@ class SpindleSession:
             fn = getattr(cb, name, None)
             if fn is not None:
                 fn(self, *args)
+
+    @staticmethod
+    def _accepts_windows(fn: Callable) -> bool:
+        try:
+            sig = inspect.signature(fn)
+        except (TypeError, ValueError):
+            return False
+        for p in sig.parameters.values():
+            if p.kind is inspect.Parameter.VAR_KEYWORD:
+                return True
+            if p.name == "windows":
+                return True
+        return False
+
+    def _fire_wave(self, wave_index: int, steps: List[PlanStep]) -> None:
+        """Fire ``on_wave``, attaching the wave's idle windows for callbacks
+        that opt in (signature has a ``windows`` parameter or ``**kwargs``);
+        legacy two-argument overrides are called unchanged."""
+        windows: Optional[List[Any]] = None
+        computed = False
+        for cb in self.callbacks:
+            fn = getattr(cb, "on_wave", None)
+            if fn is None:
+                continue
+            if self._accepts_windows(fn):
+                if not computed:
+                    computed = True
+                    p = self.current_plan
+                    if p is not None:
+                        try:
+                            windows = p.timeline().wave_windows(wave_index)
+                        except ValueError:  # no recorded cluster
+                            windows = None
+                fn(self, wave_index, steps, windows=windows)
+            else:
+                fn(self, wave_index, steps)
 
     def _build_model(self) -> None:
         if self.model_factory is None:
@@ -423,7 +466,7 @@ class SpindleSession:
         t0 = time.perf_counter()
         self.params, self.opt_state, loss = self.engine.train_step(
             self.params, self.opt_state, b, self.optimizer,
-            on_wave=lambda widx, steps: self._fire("on_wave", widx, steps),
+            on_wave=self._fire_wave,
         )
         loss = float(loss)
         dt = time.perf_counter() - t0
@@ -504,6 +547,24 @@ class SpindleSession:
         self._lease = cluster
         base = cluster if cluster is not None else self.config.cluster
         self.cluster = base.shrink(self._straggler_hosts)
+
+    def apply_lease(self, cluster: ClusterSpec) -> Optional["ReplanRecord"]:
+        """Adopt an arbitrated lease view — the uniform protocol method every
+        schedulable session exposes (``ServingSession`` implements the same
+        signature), so :mod:`repro.fleet` never branches on job kind.
+
+        First lease (no current plan yet): adopt silently and plan over it.
+        Subsequent leases: signal :class:`LeaseChanged` and return the
+        resulting :class:`ReplanRecord` (``None`` when the view was equal
+        and no replan fired).
+        """
+        if self.current_plan is None:
+            self.adopt_cluster(cluster)
+            self.plan()
+            return None
+        n = len(self.replans)
+        self.signal(LeaseChanged(cluster=cluster))
+        return self.replans[n] if len(self.replans) > n else None
 
     def signal_all(self, events: Sequence[Event]) -> Optional[ExecutionPlan]:
         """Handle a burst of events with ONE coalesced replan.

@@ -1,0 +1,170 @@
+"""Plan-timeline introspection (idle windows) + bubble co-location."""
+
+import pytest
+
+from repro.core import ClusterSpec, plan, simulate_plan
+from repro.core.pipeline import available_planners
+from repro.core.timeline import GangWindow, IdleWindow, compute_timeline
+from repro.core.workloads import WORKLOADS
+
+
+CLUSTER = ClusterSpec(n_devices=16, island_size=8, mem_bytes=16e9)
+EPS = 1e-9
+
+
+def _mkplan(planner="spindle", workload="multitask_clip"):
+    return plan(WORKLOADS[workload](), CLUSTER, planner=planner)
+
+
+# --------------------------------------------------------------- extraction
+@pytest.mark.parametrize("planner", available_planners())
+def test_windows_complement_busy_across_planners(planner):
+    """Per device: busy intervals + idle windows tile [0, makespan] exactly,
+    and the timeline's makespan is the comm-free simulator's makespan."""
+    p = _mkplan(planner)
+    tl = p.timeline()
+    sim = simulate_plan(p, CLUSTER, include_comm=False)
+    assert tl.makespan == pytest.approx(sim.makespan)
+    for d in range(CLUSTER.n_devices):
+        busy = sum(e - s for s, e in tl.busy.get(d, []))
+        idle = sum(w.duration for w in tl.windows_for(d))
+        assert busy + idle == pytest.approx(tl.makespan, abs=1e-6), d
+        # windows never overlap a step that runs on the same device
+        for w in tl.windows_for(d):
+            for s, e in tl.busy.get(d, []):
+                assert w.end <= s + EPS or w.start >= e - EPS
+
+
+def test_windows_are_wave_tail_gaps():
+    """Every wave's span yields windows for devices the wave leaves idle
+    or finishes early — the Spindle bubbles co-location rides."""
+    p = _mkplan()
+    tl = p.timeline()
+    assert tl.windows, "a multi-task plan must expose idle windows"
+    assert tl.total_idle_seconds() > 0
+    assert 0 < tl.idle_fraction() < 1
+    for w in tl.windows:
+        assert isinstance(w, IdleWindow)
+        assert 0 <= w.start < w.end <= tl.makespan + EPS
+        assert 0 <= w.device < CLUSTER.n_devices
+
+
+def test_headroom_bound_by_placement_high_water():
+    """Window headroom == device memory minus the placement high-water —
+    never more than the HBM the plan left unclaimed."""
+    p = _mkplan()
+    tl = p.timeline()
+    for d, head in tl.headroom.items():
+        hw = p.placement.mem_high_water.get(d, 0.0)
+        assert head == pytest.approx(max(0.0, CLUSTER.mem_bytes - hw))
+        assert head <= CLUSTER.mem_bytes
+    for w in tl.windows:
+        assert w.headroom_bytes == pytest.approx(tl.headroom[w.device])
+
+
+def test_gang_windows_coherent():
+    """Gang windows: every member device is idle over the whole interval,
+    headroom is the min over members, and k filters the gang size."""
+    p = _mkplan()
+    tl = p.timeline()
+    gangs = tl.gang_windows(k=1)
+    assert gangs, "k=1 gangs must exist whenever any window exists"
+    for g in gangs:
+        assert isinstance(g, GangWindow)
+        assert g.n_devices >= 1
+        assert g.headroom_bytes == pytest.approx(
+            min(tl.headroom[d] for d in g.devices)
+        )
+        for d in g.devices:
+            covered = any(
+                w.start <= g.start + EPS and g.end <= w.end + EPS
+                for w in tl.windows_for(d)
+            )
+            assert covered, (d, g)
+    big = tl.gang_windows(k=4)
+    assert all(g.n_devices >= 4 for g in big)
+    with pytest.raises(ValueError):
+        tl.gang_windows(k=0)
+
+
+def test_wave_windows_overlap_wave_span():
+    p = _mkplan()
+    tl = p.timeline()
+    for widx, (s, e) in tl.wave_spans.items():
+        for w in tl.wave_windows(widx):
+            assert w.start < e and w.end > s
+
+
+def test_timeline_requires_cluster():
+    p = _mkplan()
+    object.__setattr__(p, "cluster", None)
+    object.__setattr__(p, "_timeline", None)
+    with pytest.raises(ValueError):
+        p.timeline()
+    # explicit cluster always works
+    tl = compute_timeline(p, CLUSTER)
+    assert tl.makespan == pytest.approx(p.makespan)
+
+
+# ------------------------------------------------------------- co-location
+def test_colocated_decode_token_exact():
+    """The co-located tenant decodes EXACTLY what a solo ServingSession
+    decodes over the same scripted trace — windows move decode in time,
+    never change its output — and at least one step rides a window."""
+    from repro.fleet import FleetConfig, FleetScheduler, JobSpec
+
+    cluster = ClusterSpec(
+        n_devices=32, island_size=8, mem_bytes=96e9, devices_per_host=4
+    )
+    jobs = [
+        JobSpec(name="train0", kind="train", workload="multitask_clip",
+                steps=6),
+        JobSpec(name="tenant", kind="serve", arch="qwen3-0.6b",
+                requests=2, prompt_len=8, gen_len=4, slots=2,
+                cache_len=32),
+    ]
+    fleet = FleetScheduler(
+        FleetConfig(cluster=cluster, policy="colocate"), jobs
+    )
+    m = fleet.run()
+    assert all(r["state"] == "done" for r in m["jobs"])
+    tenant = fleet.jobs["tenant"]
+    assert tenant.colocated_steps >= 1, "no decode step rode a window"
+    assert tenant.co_host == "train0"
+    assert m["lease"]["colocations"] >= 1
+    # the tenant never held devices of its own
+    assert "tenant" not in fleet.arbiter.granted
+
+    from repro.serving import ServingConfig, ServingSession
+
+    solo = ServingSession(
+        ServingConfig(arch="qwen3-0.6b", max_slots=2, cache_len=32,
+                      replan="off")
+    )
+    pending = fleet._make_requests(jobs[1])
+    while pending or solo.busy:
+        while pending and pending[0].arrival <= solo.steps:
+            solo.submit(pending.pop(0))
+        solo.step()
+    got = {rid: tuple(r.tokens) for rid, r in tenant.session.results.items()}
+    want = {rid: tuple(r.tokens) for rid, r in solo.results.items()}
+    assert got == want
+
+
+def test_tenant_kv_high_water_within_headroom():
+    """The memory contract: the tenant's KV pool peak stays within the
+    window headroom its page budget was carved from."""
+    from repro.launch.fleet import _tenant_kv_high_water_bytes, run_fleet
+
+    m = run_fleet("colocate", smoke=True, steps=6, requests=2,
+                  straggler_at=-1, verbose=False)
+    handles = m["_handles"]
+    served = [
+        h for h in handles.values()
+        if h.spec.kind == "serve" and h.colocated_steps > 0
+    ]
+    assert served, "smoke mix must co-locate its serving job"
+    for h in served:
+        hw = _tenant_kv_high_water_bytes(h)
+        assert hw > 0
+        assert hw <= h.window_headroom_bytes
