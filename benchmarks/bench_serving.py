@@ -1,6 +1,6 @@
 """Serving bench — paged + chunked serving vs. the continuous baselines.
 
-Four policies serve the SAME scripted arrival trace (two request families,
+Five policies serve the SAME scripted arrival trace (two request families,
 mixed prompt buckets and generation lengths, a mid-trace mix shift) over
 the same served model:
 
@@ -17,14 +17,30 @@ the same served model:
                             stacked admission prefills + chunked prefill
                             interleaved with decode (DIP-style), replanned
                             per mix shift over chunked-prefill towers.
+  * ``paged_shared``      — paged_chunked + PR 9 prefix sharing (hot
+                            prompt prefixes map read-shared through the
+                            radix index; divergence pages fork
+                            copy-on-write) + grow-on-write admission
+                            (decode grows pages as written instead of
+                            reserving ``max_new_tokens`` up front).
+
+The trace gives each family a hot shared prefix (chat requests open with
+the same 16 tokens, code with the same 52 — system prompts / few-shot
+preambles), so prefix hits collapse most of the prefill into page-table
+updates: ``prefix_hit_rate`` is the fraction of admitted prompt positions
+served by mapping, ``kv_compression`` the logical/physical page ratio.
 
 Reported per policy: throughput at equal output tokens, p50/p99 request
 latency, decode steps, prefill dispatch/chunk counts, the KV page-pool
-high-water vs. the slab footprint, replan counts/modes, planner wall
+high-water vs. the slab footprint, prefix-sharing hit/compression/CoW
+counters, grow defer counts, replan counts/modes, planner wall
 time, and the plan-cache stats.  Expected shape: continuous > static on
 throughput (slots refill instead of draining); paged_chunked > continuous
 (stacked prefills cut dispatch overhead, chunks fill decode bubbles) at a
-page-pool high-water BELOW the slots×cache_len slab footprint; and
+page-pool high-water BELOW the slots×cache_len slab footprint;
+paged_shared ≥ paged_chunked throughput with ``prefix_hit_rate > 0.5``
+and a KV high-water strictly below the unshared paged run (the
+token-exactness of sharing is pinned in ``tests/test_serving.py``); and
 continuous_replan ≈ continuous on wall time (replans are cache hits /
 incremental and happen off the decode fast path) while keeping the plan
 fresh (``planned_makespan_ms`` tracks the mix instead of the stale
@@ -49,7 +65,7 @@ from repro.models import build_model
 from repro.serving import Request, ServingConfig, ServingSession
 
 ARCH = "qwen3-0.6b"
-SLOTS = 4
+SLOTS = 6
 CACHE_LEN = 96
 
 #: (family, prompt_len, gen_len, arrival_step) — a PREFILL-HEAVY mix (the
@@ -75,27 +91,43 @@ PAGE_SIZE = 16
 CHUNK = 32
 DUTY = 2.0
 
+#: Hot shared prefix per family (tokens) — every request in a family opens
+#: with the same system-prompt/preamble tokens, then diverges into a
+#: per-request suffix.  chat shares exactly one page (16); code shares 52,
+#: which lands MID-page so sharers exercise the copy-on-write fork path.
+SHARED_PREFIX = {"chat": 16, "code": 52}
+
 #: (policy, admission, replan, extra ServingConfig fields) — the three PR 3
 #: baselines keep batch-1 joins + slab KV so the fast-path delta is honest
 PR3 = {"kv_layout": "slab", "batched_prefill": False}
 FAST = {"kv_layout": "paged", "page_size": PAGE_SIZE,
         "prefill_chunk": CHUNK, "prefill_duty": DUTY,
         "batched_prefill": True, "replan_cooldown": 4}
+SHARED = dict(FAST, prefix_sharing=True, kv_admission="grow")
 POLICIES = (
     ("static", "static", "off", PR3),
     ("continuous", "continuous", "initial", PR3),
     ("continuous_replan", "continuous", "mix", PR3),
     ("paged_chunked", "continuous", "mix", FAST),
+    ("paged_shared", "continuous", "mix", SHARED),
 )
 
 
 def _requests(model, trace) -> List[Request]:
     rng = jax.random.PRNGKey(11)
+    prefixes = {
+        family: jax.random.randint(
+            jax.random.fold_in(rng, 10**6 + i), (n,), 0, model.cfg.vocab
+        )
+        for i, (family, n) in enumerate(sorted(SHARED_PREFIX.items()))
+    }
     reqs = []
     for rid, (family, p, g, arrival) in enumerate(trace):
         toks = jax.random.randint(
             jax.random.fold_in(rng, rid), (p,), 0, model.cfg.vocab
         )
+        pfx = prefixes[family]
+        toks = jax.numpy.concatenate([pfx, toks[pfx.shape[0]:]])
         reqs.append(
             Request(
                 rid=rid, tokens=toks, max_new_tokens=g, family=family,
@@ -171,6 +203,13 @@ def run(smoke: bool = False) -> List[Dict]:
                 "kv_slab_tokens": m["kv_slab_tokens"],
                 "kv_page_hw_tokens": m.get("kv_page_hw_tokens", 0),
                 "kv_mem_saving": m.get("kv_mem_saving", 0.0),
+                "prefix_hit_rate": m.get("prefix_hit_rate", 0.0),
+                "kv_compression": m.get("kv_compression", 0.0),
+                "kv_shared_maps": m.get("kv_shared_maps", 0),
+                "kv_cow_forks": m.get("kv_cow_forks", 0),
+                "kv_grow_allocs": m.get("kv_grow_allocs", 0),
+                "kv_grow_defers": m.get("kv_grow_defers", 0),
+                "kv_preemptions": m.get("kv_preemptions", 0),
                 "wall_seconds": m["wall_seconds"],
                 "busy_seconds": m["busy_seconds"],
                 "throughput_tok_s": m["throughput_tok_s"],
@@ -204,6 +243,7 @@ def main(rows=None) -> None:
     st, ct = by.get("static"), by.get("continuous")
     cr = by.get("continuous_replan")
     pc = by.get("paged_chunked")
+    ps = by.get("paged_shared")
     if st and ct:
         print("continuous vs static throughput: "
               f"{ct['throughput_tok_s'] / max(st['throughput_tok_s'], 1e-9):.2f}x "
@@ -220,6 +260,15 @@ def main(rows=None) -> None:
               f"dispatches, {pc['interleaved_chunks']} interleaved chunks, "
               f"kv high-water {pc['kv_page_hw_tokens']} vs slab "
               f"{pc['kv_slab_tokens']} tokens)")
+    if pc and ps:
+        print("prefix-shared vs unshared paged: "
+              f"hit_rate={ps['prefix_hit_rate']:.2f} "
+              f"compression={ps['kv_compression']:.2f}x "
+              f"(kv high-water {ps['kv_page_hw_tokens']} vs "
+              f"{pc['kv_page_hw_tokens']} tokens, "
+              f"{ps['kv_shared_maps']} shared maps, "
+              f"{ps['kv_cow_forks']} cow forks, "
+              f"{ps['output_tokens']} vs {pc['output_tokens']} output tokens)")
 
 
 if __name__ == "__main__":

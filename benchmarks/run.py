@@ -119,12 +119,13 @@ def throughput_metrics(rows) -> dict:
 
     Absolute timings and tok/s move with the machine, so the regression
     gate compares *relative* metrics only: explicit ``speedup_*`` keys,
-    top-level ``*hit_rate*`` keys, and each row's ``throughput_tok_s``
-    normalized to the first throughput-carrying row of the same run (e.g.
-    continuous batching's gain over the static baseline).  All are
-    higher-is-better.  Nested cache-stat dicts are deliberately excluded —
-    per-replan cache composition varies run to run; the speedups it feeds
-    are the stable signal.
+    top-level ``*hit_rate*`` keys, ``kv_compression`` (logical/physical
+    KV page ratio — a pure dedup measure), and each row's
+    ``throughput_tok_s`` normalized to the first throughput-carrying row
+    of the same run (e.g. continuous batching's gain over the static
+    baseline).  All are higher-is-better.  Nested cache-stat dicts are
+    deliberately excluded — per-replan cache composition varies run to
+    run; the speedups it feeds are the stable signal.
     """
     out: dict = {}
     base_tp = None
@@ -135,7 +136,7 @@ def throughput_metrics(rows) -> dict:
         for k, v in r.items():
             if isinstance(v, bool) or not isinstance(v, (int, float)):
                 continue
-            if "speedup" in k or "hit_rate" in k:
+            if "speedup" in k or "hit_rate" in k or k == "kv_compression":
                 out[f"{ident}.{k}"] = float(v)
             elif k == "throughput_tok_s" and v > 0:
                 if base_tp is None:

@@ -24,6 +24,7 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
+import jax.numpy as jnp
 
 from repro.config import get_arch
 from repro.launch.train import train
@@ -42,18 +43,30 @@ def main() -> None:
     # the serving side: submit requests to a queue; the session stacks
     # same-length admissions into one prefill, streams long prompts into
     # the shared KV page pool in chunks interleaved with decode steps, and
-    # replans through the same PlanCache whenever the request mix shifts
+    # replans through the same PlanCache whenever the request mix shifts.
+    # Every prompt here opens with the same 8-token preamble (a system
+    # prompt), so with prefix sharing on, later admissions map the
+    # preamble's page read-shared instead of re-prefilling it — and grow
+    # admission allocates decode pages as they are written instead of
+    # reserving max_new_tokens up front (DESIGN.md §16)
     serving = ServingSession(
         ServingConfig(arch="qwen3-0.6b", max_slots=4, cache_len=32,
-                      page_size=8, prefill_chunk=8)
+                      page_size=8, prefill_chunk=8,
+                      prefix_sharing=True, kv_admission="grow")
     )
     rng = jax.random.PRNGKey(0)
+    preamble = jax.random.randint(
+        jax.random.fold_in(rng, 99), (8,), 0, serving.model.cfg.vocab
+    )
     for rid in range(6):
-        plen = 8 if rid < 4 else 12  # the code prompts stream in chunks
-        prompt = jax.random.randint(
-            jax.random.fold_in(rng, rid), (plen,), 0, serving.model.cfg.vocab
+        plen = 12 if rid < 4 else 16  # the code prompts stream in chunks
+        suffix = jax.random.randint(
+            jax.random.fold_in(rng, rid), (plen - 8,), 0,
+            serving.model.cfg.vocab,
         )
-        serving.submit(Request(rid=rid, tokens=prompt, max_new_tokens=6,
+        serving.submit(Request(rid=rid,
+                               tokens=jnp.concatenate([preamble, suffix]),
+                               max_new_tokens=6,
                                family="chat" if rid < 4 else "code"))
     while serving.busy:
         serving.step()
@@ -63,6 +76,10 @@ def main() -> None:
           f"chunks; kv high-water {m['kv_page_hw_tokens']} of "
           f"{m['kv_slab_tokens']} slab tokens; {m['replans']} replans "
           f"{m['replan_modes']}")
+    print(f"prefix sharing: hit rate {m['prefix_hit_rate']:.2f} "
+          f"({m['kv_shared_maps']} pages mapped instead of prefilled), "
+          f"kv compression {m['kv_compression']:.2f}x, "
+          f"{m['kv_grow_allocs']} pages grown on write")
 
     # the fleet tier: two duplicate training jobs share one cluster — the
     # lease arbiter carves disjoint device blocks, both plan against

@@ -329,6 +329,7 @@ def serving_mix_workload(
     tower: Optional[TowerSpec] = None,
     towers: Optional[Dict[str, TowerSpec]] = None,
     prefill_chunk: int = 0,
+    prefix_hit_rate: float = 0.0,
 ) -> TaskGraph:
     """The active request mix of a serving session as a planner TaskGraph.
 
@@ -347,6 +348,13 @@ def serving_mix_workload(
     (the op_type carries the chunk width, so chunked and one-shot plans
     never alias in the PlanCache).
 
+    ``prefix_hit_rate`` models prefix sharing: the observed fraction of
+    prompt positions served by page mapping instead of prefill compute.
+    It shrinks every bucket's prefill length to the expected *suffix*
+    (quantized to quarters so metric jitter cannot thrash the PlanCache;
+    the op_type carries the quantized rate so shared and unshared plans
+    never alias).
+
     Families key heterogeneity: a NEW family adds a component and reshapes
     every MetaLevel (incremental reuse finds nothing to keep — a full
     replan), while a count/bucket drift inside known families only changes
@@ -361,6 +369,9 @@ def serving_mix_workload(
         raise ValueError("serving mix is empty: nothing to plan")
     base = tower or DEFAULT_SERVING_TOWER
     fam_tower = dict(towers or {})
+    # quantize the hit rate to quarters, capped below 1.0 (even a perfectly
+    # hot prefix leaves >= 1 suffix position to prefill)
+    hit_q = min(max(round(float(prefix_hit_rate) * 4) / 4, 0.0), 0.75)
 
     def _prefill_comp(fam: str, name: str, seq_chunks: int) -> ComponentSpec:
         t = fam_tower.get(fam, base)
@@ -372,6 +383,8 @@ def serving_mix_workload(
             )
 
         marker = f"c{prefill_chunk}" if seq_chunks > 1 else ""
+        if hit_q > 0:
+            marker += f"h{int(hit_q * 100)}"
         return ComponentSpec(
             name=name,
             n_layers=t.n_layers * seq_chunks,
@@ -385,19 +398,22 @@ def serving_mix_workload(
     comps: List[ComponentSpec] = []
     prefill_of: Dict[Tuple[str, int], Tuple[str, int]] = {}
     for fam, bucket, _ in sorted(mix):
+        # the prefill the data plane actually runs is the expected SUFFIX:
+        # shared-prefix positions arrive by page mapping, not compute
+        eff = max(1, int(round(bucket * (1.0 - hit_q))))
         n_chunks = (
-            -(-bucket // prefill_chunk)
-            if prefill_chunk and bucket > prefill_chunk
+            -(-eff // prefill_chunk)
+            if prefill_chunk and eff > prefill_chunk
             else 1
         )
         if n_chunks > 1:
             # chunked tower: per-bucket component (chunk count depends on
             # the bucket), seq shrinks to the chunk width
             name = f"{fam}_prefill_p{bucket}"
-            seq = min(bucket, prefill_chunk)
+            seq = min(eff, prefill_chunk)
         else:
             name = f"{fam}_prefill"
-            seq = bucket
+            seq = eff
         prefill_of[(fam, bucket)] = (name, seq)
         if all(c.name != name for c in comps):
             comps.append(_prefill_comp(fam, name, n_chunks))

@@ -41,13 +41,22 @@ from ..serving import Request, ServingConfig, ServingSession
 
 def _build_requests(session: ServingSession, *, n_requests: int,
                     prompt_len: int, gen_len: int, seed: int,
-                    arrival_every: float) -> list:
+                    arrival_every: float, shared_prefix: int = 0) -> list:
     cfg = session.model.cfg
     rng = jax.random.PRNGKey(seed + 1)
+    prefix = None
+    if shared_prefix:
+        # every request opens with the same system-prompt-like prefix and
+        # diverges into a private suffix — the prefix-sharing workload
+        prefix = jax.random.randint(
+            jax.random.fold_in(rng, 10**6), (shared_prefix,), 0, cfg.vocab
+        )
     reqs = []
     for i in range(n_requests):
         key = jax.random.fold_in(rng, i)
         toks = jax.random.randint(key, (prompt_len,), 0, cfg.vocab)
+        if prefix is not None:
+            toks = jnp.concatenate([prefix, toks[shared_prefix:]])
         extras: Dict[str, Any] = {}
         if cfg.is_encdec:
             extras["frames"] = jax.random.normal(
@@ -90,6 +99,10 @@ def serve(
     prefill_chunk: int = 0,
     prefill_duty: float = 1.0,
     batched_prefill: bool = True,
+    prefix_sharing: bool = False,
+    kv_admission: str = "reserve",
+    shared_prefix: int = 0,
+    cache_dtype: str = "bfloat16",
 ) -> Dict[str, Any]:
     """Serve ``n_requests`` random prompts; returns tokens + metrics."""
     cfg_full = get_arch(arch)
@@ -111,11 +124,15 @@ def serve(
             prefill_chunk=prefill_chunk,
             prefill_duty=prefill_duty,
             batched_prefill=batched_prefill,
+            prefix_sharing=prefix_sharing,
+            kv_admission=kv_admission,
+            cache_dtype=cache_dtype,
         )
     )
     reqs = _build_requests(
         session, n_requests=n_requests, prompt_len=prompt_len,
         gen_len=gen_len, seed=seed, arrival_every=arrival_every,
+        shared_prefix=shared_prefix,
     )
     t0 = time.perf_counter()
     metrics = session.run(reqs)
@@ -148,11 +165,67 @@ def serve(
                 f"{metrics['kv_slab_tokens']}-token slab footprint "
                 f"({100 * metrics['kv_mem_saving']:.0f}% saved)"
             )
+        if metrics.get("prefix_sharing"):
+            print(
+                f"[serve] prefix sharing: prefix_hit_rate="
+                f"{metrics['prefix_hit_rate']:.3f} "
+                f"({metrics['prefix_hits']}/{metrics['prefix_requests']} "
+                f"requests, {metrics['prefix_hit_tokens']} tokens mapped); "
+                f"kv_compression={metrics['kv_compression']:.2f}x, "
+                f"{metrics['kv_shared_maps']} shared maps, "
+                f"{metrics['kv_cow_forks']} cow forks"
+            )
+        if metrics.get("kv_admission") == "grow":
+            print(
+                f"[serve] grow admission: {metrics['kv_grow_allocs']} "
+                f"pages grown, {metrics['kv_grow_defers']} paused steps, "
+                f"{metrics['kv_preemptions']} preemptions"
+            )
         sample = out_tokens[0][:12].tolist() if len(done) else []
         print(f"[serve] generated {metrics['output_tokens']} tokens; "
               f"sample: {sample}")
     # metrics already carries prefill_seconds/decode_seconds from the batcher
     return {"arch": arch, "tokens": out_tokens, **metrics}
+
+
+def prefix_smoke(args) -> int:
+    """The CI prefix-smoke contract: serve one shared-prefix trace twice —
+    paged+shared (grow admission) and the unshared paged baseline — and
+    fail unless sharing actually hit (``prefix_hit_rate > 0``), its KV
+    high-water came in strictly below the unshared run, and the generated
+    tokens are EXACTLY the baseline's (fp32 cache pins the arithmetic)."""
+    common = dict(
+        reduced_cfg=args.reduced,
+        n_requests=args.requests,
+        prompt_len=args.prompt_len,
+        gen_len=args.gen_len,
+        seed=args.seed,
+        max_slots=args.slots or None,
+        replan="off",
+        kv_layout="paged",
+        page_size=args.page_size,
+        prefill_chunk=args.prefill_chunk,
+        shared_prefix=args.shared_prefix,
+        cache_dtype="float32",
+    )
+    base = serve(args.arch, **common)
+    shared = serve(
+        args.arch, prefix_sharing=True, kv_admission="grow", **common
+    )
+    exact = (
+        base["tokens"].shape == shared["tokens"].shape
+        and bool(jnp.array_equal(base["tokens"], shared["tokens"]))
+    )
+    hit = shared.get("prefix_hit_rate", 0.0)
+    hw_base, hw_shared = base["kv_page_hw"], shared["kv_page_hw"]
+    print(
+        f"[prefix-smoke] prefix_hit_rate={hit:.3f} "
+        f"kv_page_hw shared={hw_shared} unshared={hw_base} "
+        f"token_exact={exact}"
+    )
+    ok = exact and hit > 0 and hw_shared < hw_base
+    print(f"[prefix-smoke] {'PASSED' if ok else 'FAILED'}")
+    return 0 if ok else 1
 
 
 def main() -> None:
@@ -184,7 +257,22 @@ def main() -> None:
                     help="prefill chunks allowed per decode step")
     ap.add_argument("--no-batched-prefill", action="store_true",
                     help="batch-1 admission prefills (the PR 3 join path)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="map hot prompt prefixes through the radix index "
+                         "instead of re-prefilling them (paged only)")
+    ap.add_argument("--kv-admission", choices=("reserve", "grow"),
+                    default="reserve",
+                    help="page admission: reserve the full reach up front, "
+                         "or grow pages as decode writes them")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every request the same first N prompt tokens")
+    ap.add_argument("--prefix-smoke", action="store_true",
+                    help="CI gate: serve a shared-prefix trace with and "
+                         "without sharing; fail unless hits > 0, KV "
+                         "high-water shrinks, and tokens match exactly")
     args = ap.parse_args()
+    if args.prefix_smoke:
+        sys.exit(prefix_smoke(args))
     out = serve(
         args.arch,
         reduced_cfg=args.reduced,
@@ -202,6 +290,9 @@ def main() -> None:
         prefill_chunk=args.prefill_chunk,
         prefill_duty=args.prefill_duty,
         batched_prefill=not args.no_batched_prefill,
+        prefix_sharing=args.prefix_sharing,
+        kv_admission=args.kv_admission,
+        shared_prefix=args.shared_prefix,
     )
     if out["output_tokens"] <= 0 or out["requests"] <= 0:
         print("[serve] FAILED: no output tokens generated", file=sys.stderr)

@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .pages import PagePool, pages_needed
+from .pages import PagePool, PrefixHit, PrefixIndex, pages_needed
 from .queue import Request
 
 
@@ -167,6 +167,44 @@ def _write_pages_jit(layout):
     while len(_WRITE_PAGES_JITS) > _WRITE_PAGES_JITS_MAX:
         _WRITE_PAGES_JITS.popitem(last=False)
     return _WRITE_PAGES_JITS[key]
+
+
+def _copy_page_impl(cache, src, dst, layout):
+    """Copy physical page ``src`` over ``dst`` in every KV pool leaf — the
+    device half of a copy-on-write fork: the divergence page's matched head
+    stays readable through the new private page while the donor's copy is
+    untouched.  State leaves pass through."""
+
+    def cp(leaf, lay):
+        kind, ax = lay[:-1], int(lay[-1])
+        if kind != "kv":
+            return leaf
+        if ax == 0:
+            return leaf.at[dst].set(leaf[src])
+        return leaf.at[:, dst].set(leaf[:, src])
+
+    return jax.tree.map(cp, cache, layout)
+
+
+#: jitted copy_page per layout tree — shared across batcher instances,
+#: donated so CoW forks update the pool in place
+_COPY_PAGE_JITS: "OrderedDict[Any, Any]" = OrderedDict()
+
+
+def _copy_page_jit(layout):
+    leaves, treedef = jax.tree.flatten(layout)
+    key = (tuple(leaves), treedef)
+    if key not in _COPY_PAGE_JITS:
+        _COPY_PAGE_JITS[key] = jax.jit(
+            lambda cache, src, dst, layout=layout: _copy_page_impl(
+                cache, src, dst, layout
+            ),
+            donate_argnums=(0,),
+        )
+    _COPY_PAGE_JITS.move_to_end(key)
+    while len(_COPY_PAGE_JITS) > _WRITE_PAGES_JITS_MAX:
+        _COPY_PAGE_JITS.popitem(last=False)
+    return _COPY_PAGE_JITS[key]
 
 
 class CacheIO:
@@ -319,6 +357,8 @@ class SlotState:
     prompt_total: int  # prompt tokens + stub positions (vlm embeds)
     generated: List[int] = field(default_factory=list)
     prefilling: bool = False  # mapped but chunks still streaming in
+    prefix_hit: int = 0  # prompt positions mapped from the prefix index
+    paused: bool = False  # grow admission: stalled on a free page
     t_join: float = 0.0
     t_done: float = 0.0
 
@@ -334,20 +374,25 @@ class SlotState:
 
 @dataclass
 class PrefillJob:
-    """One admitted group whose prompt streams in chunk by chunk."""
+    """One admitted group whose prompt streams in chunk by chunk.
+
+    ``base`` is the prefix-shared offset: positions ``[0, base)`` arrived
+    by page mapping (no compute), so ``tokens`` holds only the suffix and
+    each chunk scores at absolute position ``base + progress``."""
 
     states: List[SlotState]
-    tokens: Any  # (k, prompt_total) int32, stacked
+    tokens: Any  # (k, prompt_total - base) int32, stacked suffix
     chunk: int
-    progress: int = 0  # positions already prefilled
+    base: int = 0  # positions provided by shared prefix pages
+    progress: int = 0  # suffix positions already prefilled
 
     @property
     def prompt_total(self) -> int:
-        return int(self.tokens.shape[1])
+        return self.base + int(self.tokens.shape[1])
 
     @property
     def remaining(self) -> int:
-        return self.prompt_total - self.progress
+        return int(self.tokens.shape[1]) - self.progress
 
 
 class ContinuousBatcher:
@@ -367,11 +412,19 @@ class ContinuousBatcher:
         kv_pages: int = 0,
         prefill_chunk: int = 0,
         batched_prefill: bool = True,
+        prefix_sharing: bool = False,
+        kv_admission: str = "reserve",
     ):
         if kv_layout not in ("slab", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if prefill_chunk and kv_layout != "paged":
             raise ValueError("chunked prefill requires kv_layout='paged'")
+        if kv_admission not in ("reserve", "grow"):
+            raise ValueError(f"unknown kv_admission {kv_admission!r}")
+        if kv_admission == "grow" and kv_layout != "paged":
+            raise ValueError("kv_admission='grow' requires kv_layout='paged'")
+        if prefix_sharing and kv_layout != "paged":
+            raise ValueError("prefix_sharing requires kv_layout='paged'")
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -422,6 +475,31 @@ class ContinuousBatcher:
                 cache_dtype=cache_dtype,
             )
         self.io = CacheIO(self._layout)
+        self.grow = kv_admission == "grow" and self.pool is not None
+        self.kv_admission = "grow" if self.grow else "reserve"
+        # sharing rides the chunked-prefill path (the suffix prefill is one
+        # chunk at base offset), so it needs both a KV pool and a
+        # chunk-capable (all-attention) model
+        self.prefix_sharing = (
+            prefix_sharing
+            and self.pool is not None
+            and getattr(model, "supports_chunked_prefill", False)
+        )
+        self.index: Optional[PrefixIndex] = (
+            PrefixIndex(self.pool) if self.prefix_sharing else None
+        )
+        self._copy_page = (
+            _copy_page_jit(self._layout) if self.prefix_sharing else None
+        )
+        self._preempted: List[Request] = []
+        self._pending_forks: Dict[int, Tuple[int, int]] = {}  # slot→(src,dst)
+        self.preemptions = 0
+        self.prefix_requests = 0  # sharing-eligible admissions
+        self.prefix_hits = 0  # admissions that mapped >= 1 shared position
+        self.prefix_hit_tokens = 0  # prompt positions mapped, not prefilled
+        self.prompt_tokens = 0  # prompt positions admitted (denominator)
+        self.logical_hw = 0  # max logical pages mapped (shared counted per
+        #                      reader — what an unshared run would allocate)
 
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
         self.pos = jnp.zeros((max_slots,), jnp.int32)
@@ -448,7 +526,10 @@ class ContinuousBatcher:
 
     @property
     def n_decoding(self) -> int:
-        return sum(s is not None and not s.prefilling for s in self.slots)
+        return sum(
+            s is not None and not s.prefilling and not s.paused
+            for s in self.slots
+        )
 
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -477,6 +558,7 @@ class ContinuousBatcher:
         if self.pool is not None:
             hw = self.pool.high_water_tokens()
             out.update(
+                kv_admission=self.kv_admission,
                 kv_page_size=self.page_size,
                 kv_pages=self.pool.n_pages,
                 kv_pages_in_use=self.pool.in_use,
@@ -484,8 +566,32 @@ class ContinuousBatcher:
                 kv_page_hw_tokens=hw,
                 kv_mem_saving=1.0 - hw / max(slab_tokens, 1),
                 kv_defers=self.pool.defers,
+                kv_grow_allocs=self.pool.grow_allocs,
+                kv_grow_defers=self.pool.grow_defers,
+                kv_preemptions=self.preemptions,
+            )
+        if self.index is not None:
+            out.update(
+                prefix_sharing=True,
+                prefix_requests=self.prefix_requests,
+                prefix_hits=self.prefix_hits,
+                prefix_hit_tokens=self.prefix_hit_tokens,
+                prefix_hit_rate=self.observed_hit_rate(),
+                kv_shared_maps=self.pool.shared_maps,
+                kv_cow_forks=self.pool.cow_forks,
+                # logical/physical: how many pages an unshared run would
+                # have needed at this run's logical high-water vs. the
+                # physical pages sharing actually touched
+                kv_compression=self.logical_hw / max(self.pool.high_water, 1),
+                prefix_index_nodes=len(self.index),
+                prefix_index_reclaimed=self.index.reclaimed,
             )
         return out
+
+    def observed_hit_rate(self) -> float:
+        """Fraction of admitted prompt positions served from the prefix
+        index instead of prefill compute (0.0 with sharing off)."""
+        return self.prefix_hit_tokens / max(self.prompt_tokens, 1)
 
     # ------------------------------------------------------------------ join
     def validate(self, req: Request) -> None:
@@ -527,22 +633,72 @@ class ContinuousBatcher:
             stub = int(jnp.asarray(req.extras["embeds"]).shape[0])
         return req.prompt_len + stub + req.max_new_tokens - 1
 
+    def _admit_pages(self, req: Request) -> int:
+        """Pages admission must map up front: the full reach under reserve,
+        only the prompt's pages under grow (decode grows the rest)."""
+        if self.grow:
+            return min(
+                pages_needed(req.prompt_len + self._stub(req), self.page_size),
+                self.pages_per_slot,
+            )
+        return min(
+            pages_needed(self._need_tokens(req), self.page_size),
+            self.pages_per_slot,
+        )
+
+    @staticmethod
+    def _stub(req: Request) -> int:
+        if "embeds" in req.extras:
+            return int(jnp.asarray(req.extras["embeds"]).shape[0])
+        return 0
+
     def can_admit(self, req: Request) -> bool:
-        """A free slot AND (paged) enough pool pages for the request's full
-        reach — reservation-based admission can defer but never livelock."""
+        """A free slot AND (paged) enough pool pages — free or reclaimable
+        from the prefix index — for the admission mapping.  Conservative:
+        ignores the prefix credit an actual lookup might grant."""
         if not self.free_slots():
             return False
         if self.pool is not None:
-            ok = self.pool.can_alloc(
-                min(pages_needed(self._need_tokens(req), self.page_size),
-                    self.pages_per_slot)
-            )
+            need = self._admit_pages(req)
+            avail = self.pool.capacity - self.pool.in_use
+            if self.index is not None:
+                avail += self.index.reclaimable()
+            ok = need <= avail
             if not ok and req.rid != self._last_defer_rid:
                 # count deferral EVENTS, not per-step admission polls
                 self.pool.defers += 1
                 self._last_defer_rid = req.rid
             return ok
         return True
+
+    def _lookup(self, req: Request) -> Optional[PrefixHit]:
+        """Consult the prefix index for a sharing-eligible request (token
+        prompts only — extras change what a position's KV means)."""
+        if self.index is None or req.extras:
+            return None
+        hit = self.index.lookup(np.asarray(req.tokens).tolist())
+        return hit if (hit.pages or hit.fork is not None) else None
+
+    def _admit_alloc(self, n: int, req: Request) -> Optional[List[int]]:
+        """Allocate ``n`` private pages, reclaiming index-only pages to
+        cover a shortfall; ``None`` (defer) when even reclaim cannot."""
+        if n == 0:
+            return []
+        if not self.pool.can_alloc(n) and self.index is not None:
+            free = self.pool.capacity - self.pool.in_use
+            self.index.reclaim(n - free)
+        if not self.pool.can_alloc(n):
+            return None
+        return self.pool.alloc(n, rid=req.rid)
+
+    def _note_logical(self) -> None:
+        """Track the logical-page high water: every slot's mapping counted
+        per reader — what an unshared, reserve-free run would hold."""
+        if self.pool is None:
+            return
+        live = sum(len(p) for p in self._slot_pages.values())
+        if live > self.logical_hw:
+            self.logical_hw = live
 
     def join(self, req: Request) -> int:
         """Admit one request on its own (the PR 3 batch-1 prefill path)."""
@@ -566,36 +722,65 @@ class ContinuousBatcher:
         admitted: List[Tuple[Request, int]] = []
         for req in reqs:
             self.validate(req)
-            if not self.can_admit(req):
+            if not self.free_slots():
                 break
+            stub = self._stub(req)
+            hit = self._lookup(req)
             slot = self.free_slots()[0]
             if self.pool is not None:
-                n = min(
-                    pages_needed(self._need_tokens(req), self.page_size),
-                    self.pages_per_slot,
-                )
-                pages = self.pool.alloc(n, rid=req.rid)
-                assert pages is not None  # can_admit checked
-                self._slot_pages[slot] = pages
+                shared = list(hit.pages) if hit else []
+                n_new = self._admit_pages(req) - len(shared)
+                pages = self._admit_alloc(n_new, req)
+                if pages is None:
+                    # pool pressure defers the tail, FIFO preserved; count
+                    # deferral EVENTS, not per-step admission polls
+                    if req.rid != self._last_defer_rid:
+                        self.pool.defers += 1
+                        self._last_defer_rid = req.rid
+                    break
+                for p in shared:
+                    self.pool.ref(p)  # read-shared map-in: refcount only
+                if hit is not None and hit.fork is not None:
+                    # CoW fork: the divergence page's matched head is valid
+                    # prefix KV, but this request's own prefill/decode
+                    # writes land in the same logical page — it must be
+                    # copied into the first private page.  The copy is
+                    # DEFERRED to this request's suffix-prefill start: at
+                    # admission the donor may not have written the page
+                    # yet (FIFO prefill order guarantees it has by job
+                    # start).  Pin the source so eviction/reclaim cannot
+                    # free it in between.
+                    self.pool.cow_forks += 1
+                    self.pool.pin(hit.fork)
+                    self._pending_forks[slot] = (hit.fork, pages[0])
+                row = shared + pages  # logical order: prefix, then private
+                self._slot_pages[slot] = row
                 self._tables[slot] = 0
-                self._tables[slot, : len(pages)] = pages
-            stub = 0
-            if "embeds" in req.extras:
-                stub = int(jnp.asarray(req.extras["embeds"]).shape[0])
+                self._tables[slot, : len(row)] = row
             state = SlotState(
                 req=req,
                 slot=slot,
                 prompt_total=req.prompt_len + stub,
+                prefix_hit=(hit.tokens if hit else 0),
                 t_join=time.perf_counter(),
             )
             self.slots[slot] = state
             self._last_defer_rid = None
+            if self.index is not None and not req.extras:
+                self.prefix_requests += 1
+                self.prompt_tokens += state.prompt_total
+                if state.prefix_hit:
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += state.prefix_hit
+            self._index_insert(state)
+            self._note_logical()
             admitted.append((req, slot))
 
         if not admitted:
             return []
 
-        # group by stacked-prefill compatibility: identical prompt_total and
+        # group by stacked-prefill compatibility: identical prompt_total,
+        # identical prefix-hit offset (the suffix shapes must agree) and
         # extras signature → rows are batch-independent, so a stacked
         # prefill is token-identical to k solo prefills
         groups: Dict[Tuple, List[SlotState]] = {}
@@ -604,6 +789,7 @@ class ContinuousBatcher:
             state = self.slots[slot]
             sig = (
                 state.prompt_total,
+                state.prefix_hit,
                 tuple(sorted(
                     (k, tuple(jnp.asarray(v).shape))
                     for k, v in req.extras.items()
@@ -623,20 +809,27 @@ class ContinuousBatcher:
 
         for sig in order:
             states = groups[sig]
+            base = states[0].prefix_hit
+            suffix_len = states[0].prompt_total - base
             chunkable = (
                 self.prefill_chunk > 0
                 and not states[0].req.extras
-                and states[0].prompt_total > self.prefill_chunk
+                and suffix_len > self.prefill_chunk
             )
-            if chunkable:
+            if base or chunkable:
+                # prefix hits always take the chunk path: the suffix
+                # prefill is a chunk (or a few) scored at offset ``base``
+                # over the shared pages already mapped in
                 for s in states:
                     s.prefilling = True
                 toks = jnp.stack(
-                    [jnp.asarray(s.req.tokens, jnp.int32) for s in states]
+                    [jnp.asarray(s.req.tokens, jnp.int32)[base:]
+                     for s in states]
                 )
                 self._jobs.append(
                     PrefillJob(states=states, tokens=toks,
-                               chunk=self.prefill_chunk)
+                               chunk=(self.prefill_chunk or suffix_len),
+                               base=base)
                 )
             else:
                 try:
@@ -645,6 +838,7 @@ class ContinuousBatcher:
                     # roll the group's capacity back: a failing prefill must
                     # not leak slots or pool pages (the request itself is
                     # lost, exactly like the PR 3 join path)
+                    self._index_evict_states(states)
                     for st in states:
                         self._release(st)
                     if self.paged:
@@ -659,6 +853,9 @@ class ContinuousBatcher:
         rollback)."""
         if self.slots[state.slot] is state:
             self.slots[state.slot] = None
+        pf = self._pending_forks.pop(state.slot, None)
+        if pf is not None and self.pool is not None:
+            self.pool.release([pf[0]])  # unpin the never-copied CoW source
         pages = self._slot_pages.pop(state.slot, None)
         if pages is not None and self.pool is not None:
             self.pool.free(pages)
@@ -666,10 +863,12 @@ class ContinuousBatcher:
 
     def _refresh_tables(self) -> None:
         """Rebuild the decode-visible page table: occupied non-prefilling
-        slots expose their mapping, everything else points at trash."""
+        slots expose their mapping; everything else — free, still
+        prefilling, or paused on grow pressure — points at trash so its
+        fixed-shape decode write cannot corrupt a mapped page."""
         self._visible = self._tables.copy()
         for i, s in enumerate(self.slots):
-            if s is None or s.prefilling:
+            if s is None or s.prefilling or s.paused:
                 self._visible[i] = 0
         self._visible_dev = jnp.asarray(self._visible)
 
@@ -715,16 +914,22 @@ class ContinuousBatcher:
             return False
         job = self._jobs[0]
         t0 = time.perf_counter()
+        if job.progress == 0:
+            # the donor prefills ahead of this job (FIFO), so its
+            # divergence pages hold valid KV now — run the pending CoW
+            # copies before the first suffix chunk reads or writes them
+            self._run_forks(job.states)
         width = min(job.chunk, job.remaining)
         toks = job.tokens[:, job.progress : job.progress + width]
         rows = jnp.asarray(
             self._tables[np.asarray([s.slot for s in job.states])]
         )
-        fn = _chunk_fn(self.model, job.progress)
+        fn = _chunk_fn(self.model, job.base + job.progress)
         try:
             logits, self.cache = fn(self.params, toks, self.cache, rows)
         except Exception:
             self._jobs.pop(0)
+            self._index_evict_states(job.states)
             for st in job.states:
                 self._release(st)
             self._refresh_tables()
@@ -737,6 +942,19 @@ class ContinuousBatcher:
         if job.remaining == 0:
             self._finish_job(job, logits)
         return True
+
+    def _run_forks(self, states: List[SlotState]) -> None:
+        """Execute the deferred CoW copies for ``states`` and unpin the
+        donor pages."""
+        for s in states:
+            pf = self._pending_forks.pop(s.slot, None)
+            if pf is None:
+                continue
+            src, dst = pf
+            self.cache = self._copy_page(
+                self.cache, jnp.int32(src), jnp.int32(dst)
+            )
+            self.pool.release([src])
 
     def _finish_job(self, job: PrefillJob, logits) -> None:
         self._jobs.pop(0)
@@ -756,6 +974,42 @@ class ContinuousBatcher:
                 self._finished.append(s)
         self._refresh_tables()
 
+    def _index_insert(self, s: SlotState) -> None:
+        """Index a request's full prompt pages at ADMISSION time, before
+        its prefill has written them — so siblings of the same burst share
+        intra-batch (the first burst is where a hot prefix is hottest).
+
+        Safe because prefill order is FIFO: inline groups run during the
+        same ``admit_many`` call, chunk jobs drain in admission order, and
+        a sharer's first read of a prefix page (its suffix prefill's
+        gather) therefore happens after the donor's write.  The failure
+        paths drop these optimistic entries via
+        :meth:`_index_evict_states` before releasing the pages."""
+        if self.index is None or s.req.extras:
+            return
+        n_full = s.prompt_total // self.page_size
+        if n_full == 0:
+            return
+        self.index.insert(
+            np.asarray(s.req.tokens).tolist()[: n_full * self.page_size],
+            [int(p) for p in self._tables[s.slot, :n_full]],
+        )
+
+    def _index_evict_states(self, states: List[SlotState]) -> None:
+        """Un-index the pages a failing prefill group OWNED (never the
+        read-shared prefix pages of an earlier donor — those are valid):
+        they were indexed optimistically at admission and will never be
+        written now."""
+        if self.index is None:
+            return
+        bad = set()
+        for st in states:
+            for p in self._slot_pages.get(st.slot, []):
+                if self.pool.owner(p) == st.req.rid:
+                    bad.add(p)
+        if bad:
+            self.index.evict_pages(bad)
+
     # ------------------------------------------------------------------ step
     def step(self) -> List[SlotState]:
         """Decode ONE token for every decoding slot; return evictions.
@@ -767,6 +1021,8 @@ class ContinuousBatcher:
         overwrites.
         """
         finished, self._finished = self._finished, []
+        if self._grow_pages():
+            self._refresh_tables()
         if self.n_decoding == 0:
             return finished
         t0 = time.perf_counter()
@@ -781,7 +1037,10 @@ class ContinuousBatcher:
             )
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         active = np.array(
-            [s is not None and not s.prefilling for s in self.slots],
+            [
+                s is not None and not s.prefilling and not s.paused
+                for s in self.slots
+            ],
             dtype=np.int32,
         )
         self.tokens = jnp.where(jnp.asarray(active, bool), next_tok, self.tokens)
@@ -791,7 +1050,7 @@ class ContinuousBatcher:
         self.decode_seconds += time.perf_counter() - t0
         evicted = False
         for s in list(self.slots):
-            if s is None or s.prefilling:
+            if s is None or s.prefilling or s.paused:
                 continue
             s.generated.append(int(toks[s.slot]))
             if s.done:
@@ -802,6 +1061,104 @@ class ContinuousBatcher:
             self._refresh_tables()
         return finished
 
+    # ------------------------------------------------------------------ grow
+    def _grow_pages(self) -> bool:
+        """Grow admission: map the page each decoding slot's NEXT decode
+        write lands in, called before every decode dispatch.  A slot whose
+        growth cannot be satisfied — even after index reclaim and
+        preemption — pauses: its table row goes dark (writes hit trash, its
+        position does not advance) until a page frees up.  Returns True if
+        any table changed."""
+        if not self.grow or self.pool is None:
+            return False
+        changed = False
+        for s in list(self.slots):
+            if s is None or s.prefilling:
+                continue
+            if self.slots[s.slot] is not s:
+                continue  # preempted by an earlier slot's growth this pass
+            # the next decode step writes KV at this absolute position
+            need_pos = s.prompt_total + len(s.generated) - 1
+            lp = need_pos // self.page_size
+            row = self._slot_pages.get(s.slot, [])
+            if lp < len(row) or lp >= self.pages_per_slot:
+                if s.paused:
+                    s.paused = False
+                    changed = True
+                continue
+            page = self._grow_alloc(s)
+            if self.slots[s.slot] is not s:
+                # the slot went away under the allocation (lone decoder
+                # preempted itself) — a page handed out anyway must not leak
+                if page is not None:
+                    self.pool.release([page])
+                changed = True
+                continue
+            if page is None:
+                if not s.paused:
+                    changed = True
+                s.paused = True
+                self.pool.grow_defers += 1
+                continue
+            row.append(page)
+            self._slot_pages[s.slot] = row
+            self._tables[s.slot, lp] = page
+            self.pool.grow_allocs += 1
+            if s.paused:
+                s.paused = False
+            changed = True
+            self._note_logical()
+        return changed
+
+    def _grow_alloc(self, s: SlotState) -> Optional[int]:
+        """One page for slot ``s``'s growth, through the recovery ladder:
+        free list → index reclaim → preempt the cheapest-to-redo decoding
+        victim (fewest generated tokens; greedy decoding regenerates its
+        exact tokens on re-admission) → None (pause)."""
+        pool = self.pool
+        if not pool.can_alloc(1) and self.index is not None:
+            self.index.reclaim(1)
+        if not pool.can_alloc(1):
+            victims = sorted(
+                (
+                    v
+                    for v in self.slots
+                    if v is not None and not v.prefilling and v is not s
+                ),
+                key=lambda v: len(v.generated),
+            )
+            if not victims and self.n_decoding <= 1:
+                # the lone decoder cannot wait on anyone: requeue ITSELF
+                # for a full re-prefill rather than livelock
+                victims = [s]
+            for v in victims:
+                self._preempt(v)
+                if v is s:
+                    return None
+                if pool.can_alloc(1):
+                    break
+                if self.index is not None:
+                    self.index.reclaim(1)
+                    if pool.can_alloc(1):
+                        break
+        if not pool.can_alloc(1):
+            return None
+        pages = pool.alloc(1, rid=s.req.rid)
+        return pages[0] if pages else None
+
+    def _preempt(self, state: SlotState) -> None:
+        """Release a slot under grow pressure and requeue its request (the
+        session re-admits it for a full re-prefill)."""
+        self._release(state)
+        self._preempted.append(state.req)
+        self.preemptions += 1
+
+    def take_preempted(self) -> List[Request]:
+        """Drain requests bumped by grow-pressure preemption; the caller
+        requeues them at the front of the admission queue."""
+        out, self._preempted = self._preempted, []
+        return out
+
     # ----------------------------------------------------------------- evict
     def _evict(self, state: SlotState) -> None:
         """Free the slot the step its request finishes (eos-aware: an early
@@ -811,6 +1168,9 @@ class ContinuousBatcher:
         state.t_done = time.perf_counter()
         if self.slots[state.slot] is state:
             self.slots[state.slot] = None
+            pf = self._pending_forks.pop(state.slot, None)
+            if pf is not None and self.pool is not None:
+                self.pool.release([pf[0]])
             pages = self._slot_pages.pop(state.slot, None)
             if pages is not None and self.pool is not None:
                 self.pool.free(pages)

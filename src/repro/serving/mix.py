@@ -102,6 +102,11 @@ class MixTracker:
     def joined(self, rid: int) -> None:
         self._active[rid] = self._pending.pop(rid)
 
+    def is_active(self, rid: int) -> bool:
+        """True once ``rid`` joined a slot and has not completed — a
+        preempted-then-readmitted request must not be double-counted."""
+        return rid in self._active
+
     def completed(self, rid: int) -> None:
         self._active.pop(rid, None)
 

@@ -84,6 +84,13 @@ class ServingConfig:
     kv_layout: str = "paged"
     page_size: int = 16
     kv_pages: int = 0  # physical pages incl. trash page; 0 → full coverage
+    #: prefix sharing: map a hot prompt prefix's pages read-shared through
+    #: the radix index instead of re-prefilling them (paged, chunk-capable
+    #: archs; token-exact — DESIGN.md §16)
+    prefix_sharing: bool = False
+    #: "reserve" (map the full reach at admission, PR 5) | "grow" (map the
+    #: prompt's pages; decode grows one page as each is first written)
+    kv_admission: str = "reserve"
     # prefill: stacked same-length admission (one prefill call for k
     # requests), and — paged, all-attention archs — chunked prefill
     # interleaved with decode steps (DIP-style mixed waves)
@@ -132,6 +139,18 @@ class ServingConfig:
             raise ValueError(
                 "prefill_chunk requires kv_layout='paged' (chunks stream "
                 "into the page pool)"
+            )
+        if self.kv_admission not in ("reserve", "grow"):
+            raise ValueError(f"unknown kv_admission {self.kv_admission!r}")
+        if self.kv_admission == "grow" and self.kv_layout != "paged":
+            raise ValueError(
+                "kv_admission='grow' requires kv_layout='paged' (growth "
+                "maps pool pages)"
+            )
+        if self.prefix_sharing and self.kv_layout != "paged":
+            raise ValueError(
+                "prefix_sharing requires kv_layout='paged' (shared prefixes "
+                "are page mappings)"
             )
         # The slab-sizing bug class, rejected at the source: a config whose
         # admissible prompt + generation budget overruns cache_len would
@@ -218,6 +237,8 @@ class ServingSession:
             kv_pages=cfg.kv_pages,
             prefill_chunk=cfg.prefill_chunk,
             batched_prefill=cfg.batched_prefill,
+            prefix_sharing=cfg.prefix_sharing,
+            kv_admission=cfg.kv_admission,
         )
         self._duty_credit = 0.0
         self._tower = tower_from_arch(model.cfg, seq=cfg.cache_len)
@@ -243,6 +264,10 @@ class ServingSession:
                     # cannot chunk, so the planner never models chunked
                     # towers that won't execute
                     prefill_chunk=self.batcher.prefill_chunk,
+                    # observed prefix-sharing rate: shared positions arrive
+                    # by page mapping, so the planner should size prefill
+                    # towers for the suffix compute that actually runs
+                    prefix_hit_rate=self.batcher.observed_hit_rate(),
                 ),
                 callbacks=callbacks,
                 cache=plan_cache,
@@ -295,6 +320,10 @@ class ServingSession:
 
     def _admit(self) -> int:
         cfg = self.config
+        # grow-pressure preemptions rejoin at the FRONT of the queue: their
+        # full re-prefill (greedy decoding regenerates the exact tokens)
+        # should not wait behind the backlog that evicted them
+        self.queue.requeue_front(self.batcher.take_preempted())
         if cfg.admission == "static" and self.batcher.n_active > 0:
             return 0  # classic batch serving: drain before refilling
         free = len(self.batcher.free_slots())
@@ -324,6 +353,11 @@ class ServingSession:
 
     def _note_joined(self, reqs: Sequence[Request]) -> None:
         for req in reqs:
+            if self.mix.is_active(req.rid):
+                # re-admission after a grow-pressure preemption: the mix
+                # already counts this request; a second arrival event
+                # would double-plan it
+                continue
             self.mix.joined(req.rid)
             # joining is the mix-changing moment (a queued request's
             # submit-time arrival event may have drained steps ago without

@@ -352,6 +352,199 @@ def test_oversized_request_and_bad_policy_fail_fast():
         ServingConfig(replan="none")
 
 
+def test_page_pool_refcounts_free_only_at_zero():
+    """PagePool refcount semantics: a shared page survives its first
+    release and returns to the free list only when the LAST reader drops;
+    trash-page and double frees fail loudly; the prefix index's holds keep
+    pages allocated after the owning slot released them, and reclaim()
+    hands exactly those pages back."""
+    from repro.serving.pages import PagePool, PrefixIndex
+
+    pool = PagePool(6, 8)
+    pages = pool.alloc(2, rid=0)
+    assert pages is not None and pool.in_use == 2
+    assert pool.refcount(pages[0]) == 1
+    pool.ref(pages[0])  # a sharer maps the page read-shared
+    assert pool.refcount(pages[0]) == 2
+    pool.release([pages[0]])  # first reader gone: page must stay mapped
+    assert pool.in_use == 2 and pool.refcount(pages[0]) == 1
+    pool.release([pages[0]])  # last reader gone: page returns
+    assert pool.in_use == 1 and pool.refcount(pages[0]) == 0
+    with pytest.raises(ValueError, match="double free"):
+        pool.release([pages[0]])
+    with pytest.raises(ValueError, match="trash"):
+        pool.release([pool.TRASH])
+    with pytest.raises(ValueError, match="unmapped"):
+        pool.ref(pages[0])
+
+    # index holds: insert bumps the refcount, so the slot releasing its
+    # mapping does NOT free the page — only reclaim() (index pressure
+    # valve) or evict_pages() (failure path) returns it
+    index = PrefixIndex(pool)
+    held = pool.alloc(1, rid=1)
+    index.insert(list(range(8)), held)
+    assert pool.refcount(held[0]) == 2
+    pool.release(held)  # owning slot evicted
+    assert pool.in_use == 2, "index hold must keep the page allocated"
+    assert index.reclaimable() == 1
+    assert index.reclaim(1) == 1
+    assert pool.in_use == 1 and len(index) == 0  # only pages[1] remains
+    pool.release([pages[1]])
+    assert pool.in_use == 0
+
+
+def test_prefix_sharing_cow_fork_token_equivalence():
+    """Two requests whose prompts diverge MID-page: the sharer maps the
+    donor's fully-matched pages read-shared and forks the divergence page
+    copy-on-write — both must decode bit-identically to running alone
+    (the fork copy happens before the sharer's first suffix chunk reads
+    it, and the donor's page never sees the sharer's writes)."""
+    model, params = _model("qwen3-0.6b")
+    rng = jax.random.PRNGKey(5)
+    base = jax.random.randint(
+        jax.random.fold_in(rng, 0), (24,), 0, model.cfg.vocab
+    )
+    tail = jax.random.randint(
+        jax.random.fold_in(rng, 1), (4,), 0, model.cfg.vocab
+    )
+    reqs = [
+        Request(rid=0, tokens=base, max_new_tokens=5, arrival=0.0),
+        # shares base[:20], diverges inside the donor's third page [16:24)
+        Request(rid=1, tokens=jnp.concatenate([base[:20], tail]),
+                max_new_tokens=5, arrival=0.0),
+    ]
+    solo = {r.rid: _solo_tokens(model, params, r) for r in reqs}
+    sess = ServingSession(
+        ServingConfig(
+            max_slots=2, cache_len=CACHE_LEN, replan="off",
+            cache_dtype="float32", kv_layout="paged", page_size=8,
+            prefill_chunk=8, prefix_sharing=True, kv_admission="grow",
+        ),
+        model=model,
+        params=params,
+    )
+    sess.run(reqs, max_steps=500)
+    pool = sess.batcher.pool
+    assert pool.cow_forks >= 1, "mid-page divergence must fork"
+    assert pool.shared_maps >= 2, "two full pages map read-shared"
+    for r in reqs:
+        assert sess.results[r.rid].tokens == solo[r.rid], f"rid={r.rid}"
+
+
+def test_grow_admission_under_pool_pressure():
+    """Grow-on-write with a pool too small for every reach: decode grows
+    pages as positions are written; on pressure the batcher defers (pause
+    or preempt) instead of double-mapping, preempted requests requeue and
+    regenerate exactly (greedy decode), and every page comes back."""
+    model, params = _model("qwen3-0.6b")
+    rng = jax.random.PRNGKey(9)
+    reqs = [
+        Request(
+            rid=i,
+            tokens=jax.random.randint(
+                jax.random.fold_in(rng, i), (5,), 0, model.cfg.vocab
+            ),
+            max_new_tokens=16,  # writes reach page 3; admission maps ONE
+            arrival=0.0,
+        )
+        for i in range(3)
+    ]
+    solo = {r.rid: _solo_tokens(model, params, r) for r in reqs}
+    # 4 usable pages, 2 slots, and each request eventually wants 3 pages:
+    # concurrent decodes MUST hit grow pressure (6 > 4)
+    sess = ServingSession(
+        ServingConfig(
+            max_slots=2, cache_len=CACHE_LEN, replan="off",
+            kv_layout="paged", page_size=8, kv_pages=5,
+            kv_admission="grow",
+        ),
+        model=model,
+        params=params,
+    )
+    pool = sess.batcher.pool
+    for r in reqs:
+        sess.submit(r)
+    while sess.busy:
+        sess.step()
+        mapped = [
+            p for pages in sess.batcher._slot_pages.values() for p in pages
+        ]
+        assert len(mapped) == len(set(mapped)), "double-mapped page"
+        assert pool.TRASH not in mapped
+        assert pool.in_use == len(mapped)
+        if sess.steps > 500:
+            raise AssertionError("grow pressure deadlocked the session")
+    assert pool.grow_allocs > 0, "decode must grow pages lazily"
+    assert pool.grow_defers > 0 or sess.batcher.preemptions > 0, (
+        "the undersized pool must exert pressure on growth"
+    )
+    assert pool.in_use == 0, "every grown page must come back"
+    assert len(sess.results) == len(reqs)
+    for r in reqs:
+        assert sess.results[r.rid].tokens == solo[r.rid], f"rid={r.rid}"
+
+
+def test_prefix_sharing_acceptance_hit_rate_and_memory():
+    """The PR 9 acceptance pin on a shared-prefix bursty trace: hit rate
+    above 0.5, physical high-water strictly below the unshared paged run
+    at equal tokens, and token-for-token identity against BOTH unshared
+    KV layouts (paged reserve and the PR 3 slab)."""
+    model, params = _model("qwen3-0.6b")
+    rng = jax.random.PRNGKey(17)
+    chat = jax.random.randint(
+        jax.random.fold_in(rng, 100), (16,), 0, model.cfg.vocab
+    )
+    code = jax.random.randint(
+        jax.random.fold_in(rng, 101), (20,), 0, model.cfg.vocab
+    )
+    reqs = []
+    for burst in range(2):
+        for i in range(5):  # chat: 16-token shared prefix + 4 suffix
+            sfx = jax.random.randint(
+                jax.random.fold_in(rng, len(reqs)), (4,), 0, model.cfg.vocab
+            )
+            reqs.append(
+                Request(rid=len(reqs), tokens=jnp.concatenate([chat, sfx]),
+                        max_new_tokens=10, family="chat",
+                        arrival=float(10 * burst))
+            )
+        for i in range(2):  # code: 20-token shared prefix (mid-page) + 4
+            sfx = jax.random.randint(
+                jax.random.fold_in(rng, len(reqs)), (4,), 0, model.cfg.vocab
+            )
+            reqs.append(
+                Request(rid=len(reqs), tokens=jnp.concatenate([code, sfx]),
+                        max_new_tokens=10, family="code",
+                        arrival=float(10 * burst))
+            )
+
+    def serve(**kw):
+        sess = ServingSession(
+            ServingConfig(
+                max_slots=6, cache_len=CACHE_LEN, replan="off",
+                cache_dtype="float32", **kw,
+            ),
+            model=model,
+            params=params,
+        )
+        m = sess.run(reqs, max_steps=1000)
+        return m, {r: sess.results[r].tokens for r in sorted(sess.results)}
+
+    paged = dict(kv_layout="paged", page_size=8, prefill_chunk=8)
+    m_shared, t_shared = serve(
+        **paged, prefix_sharing=True, kv_admission="grow"
+    )
+    m_paged, t_paged = serve(**paged)
+    _, t_slab = serve(kv_layout="slab")
+    assert t_shared == t_paged, "sharing must not change a single token"
+    assert t_shared == t_slab, "paged+shared vs slab must be token-exact"
+    assert m_shared["prefix_hit_rate"] > 0.5, m_shared["prefix_hit_rate"]
+    assert m_shared["kv_page_hw"] < m_paged["kv_page_hw"], (
+        m_shared["kv_page_hw"], m_paged["kv_page_hw"],
+    )
+    assert m_shared["kv_cow_forks"] >= 1, "code family forks mid-page"
+
+
 def test_mix_tracker_quantization():
     """Counts quantize to powers of two (replan hysteresis); prompt lengths
     bucketize; the key only moves when the quantized mix moves."""
