@@ -1,0 +1,303 @@
+"""Fault-tolerance bench: snapshot overhead, recovery cost, serving loss.
+
+Three workloads, one per DESIGN.md §17 claim:
+
+  * ``snapshot_overhead`` — step latency of a bound session with
+    checkpointing ``off``, synchronous (``sync``: device_get + npz write
+    + fsync on the step turn), and asynchronous (``async``: device_get
+    only; a background writer publishes).  The gated metric is
+    ``save_offturn_speedup``: the sync/async ratio of one save call's
+    ON-TURN latency, clipped at 4x for baseline stability — well above
+    1 while the write stays off the step turn, collapsing to ~1 if the
+    async path ever degrades to blocking.
+    Step-level ratios are reported but not gated: on a CPU-only
+    container the background writer contends with the compute for
+    cores, which a real accelerator host does not.
+  * ``recovery`` — a scripted hard host kill against snapshot cadences
+    ``every ∈ {1, 2, 4}``: rollback depth (steps of lost work), MTTR in
+    steps, the wasted-work fraction, and ``goodput`` (useful steps /
+    executed steps — the gated metric; tighter cadence → higher goodput).
+    All four are exact step-count identities, so the rows are
+    deterministic and machine-portable.
+  * ``serving_host_loss`` — a mid-flight host loss preempts every
+    resident sequence and drops the prefix index; requeued requests
+    regenerate on the survivors.  ``token_exact`` (gated) is 1.0 iff
+    every completion is token-identical to an uninterrupted reference
+    run — greedy decode makes recovery lossless, not just graceful.
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.placement import ClusterSpec  # noqa: E402
+
+TASKS = ("img_text", "audio_text", "audio_vision")
+
+
+def _bound_session(cluster, *, mgr=None, sources=()):
+    from repro.runtime import tiny_multitask_clip
+    from repro.session import (
+        CheckpointCallbacks,
+        SessionConfig,
+        SpindleSession,
+    )
+
+    return SpindleSession(
+        SessionConfig(cluster=cluster),
+        model_factory=lambda ts: tiny_multitask_clip(n_tasks=len(ts)),
+        tasks=TASKS,
+        callbacks=[CheckpointCallbacks(mgr)] if mgr is not None else [],
+        event_sources=list(sources),
+    ).bind()
+
+
+def _snapshot_overhead_rows(steps: int, warmup: int) -> List[Dict]:
+    from repro.ckpt import AsyncCheckpointManager, CheckpointManager
+
+    cluster = ClusterSpec(n_devices=8, island_size=4, mem_bytes=96e9)
+
+    def measure(mode: str) -> Dict:
+        mgr = None
+        if mode == "sync":
+            mgr = CheckpointManager(
+                tempfile.mkdtemp(prefix="bench_sync_"), every=1, keep=2
+            )
+        elif mode == "async":
+            mgr = AsyncCheckpointManager(
+                tempfile.mkdtemp(prefix="bench_async_"), every=1, keep=2
+            )
+        sess = _bound_session(cluster, mgr=mgr)
+        for _ in range(warmup):
+            sess.step()
+        times = []
+        for _ in range(steps):
+            t0 = time.perf_counter()
+            sess.step()
+            times.append(time.perf_counter() - t0)
+        drain = 0.0
+        save_calls = []
+        if mgr is not None:
+            t0 = time.perf_counter()
+            mgr.wait()
+            drain = time.perf_counter() - t0
+            # the on-turn cost of ONE save call, on a DRAINED manager:
+            # sync pays device_get + npz write + fsync inline; async pays
+            # device_get only (the write happens on the background
+            # thread).  min-of-5 is the intrinsic cost — this is the
+            # gated signal; step-level ratios on a CPU container also
+            # absorb writer-thread contention with the compute, which a
+            # real accelerator host does not have.
+            tree = {"params": sess.params, "opt": sess.opt_state}
+            for i in range(5):
+                t0 = time.perf_counter()
+                mgr.save(10_000 + i, tree)
+                save_calls.append(time.perf_counter() - t0)
+                mgr.wait()
+        row = {
+            "bench": "faults",
+            "workload": "snapshot_overhead",
+            "policy": mode,
+            "devices": cluster.n_devices,
+            "steps": steps,
+            "mean_step_ms": float(np.mean(times)) * 1e3,
+            "p99_step_ms": float(np.percentile(times, 99)) * 1e3,
+            "save_call_ms": (
+                float(np.min(save_calls)) * 1e3 if save_calls else 0.0
+            ),
+            "drain_ms": drain * 1e3,
+        }
+        if mode == "async":
+            row["saves_written"] = mgr.saves_written
+            row["saves_dropped"] = mgr.saves_dropped
+        return row
+
+    rows = [measure(m) for m in ("off", "sync", "async")]
+    off, sync, asyn = rows
+    # gated: how much of the save left the step turn.  Clipped at 4x —
+    # the raw ratio's tail is millisecond-noise (observed 6–13x on this
+    # container) while the failure mode it guards is async degrading to
+    # BLOCKING writes, which collapses the ratio to ~1 and trips the
+    # gate from any clipped baseline.
+    asyn["save_offturn_speedup"] = min(
+        4.0, sync["save_call_ms"] / max(asyn["save_call_ms"], 1e-9)
+    )
+    # informative (NOT gated: absorbs CPU writer/compute contention)
+    asyn["step_ratio_vs_sync"] = (
+        sync["mean_step_ms"] / max(asyn["mean_step_ms"], 1e-9)
+    )
+    asyn["step_ratio_vs_off"] = (
+        off["mean_step_ms"] / max(asyn["mean_step_ms"], 1e-9)
+    )
+    return rows
+
+
+def _recovery_rows(steps: int, kill_at: int) -> List[Dict]:
+    from repro.ckpt import AsyncCheckpointManager
+    from repro.launch.faults import FaultInjector, FaultScript
+
+    cluster = ClusterSpec(
+        n_devices=8, island_size=4, devices_per_host=2, mem_bytes=96e9
+    )
+    rows: List[Dict] = []
+    for every in (1, 2, 4):
+        mgr = AsyncCheckpointManager(
+            tempfile.mkdtemp(prefix="bench_rec_"), every=every, keep=4
+        )
+        inj = FaultInjector(
+            cluster.n_hosts,
+            schedule=[FaultScript(step=kill_at, hosts=(1,))],
+        )
+        sess = _bound_session(cluster, mgr=mgr, sources=[inj])
+        step_walls = []
+        for _ in range(steps):
+            t0 = time.perf_counter()
+            sess.step()
+            step_walls.append(time.perf_counter() - t0)
+        mgr.wait()
+        restores = [r for r in sess.replans if r.mode == "restore"]
+        if len(restores) != 1:
+            raise SystemExit(
+                f"[bench_faults] every={every}: expected exactly one "
+                f"restore replan, got {len(restores)}"
+            )
+        rb = restores[0].rollback_steps
+        executed = steps + rb
+        # the kill step's wall time is the MTTR in seconds: the step that
+        # absorbed rollback + re-mesh + replay, vs a healthy median (NOT
+        # max(): the first step carries JIT compilation, not recovery)
+        healthy = float(np.median(step_walls))
+        rows.append(
+            {
+                "bench": "faults",
+                "workload": "recovery",
+                "policy": f"every{every}",
+                "devices": cluster.n_devices,
+                "steps": steps,
+                "kill_at": kill_at,
+                "snapshot_every": every,
+                "restored_step": restores[0].restored_step,
+                "rollback_depth": rb,
+                "mttr_steps": rb,
+                "mttr_s": max(0.0, float(step_walls[kill_at]) - healthy),
+                "wasted_work_frac": rb / executed,
+                "goodput": steps / executed,
+            }
+        )
+    return rows
+
+
+def _serving_host_loss_row(requests: int, kill_after: int) -> Dict:
+    from repro.serving.queue import Request
+    from repro.serving.session import ServingConfig, ServingSession
+
+    rng = np.random.default_rng(7)
+    prompts = [
+        np.asarray(rng.integers(1, 200, size=8), np.int32)
+        for _ in range(requests)
+    ]
+
+    def mk_cfg():
+        return ServingConfig(
+            arch="qwen3-0.6b",
+            max_slots=2,
+            cache_len=64,
+            kv_layout="paged",
+            prefix_sharing=True,
+            prefill_chunk=8,
+            replan="off",
+        )
+
+    def mk_requests():
+        return [
+            Request(rid=i, tokens=prompts[i], max_new_tokens=6,
+                    family="bench", arrival=0.0)
+            for i in range(requests)
+        ]
+
+    ref = ServingSession(mk_cfg())
+    for r in mk_requests():
+        ref.submit(r)
+    while ref.busy:
+        ref.step()
+
+    sess = ServingSession(mk_cfg(), model=ref.model, params=ref.params)
+    for r in mk_requests():
+        sess.submit(r)
+    t0 = time.perf_counter()
+    for _ in range(kill_after):
+        sess.step()
+    requeued = sess.host_failed()
+    while sess.busy:
+        sess.step()
+    wall = time.perf_counter() - t0
+
+    exact = all(
+        sess.results[i].tokens == ref.results[i].tokens
+        for i in range(requests)
+    )
+    kv = sess.batcher.kv_stats()
+    return {
+        "bench": "faults",
+        "workload": "serving_host_loss",
+        "policy": "host_loss",
+        "requests": requests,
+        "slots": 2,
+        "kill_after_steps": kill_after,
+        "host_loss_requeued": requeued,
+        "host_loss_preemptions": kv["kv_host_loss_preemptions"],
+        "completed": len(sess.results),
+        "token_exact": 1.0 if exact else 0.0,
+        "wall_seconds": wall,
+    }
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    if smoke:
+        rows = _snapshot_overhead_rows(steps=6, warmup=2)
+        rows += _recovery_rows(steps=6, kill_at=3)
+        rows.append(_serving_host_loss_row(requests=4, kill_after=2))
+    else:
+        rows = _snapshot_overhead_rows(steps=12, warmup=3)
+        rows += _recovery_rows(steps=10, kill_at=7)
+        rows.append(_serving_host_loss_row(requests=6, kill_after=3))
+    return rows
+
+
+def main(rows: List[Dict]) -> None:
+    snap = [r for r in rows if r["workload"] == "snapshot_overhead"]
+    print(f"{'ckpt':<7} {'mean_step_ms':>13} {'p99_step_ms':>12} "
+          f"{'save_call_ms':>13} {'drain_ms':>9}")
+    for r in snap:
+        print(f"{r['policy']:<7} {r['mean_step_ms']:>13.2f} "
+              f"{r['p99_step_ms']:>12.2f} {r['save_call_ms']:>13.2f} "
+              f"{r['drain_ms']:>9.2f}")
+    a = snap[-1]
+    print(f"async save: {a['save_offturn_speedup']:.1f}x less on-turn "
+          f"latency than sync (clipped at 4x; step ratio "
+          f"{a['step_ratio_vs_sync']:.2f}x vs sync, "
+          f"{a['step_ratio_vs_off']:.2f}x vs off)\n")
+    print(f"{'cadence':<8} {'rollback':>9} {'wasted':>8} {'goodput':>8} "
+          f"{'mttr_s':>8}")
+    for r in rows:
+        if r["workload"] != "recovery":
+            continue
+        print(f"{r['policy']:<8} {r['rollback_depth']:>9d} "
+              f"{r['wasted_work_frac']:>8.1%} {r['goodput']:>8.3f} "
+              f"{r['mttr_s']:>8.3f}")
+    s = [r for r in rows if r["workload"] == "serving_host_loss"][0]
+    print(f"\nserving host loss: {s['host_loss_requeued']} requeued of "
+          f"{s['requests']}, {s['completed']} completed, "
+          f"token_exact={s['token_exact']:.0f}")
+
+
+if __name__ == "__main__":
+    main(run())

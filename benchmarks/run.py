@@ -33,6 +33,7 @@ from . import (
     bench_dynamicity,
     bench_end_to_end,
     bench_estimator,
+    bench_faults,
     bench_fleet,
     bench_kernels,
     bench_optimality,
@@ -52,13 +53,14 @@ BENCHES = {
     "serving": bench_serving,             # continuous batching + replan
     "fleet": bench_fleet,                 # multi-tenant scheduling policies
     "colocation": bench_colocation,       # decode in training idle windows
+    "faults": bench_faults,               # snapshots + crash recovery
     "kernels": bench_kernels,             # substrate
 }
 
 
 #: quick subset exercised by the CI benchmark smoke job
 SMOKE_BENCHES = ("dynamicity", "planner_cost", "serving", "fleet",
-                 "colocation")
+                 "colocation", "faults")
 
 
 def write_bench_json(name: str, rows, seconds: float,
@@ -120,7 +122,9 @@ def throughput_metrics(rows) -> dict:
     Absolute timings and tok/s move with the machine, so the regression
     gate compares *relative* metrics only: explicit ``speedup_*`` keys,
     top-level ``*hit_rate*`` keys, ``kv_compression`` (logical/physical
-    KV page ratio — a pure dedup measure), and each row's
+    KV page ratio — a pure dedup measure), ``goodput`` and
+    ``token_exact`` (fault-tolerance fractions: useful/executed steps and
+    lossless-recovery, both exact counting identities), and each row's
     ``throughput_tok_s`` normalized to the first throughput-carrying row
     of the same run (e.g. continuous batching's gain over the static
     baseline).  All are higher-is-better.  Nested cache-stat dicts are
@@ -136,7 +140,8 @@ def throughput_metrics(rows) -> dict:
         for k, v in r.items():
             if isinstance(v, bool) or not isinstance(v, (int, float)):
                 continue
-            if "speedup" in k or "hit_rate" in k or k == "kv_compression":
+            if ("speedup" in k or "hit_rate" in k
+                    or k in ("kv_compression", "goodput", "token_exact")):
                 out[f"{ident}.{k}"] = float(v)
             elif k == "throughput_tok_s" and v > 0:
                 if base_tp is None:

@@ -14,7 +14,10 @@ cluster, carves it into per-job device-block leases, and plans every job
 through one shared PlanCache (DESIGN.md §14; ``launch/fleet.py`` is the
 CLI shell) — and bubble co-location: the plan-timeline API exposes every
 wavefront plan's idle windows and the fleet's ``colocate`` policy slots
-a serving tenant's decode steps into them (DESIGN.md §15).
+a serving tenant's decode steps into them (DESIGN.md §15) — and
+hard-failure tolerance: async double-buffered snapshots plus a scripted
+host kill that the session recovers from by rolling back to the last
+durable step and replaying loss-exactly (DESIGN.md §17).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -125,6 +128,42 @@ def main() -> None:
     print(f"colocate: tenant decoded {tenant.colocated_steps} steps inside "
           f"{tenant.windows_seen} training idle windows "
           f"({cm['lease']['colocations']} binding, no lease of its own)")
+
+    # hard-failure tolerance (DESIGN.md §17): async double-buffered
+    # snapshots keep the save off the step turn, and a scripted host kill
+    # mid-run rolls the session back to the last durable step, re-meshes
+    # over the survivors, and replays the lost steps loss-exactly
+    import tempfile
+
+    from repro.ckpt import AsyncCheckpointManager
+    from repro.launch.faults import FaultInjector, FaultScript
+    from repro.runtime import tiny_multitask_clip
+    from repro.session import CheckpointCallbacks
+
+    mgr = AsyncCheckpointManager(
+        tempfile.mkdtemp(prefix="quickstart_ckpt_"), every=2, keep=3
+    )
+    faulty = SpindleSession(
+        SessionConfig(cluster=ClusterSpec(n_devices=8, island_size=4,
+                                          devices_per_host=2,
+                                          mem_bytes=96e9)),
+        model_factory=lambda ts: tiny_multitask_clip(n_tasks=len(ts)),
+        tasks=("img_text", "audio_text", "audio_vision"),
+        callbacks=[CheckpointCallbacks(mgr)],
+        event_sources=[FaultInjector(
+            4, schedule=[FaultScript(step=3, hosts=(1,))]
+        )],
+    ).bind()
+    for _ in range(6):
+        faulty.step()
+    mgr.wait()
+    rec = [r for r in faulty.replans if r.mode == "restore"][0]
+    print(f"crash recovery: host 1 killed at step 3 -> rolled back "
+          f"{rec.rollback_steps} step(s) to durable step "
+          f"{rec.restored_step}, re-meshed on "
+          f"{len(faulty.cluster.healthy_devices())} devices, finished all "
+          f"{faulty.step_count} steps "
+          f"({mgr.saves_written} async snapshots written)")
 
     # a ~100M-class config: qwen3-0.6b reduced in depth/width but real vocab
     base = get_arch("qwen3-0.6b")

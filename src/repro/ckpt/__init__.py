@@ -1,8 +1,11 @@
 """Checkpointing, elastic restore, and straggler mitigation."""
 
+from .async_snap import AsyncCheckpointManager
 from .checkpoint import (
     CheckpointManager,
+    all_steps,
     latest_step,
+    load_shard_group,
     restore_checkpoint,
     save_checkpoint,
 )
@@ -10,9 +13,12 @@ from .remesh import reshard, restore_to_mesh
 from .straggler import StragglerDetector, TimingCollector
 
 __all__ = [
+    "AsyncCheckpointManager",
     "CheckpointManager",
     "save_checkpoint",
     "restore_checkpoint",
+    "load_shard_group",
+    "all_steps",
     "latest_step",
     "reshard",
     "restore_to_mesh",

@@ -7,12 +7,21 @@ Layout::
         manifest.json    # step, tree structure, dtypes, shapes, extra meta
         shard_00000.npz  # flattened leaves, chunked ≤ ``shard_bytes``
 
-Writes go to ``step_XXXX.tmp`` and are atomically renamed, so a crash mid-
-save can never corrupt the latest checkpoint; ``latest_step`` only ever sees
-complete directories.  Arrays are gathered to host before save (on a real
-multi-host pod each host writes its addressable shards; the manifest layout
-is host-count independent, which is what lets :mod:`repro.ckpt.remesh`
-restore onto a different mesh).
+Durability contract (DESIGN.md §17): writes go to ``step_XXXX.tmp`` and
+are published by rename; re-saving an existing step parks the old
+directory at ``step_XXXX.old`` until the new one is in place, so there is
+no window in which the previously-restorable step is gone.  ``all_steps``
+and ``latest_step`` only count directories whose manifest parses and
+whose shard files all exist — a crash mid-save (or a truncated copy) can
+never yield an unrestorable "latest" checkpoint.
+
+With ``shard_groups=N`` the flattened leaves are partitioned round-robin
+into N shard sequences (one per device group), so on a multi-host pod
+each group's host writes — and on restore reads — only its own shard
+files instead of funnelling the whole tree through one host
+(:func:`load_shard_group` is the per-group read path; the manifest layout
+stays host-count independent, which is what lets
+:mod:`repro.ckpt.remesh` restore onto a different mesh).
 """
 
 from __future__ import annotations
@@ -71,8 +80,14 @@ def save_checkpoint(
     extra: Optional[Dict[str, Any]] = None,
     keep: int = 3,
     shard_bytes: int = 1 << 30,
+    shard_groups: int = 0,
 ) -> str:
-    """Atomically save ``tree`` at ``step``; prune to the newest ``keep``."""
+    """Atomically save ``tree`` at ``step``; prune to the newest ``keep``.
+
+    ``shard_groups > 0`` partitions the leaves round-robin into that many
+    independent shard sequences (one per device group) so no single host
+    has to serialize the whole tree.
+    """
     os.makedirs(base, exist_ok=True)
     final = _step_dir(base, step)
     tmp = final + ".tmp"
@@ -81,49 +96,91 @@ def save_checkpoint(
     os.makedirs(tmp)
 
     named, _ = _flatten_with_names(tree)
+    groups = max(0, int(shard_groups))
     manifest = {
         "step": step,
         "time": time.time(),
         "extra": extra or {},
+        "shard_groups": groups,
         "leaves": [],
         "shards": [],
+        "group_shards": {},
     }
-    shard_idx, shard_cur, shard_size = 0, {}, 0
-    for name, leaf in named:
-        arr = np.asarray(jax.device_get(leaf))
-        dtype_name = _ML_DTYPE_NAMES.get(arr.dtype, str(arr.dtype))
-        if arr.dtype in _ML_DTYPE_NAMES:  # npz can't hold bf16 — view as u16
-            arr = arr.view(np.uint16)
-        manifest["leaves"].append(
-            {
-                "name": name,
-                "shape": list(arr.shape),
-                "dtype": dtype_name,
-                "shard": shard_idx,
-            }
-        )
-        shard_cur[name.replace("/", "%")] = arr
-        shard_size += arr.nbytes
-        if shard_size >= shard_bytes:
-            _write_shard(tmp, shard_idx, shard_cur, manifest)
+    buckets = [named] if groups == 0 else [
+        [nl for i, nl in enumerate(named) if i % groups == g]
+        for g in range(groups)
+    ]
+    for g, bucket in enumerate(buckets):
+        gkey = str(g)
+        manifest["group_shards"][gkey] = []
+        shard_idx, shard_cur, shard_size = 0, {}, 0
+
+        def flush():
+            nonlocal shard_idx, shard_cur, shard_size
+            name = _write_shard(tmp, g, shard_idx, shard_cur)
+            manifest["shards"].append(name)
+            manifest["group_shards"][gkey].append(name)
             shard_idx, shard_cur, shard_size = shard_idx + 1, {}, 0
-    if shard_cur or not manifest["shards"]:
-        _write_shard(tmp, shard_idx, shard_cur, manifest)
 
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)  # atomic publish
+        for name, leaf in bucket:
+            arr = np.asarray(jax.device_get(leaf))
+            dtype_name = _ML_DTYPE_NAMES.get(arr.dtype, str(arr.dtype))
+            if arr.dtype in _ML_DTYPE_NAMES:  # npz can't hold bf16 — u16 view
+                arr = arr.view(np.uint16)
+            manifest["leaves"].append(
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "dtype": dtype_name,
+                    "shard": len(manifest["shards"]),  # next flush's slot
+                    "group": g,
+                }
+            )
+            shard_cur[name.replace("/", "%")] = arr
+            shard_size += arr.nbytes
+            if shard_size >= shard_bytes:
+                flush()
+        if shard_cur or not manifest["group_shards"][gkey]:
+            flush()
 
+    _write_manifest(tmp, manifest)
+    _publish(tmp, final)
     _prune(base, keep)
     return final
 
 
-def _write_shard(tmp: str, idx: int, arrays: Dict[str, np.ndarray], manifest):
-    path = os.path.join(tmp, f"shard_{idx:05d}.npz")
-    np.savez(path, **arrays)
-    manifest["shards"].append(os.path.basename(path))
+def _write_shard(tmp: str, group: int, idx: int,
+                 arrays: Dict[str, np.ndarray]) -> str:
+    name = (f"shard_{idx:05d}.npz" if group == 0
+            else f"shard_g{group:03d}_{idx:05d}.npz")
+    np.savez(os.path.join(tmp, name), **arrays)
+    return name
+
+
+def _write_manifest(d: str, manifest: Dict[str, Any]) -> None:
+    """Write ``manifest.json`` via tmp-file + rename so a truncated
+    manifest never carries the directory's name."""
+    part = os.path.join(d, "manifest.json.part")
+    with open(part, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(part, os.path.join(d, "manifest.json"))
+
+
+def _publish(tmp: str, final: str) -> None:
+    """Swap ``tmp`` into place.  Re-saving an existing step parks the old
+    directory at ``<final>.old`` (invisible to ``all_steps``) until the
+    new one is renamed in — at every crash point either the old or the
+    new complete directory is restorable, never neither."""
+    old = final + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(final):
+        os.rename(final, old)
+    os.rename(tmp, final)
+    if os.path.exists(old):
+        shutil.rmtree(old)
 
 
 def _prune(base: str, keep: int) -> None:
@@ -132,13 +189,28 @@ def _prune(base: str, keep: int) -> None:
         shutil.rmtree(_step_dir(base, s), ignore_errors=True)
 
 
+def _manifest_ok(d: str) -> bool:
+    """True iff the step dir has a parseable manifest whose shard files
+    all exist — the restorability test ``all_steps`` applies."""
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            m = json.load(f)
+        shards = m["shards"]
+        m["step"], m["leaves"]
+    except (OSError, ValueError, KeyError, TypeError):
+        return False
+    return all(os.path.exists(os.path.join(d, s)) for s in shards)
+
+
 def all_steps(base: str) -> List[int]:
+    """Restorable steps only: dirs with a missing or truncated manifest
+    (a crash mid-save, a partial copy) are skipped, not surfaced."""
     if not os.path.isdir(base):
         return []
     out = []
     for d in os.listdir(base):
         m = _STEP_RE.match(d)
-        if m and os.path.exists(os.path.join(base, d, "manifest.json")):
+        if m and _manifest_ok(os.path.join(base, d)):
             out.append(int(m.group(1)))
     return sorted(out)
 
@@ -146,6 +218,35 @@ def all_steps(base: str) -> List[int]:
 def latest_step(base: str) -> Optional[int]:
     steps = all_steps(base)
     return steps[-1] if steps else None
+
+
+def load_shard_group(
+    base: str, step: int, group: int
+) -> Dict[str, np.ndarray]:
+    """Load only device group ``group``'s leaves of step ``step``.
+
+    This is the per-host read path of a sharded restore: each device
+    group's host calls this with its own group id and never touches the
+    other groups' shard files.  Returns ``{leaf_name: array}`` (empty for
+    groups beyond the save-time ``shard_groups``).
+    """
+    d = _step_dir(base, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    shards = manifest.get("group_shards", {}).get(str(group))
+    if shards is None:
+        shards = manifest["shards"] if group == 0 else []
+    dtypes = {l["name"]: l["dtype"] for l in manifest["leaves"]}
+    out: Dict[str, np.ndarray] = {}
+    for shard in shards:
+        with np.load(os.path.join(d, shard)) as z:
+            for k in z.files:
+                name = k.replace("%", "/")
+                arr = z[k]
+                if dtypes.get(name) in _ML_DTYPE_BY_NAME:
+                    arr = arr.view(_ML_DTYPE_BY_NAME[dtypes[name]])
+                out[name] = arr
+    return out
 
 
 def restore_checkpoint(
@@ -188,10 +289,12 @@ def restore_checkpoint(
 class CheckpointManager:
     """Driver-facing wrapper: periodic save, auto-resume, keep-k."""
 
-    def __init__(self, base: str, *, every: int = 50, keep: int = 3):
+    def __init__(self, base: str, *, every: int = 50, keep: int = 3,
+                 shard_groups: int = 0):
         self.base = base
         self.every = every
         self.keep = keep
+        self.shard_groups = shard_groups
 
     def maybe_save(self, step: int, tree, extra=None) -> Optional[str]:
         if self.every > 0 and step % self.every == 0:
@@ -202,8 +305,12 @@ class CheckpointManager:
         """Unconditional snapshot (the elastic-restore path saves at the
         eviction step regardless of the periodic schedule)."""
         return save_checkpoint(
-            self.base, step, tree, extra=extra, keep=self.keep
+            self.base, step, tree, extra=extra, keep=self.keep,
+            shard_groups=self.shard_groups,
         )
+
+    def wait(self) -> None:
+        """Synchronous saves are durable on return; nothing to drain."""
 
     def restore_latest(self, tree_like):
         step = latest_step(self.base)

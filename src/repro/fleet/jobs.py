@@ -117,6 +117,11 @@ class JobHandle:
     kv_budget_bytes: float = 0.0
     #: min per-device memory headroom of the host plan at bind time
     window_headroom_bytes: float = 0.0
+    # --- fault tolerance (revocations and host failures) ---
+    #: lease revocations this job failed to yield in time (force-evicted)
+    forced_revokes: int = 0
+    #: in-flight serving requests requeued after a host loss (serve jobs)
+    requeued_requests: int = 0
 
     @property
     def name(self) -> str:
@@ -138,6 +143,8 @@ class JobHandle:
             "post_rebalance_steps": self.post_rebalance_steps,
             "p50_step_s": float(np.percentile(st, 50)) if st else 0.0,
             "p99_step_s": float(np.percentile(st, 99)) if st else 0.0,
+            "forced_revokes": self.forced_revokes,
+            "requeued_requests": self.requeued_requests,
             "co_host": self.co_host,
             "colocated_steps": self.colocated_steps,
             "windows_seen": self.windows_seen,

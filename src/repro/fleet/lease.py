@@ -27,6 +27,19 @@ expansion is **deferred** (``deferred_renewals`` counts these) and
 promoted automatically when A calls :meth:`LeaseArbiter.apply` — so two
 jobs never hold overlapping device blocks, even transiently, and an
 eviction-driven re-carve cannot double-assign a surviving block.
+
+Preemptive revocation — the bounded-deadline escape hatch
+---------------------------------------------------------
+Deferral is cooperative: a holder with a long step (a big model between
+boundaries) can starve a waiter indefinitely.  With ``revoke_deadline``
+set (in scheduler ticks), a deferral also issues a **revocation** against
+the holder: yield the contested hosts (checkpoint + apply the shrunken
+grant) within the deadline, or the arbiter **force-evicts** the blocks
+from the applied lease (:meth:`LeaseArbiter.force_revoke`) and the holder
+recovers from its last snapshot at the next boundary — the same
+rollback-restore path a hard host failure takes (DESIGN.md §17).
+Applying in time counts a ``cooperative_yields``; expiry counts a
+``forced_revokes``.
 """
 
 from __future__ import annotations
@@ -37,7 +50,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from ..core.placement import ClusterSpec
 
-__all__ = ["Lease", "LeaseArbiter", "lease_view"]
+__all__ = ["Lease", "LeaseArbiter", "Revocation", "lease_view"]
 
 
 def lease_view(parent: ClusterSpec, hosts: Sequence[int]) -> ClusterSpec:
@@ -99,6 +112,17 @@ class Lease:
         return self.physical[logical]
 
 
+@dataclass(frozen=True)
+class Revocation:
+    """A pending preemptive revoke: ``job`` must yield ``hosts`` by
+    ``deadline`` (arbiter-clock ticks) or be force-evicted from them."""
+
+    job: str
+    hosts: frozenset
+    issued: int
+    deadline: int
+
+
 class LeaseArbiter:
     """Carves one cluster's host blocks into disjoint per-job leases.
 
@@ -113,15 +137,30 @@ class LeaseArbiter:
     """
 
     def __init__(self, cluster: ClusterSpec,
-                 fixed: Optional[Dict[str, Tuple[int, ...]]] = None):
+                 fixed: Optional[Dict[str, Tuple[int, ...]]] = None,
+                 revoke_deadline: Optional[int] = None):
+        if revoke_deadline is not None and revoke_deadline < 0:
+            raise ValueError(
+                f"revoke_deadline must be >= 0 ticks, got {revoke_deadline}"
+            )
         self.cluster = cluster
         self.fixed = dict(fixed) if fixed else None
+        #: ticks a deferral's holder gets to yield before force-eviction;
+        #: ``None`` = purely cooperative leases (no revocations issued)
+        self.revoke_deadline = revoke_deadline
+        #: the arbiter's notion of now, in scheduler ticks — advanced by
+        #: the fleet loop before it arbitrates (deadlines are cut from it)
+        self.clock = 0
+        self.revocations: Dict[str, Revocation] = {}
         self.granted: Dict[str, Lease] = {}
         self.applied: Dict[str, Lease] = {}
         self._weights: Dict[str, int] = {}
         self._order: List[str] = []  # admission order (share tiebreak)
         self.grants = 0  # non-empty (re-)grants handed out
         self.deferred_renewals = 0  # expansions held back by the apply rule
+        self.revokes_issued = 0
+        self.cooperative_yields = 0  # revocations resolved by apply()
+        self.forced_revokes = 0  # revocations resolved by force_revoke()
         self.evictions = 0
         #: co-resident tenants: tenant job -> host job whose lease's idle
         #: WINDOWS it occupies.  A tenant holds no hosts of its own — it is
@@ -157,6 +196,7 @@ class LeaseArbiter:
             self._order.remove(job)
         self.granted.pop(job, None)
         self.applied.pop(job, None)
+        self.revocations.pop(job, None)
         self.co_tenants.pop(job, None)
         for tenant, host in list(self.co_tenants.items()):
             if host == job:
@@ -293,8 +333,45 @@ class LeaseArbiter:
                 )
                 if grantable:
                     self.grants += 1
+        self._update_revocations(target)
         self.check()
         return dict(self.granted)
+
+    def _update_revocations(self, target: Dict[str, List[int]]) -> None:
+        """Issue/refresh/clear revocations against slow-to-yield holders.
+
+        A holder owes a revocation for every applied host it has been
+        granted away from AND that some other job's target wants (a host
+        merely shrunk away, wanted by nobody, needs no deadline).  The
+        deadline is cut once, when the revocation is first issued — a
+        re-carve that changes the contested set keeps the original clock.
+        """
+        if self.revoke_deadline is None:
+            return
+        target_of = {h: j for j, hosts in target.items() for h in hosts}
+        for j in self._order:
+            gone = set(self.applied[j].hosts) - set(self.granted[j].hosts)
+            contested = frozenset(
+                h for h in gone if target_of.get(h) not in (None, j)
+            )
+            pending = self.revocations.get(j)
+            if not contested:
+                if pending is not None:
+                    del self.revocations[j]
+                continue
+            if pending is None:
+                self.revocations[j] = Revocation(
+                    job=j, hosts=contested, issued=self.clock,
+                    deadline=self.clock + self.revoke_deadline,
+                )
+                self.revokes_issued += 1
+            elif pending.hosts != contested:
+                self.revocations[j] = dataclasses.replace(
+                    pending, hosts=contested
+                )
+        for j in list(self.revocations):
+            if j not in self._weights:
+                del self.revocations[j]
 
     # ------------------------------------------------------------- lifecycle
     def needs_renewal(self, job: str) -> bool:
@@ -303,8 +380,36 @@ class LeaseArbiter:
     def apply(self, job: str) -> Lease:
         """Job adopted its granted lease (step boundary): the blocks its
         old lease held are now physically free — promote any deferred
-        expansions."""
+        expansions.  Adopting while a revocation is pending resolves it
+        cooperatively (the job yielded the contested hosts in time)."""
+        if job in self.revocations:
+            del self.revocations[job]
+            self.cooperative_yields += 1
         self.applied[job] = self.granted[job]
+        self.recarve()
+        return self.applied[job]
+
+    # ------------------------------------------------------------ revocation
+    def expired_revocations(self, now: Optional[int] = None) -> List[Revocation]:
+        """Revocations whose deadline has passed at ``now`` (default: the
+        arbiter clock) — the scheduler force-revokes each of these."""
+        t = self.clock if now is None else now
+        return [r for r in self.revocations.values() if t >= r.deadline]
+
+    def force_revoke(self, job: str) -> Lease:
+        """Deadline expired: strip the contested hosts from ``job``'s
+        APPLIED lease — the blocks are physically reclaimed even though the
+        holder never reached a step boundary.  The holder's runtime must
+        treat this like a hard host loss on those blocks (rollback to its
+        last snapshot and re-mesh on what its grant still holds).  The
+        re-carve then promotes the deferred waiter immediately."""
+        rev = self.revocations.pop(job, None)
+        if rev is None:
+            raise ValueError(f"no pending revocation for job {job!r}")
+        lease = self.applied[job]
+        kept = tuple(h for h in lease.hosts if h not in rev.hosts)
+        self.applied[job] = self._mk_lease(job, kept, lease.version)
+        self.forced_revokes += 1
         self.recarve()
         return self.applied[job]
 
@@ -348,6 +453,15 @@ class LeaseArbiter:
                     f"grant of {j!r} overlaps devices {sorted(overlap)} "
                     f"still applied to {other!r} (double-assignment)"
                 )
+        for j, rev in self.revocations.items():
+            assert j in self._weights, (
+                f"revocation pending for released job {j!r}"
+            )
+            assert rev.hosts <= set(self.applied[j].hosts), (
+                f"revocation of {j!r} names hosts "
+                f"{sorted(rev.hosts - set(self.applied[j].hosts))} "
+                f"it no longer has applied"
+            )
 
     def stats(self) -> Dict[str, int]:
         return {
@@ -356,4 +470,8 @@ class LeaseArbiter:
             "evictions": self.evictions,
             "colocations": self.colocations,
             "co_tenants": len(self.co_tenants),
+            "revokes_issued": self.revokes_issued,
+            "cooperative_yields": self.cooperative_yields,
+            "forced_revokes": self.forced_revokes,
+            "pending_revocations": len(self.revocations),
         }

@@ -45,6 +45,7 @@ from ..core.placement import ClusterSpec
 from ..core.plancache import PlanCache
 from ..launch.events import (
     Event,
+    HostFailed,
     JobArrived,
     JobFinished,
     StragglerDetected,
@@ -79,6 +80,12 @@ class FleetConfig:
     cache_maxsize: int = 64
     #: serving replan policy forwarded to ServingSession ("mix"/"initial")
     serve_replan: str = "mix"
+    #: preemptive-lease revoke deadline in scheduler TICKS: a holder whose
+    #: grant shrank while a waiter wants the blocks must apply (yield)
+    #: within this many ticks or the arbiter force-evicts the contested
+    #: hosts from its applied lease (DESIGN.md §17); None = purely
+    #: cooperative (deferrals wait for the holder's next boundary forever)
+    revoke_deadline: Optional[int] = None
     #: virtual cost of a serving step before the first mix plan exists
     serve_fallback_dt: float = 1e-3
     #: safety valve on the cooperative loop (total steps across all jobs)
@@ -140,7 +147,9 @@ class FleetScheduler:
         self.event_sources: List[Any] = list(event_sources)
         #: live fleet topology (config.cluster minus evicted hosts)
         self.cluster = self.config.cluster
-        self.arbiter = LeaseArbiter(self.cluster)
+        self.arbiter = LeaseArbiter(
+            self.cluster, revoke_deadline=self.config.revoke_deadline
+        )
         self.jobs: Dict[str, JobHandle] = {}
         #: reduced model/params per arch, shared by same-arch serve jobs
         self._model_cache = model_cache if model_cache is not None else {}
@@ -153,6 +162,9 @@ class FleetScheduler:
         #: tracks unbound tenants waiting for a plannable host)
         self._tenants: Dict[str, str] = {}
         self._flagged: frozenset = frozenset()
+        #: hard-failed hosts (HostFailed routing; full-set convention)
+        self._dead: frozenset = frozenset()
+        self.host_failures = 0
         self.events: List[Event] = []
         self.ticks = 0
         for spec in jobs:
@@ -573,6 +585,31 @@ class FleetScheduler:
         if self._job_done(handle):
             self._finish(handle, start + dt)
 
+    def _enforce_revocations(self) -> None:
+        """Advance the arbiter clock to the tick counter and force-evict
+        every holder whose revoke deadline expired before it reached a
+        step boundary.  The holder keeps what its grant still allows (it
+        adopts the shrunken lease at its next boundary — in a real
+        deployment that adoption is a rollback-restore from its last
+        snapshot, DESIGN.md §17); the deferred waiter's grant promotes
+        immediately."""
+        self.arbiter.clock = self.ticks
+        if self.config.revoke_deadline is None:
+            return
+        for rev in self.arbiter.expired_revocations():
+            handle = self.jobs[rev.job]
+            applied = self.arbiter.force_revoke(rev.job)
+            handle.forced_revokes += 1
+            if applied.hosts:
+                handle.lease = applied
+            else:
+                handle.lease = None
+                handle.state = "queued"
+            if handle.spec.kind == "serve" and handle.session is not None:
+                # the revoked blocks held live KV: requeue the in-flight
+                # requests; they regenerate token-exactly on the survivors
+                handle.requeued_requests += handle.session.host_failed()
+
     # --------------------------------------------------------------- events
     def poll(self) -> List[Event]:
         """Drain the fleet's event sources (one poll per cooperative tick)."""
@@ -586,25 +623,52 @@ class FleetScheduler:
     def signal(self, event: Event) -> None:
         """Route one fleet-level event.
 
-        ``StragglerDetected`` (host-indexed against the FLEET cluster)
-        shrinks the live topology and re-carves every lease — the evicted
-        host leaves the *lease map*; each surviving job adopts its
-        shrunken view at its next step boundary.  Recovery (an empty
-        flagged set) restores the full cluster the same way.
+        ``StragglerDetected`` / ``HostFailed`` (host-indexed against the
+        FLEET cluster) shrink the live topology and re-carve every lease —
+        the downed host leaves the *lease map*; each surviving job adopts
+        its shrunken view at its next step boundary.  Recovery (an empty
+        set) restores the full cluster the same way.  A hard host loss
+        additionally requeues every in-flight request of serving jobs
+        whose applied lease touched the lost block (their KV pages died
+        with the host) — the requests regenerate token-exactly on the
+        survivors.
         """
         self.events.append(event)
-        if not isinstance(event, StragglerDetected):
+        if isinstance(event, StragglerDetected):
+            flagged = frozenset(
+                h for h in event.hosts
+                if 0 <= h < self.config.cluster.n_hosts
+            )
+            if flagged == self._flagged:
+                return
+            if len(flagged | self._dead) >= self.config.cluster.n_hosts:
+                return  # never evict the whole fleet
+            self._flagged = flagged
+            lost: frozenset = frozenset()
+        elif isinstance(event, HostFailed):
+            dead = frozenset(
+                h for h in event.hosts
+                if 0 <= h < self.config.cluster.n_hosts
+            )
+            if dead == self._dead:
+                return
+            if len(dead | self._flagged) >= self.config.cluster.n_hosts:
+                return  # never evict the whole fleet
+            lost = dead - self._dead
+            self._dead = dead
+            if lost:
+                self.host_failures += 1
+        else:
             return
-        flagged = frozenset(
-            h for h in event.hosts
-            if 0 <= h < self.config.cluster.n_hosts
-        )
-        if flagged == self._flagged:
-            return
-        if len(flagged) >= self.config.cluster.n_hosts:
-            return  # never evict the whole fleet
-        self._flagged = flagged
-        self.cluster = self.config.cluster.shrink(tuple(sorted(flagged)))
+        # serve jobs whose APPLIED hosts died lose their resident KV —
+        # snapshot holders before the arbiter strips the blocks
+        hit = [
+            h for h in self.jobs.values()
+            if lost and h.spec.kind == "serve" and h.state == "running"
+            and h.lease is not None and set(h.lease.hosts) & lost
+        ]
+        down = tuple(sorted(self._flagged | self._dead))
+        self.cluster = self.config.cluster.shrink(down)
         self.arbiter.evict_hosts(self.cluster)
         self.rebalances += 1
         for h in self.jobs.values():
@@ -616,6 +680,8 @@ class FleetScheduler:
                     h.state = "queued"
                 else:
                     h.lease = applied
+        for h in hit:
+            h.requeued_requests += h.session.host_failed()
         self._fire("on_rebalance", event, dict(self.arbiter.granted))
 
     # ------------------------------------------------------------------ run
@@ -669,6 +735,7 @@ class FleetScheduler:
             self.t = max(self.t, h.clock)
             self._step_job(h)
             self.poll()
+            self._enforce_revocations()
         return self.metrics()
 
     def _carve_static(self) -> None:
@@ -767,6 +834,9 @@ class FleetScheduler:
                 if total_device_seconds > 0 else 0.0
             ),
             "rebalances": self.rebalances,
+            "host_failures": self.host_failures,
+            "forced_revokes": sum(r["forced_revokes"] for r in rows),
+            "requeued_requests": sum(r["requeued_requests"] for r in rows),
             "colocated_steps": sum(r["colocated_steps"] for r in rows),
             "windows_seen": sum(r["windows_seen"] for r in rows),
             "deferred_windows": sum(r["deferred_windows"] for r in rows),

@@ -69,6 +69,27 @@ class StragglerDetected(Event):
 
 
 @dataclass(frozen=True)
+class HostFailed(Event):
+    """Hosts crashed hard — no cooperative snapshot turn was possible.
+
+    Unlike :class:`StragglerDetected` (a *performance* signal: the host is
+    alive, its state is intact, the session snapshots before shrinking),
+    a hard failure loses the host's device state outright: the session
+    must roll back to the last durable snapshot, re-mesh over survivors,
+    and deterministically replay the lost steps (DESIGN.md §17).
+
+    Follows the straggler convention: ``hosts`` carries the FULL
+    currently-dead set, so a transient host that returns is reported by
+    firing again with the smaller set (``transient=True`` marks events
+    from a flap rather than a confirmed permanent crash), and ``()``
+    means every previously-dead host recovered."""
+
+    hosts: Tuple[int, ...]
+    transient: bool = False
+    kind = "host_failed"
+
+
+@dataclass(frozen=True)
 class RequestArrived(Event):
     """An inference request was admitted into the serving queue."""
 
@@ -123,6 +144,7 @@ EVENT_KINDS = (
     "task_arrived",
     "task_completed",
     "straggler",
+    "host_failed",
     "request_arrived",
     "request_completed",
     "lease_changed",

@@ -23,6 +23,14 @@ least one decode step landed inside a training idle window
 (``colocated_steps >= 1``), and (c) every tenant's KV page-pool
 high-water stayed within the window memory headroom it was budgeted
 against.
+
+``--revoke-smoke`` is the preemptive-lease contract (DESIGN.md §17): a
+long-step holder, a short-step job that keeps the tick clock moving, and
+a high-priority late arrival whose expansion defers behind the holder's
+applied lease.  With a bounded ``--revoke-deadline`` the arbiter must
+force-evict the slow holder's contested blocks when the deadline expires
+mid-step (``forced_revokes >= 1``), every job must still drain, and the
+lease invariants must hold at exit.
 """
 
 from __future__ import annotations
@@ -111,6 +119,64 @@ def smoke_jobs(steps: int = 8, requests: int = 3) -> List[JobSpec]:
                 requests=requests, prompt_len=8, gen_len=4, slots=2,
                 cache_len=32),
     ]
+
+
+def revoke_jobs(steps: int = 8) -> List[JobSpec]:
+    """The revoke-smoke mix: ``slowA`` steps rarely (big per-step
+    makespan, so it sits between boundaries for many ticks), ``fastC``
+    keeps the fleet tick clock advancing, and high-priority ``hipriB``
+    arrives after slowA's first step — its quota wants slowA's blocks,
+    deferring behind the applied lease until the revoke deadline expires."""
+    return [
+        JobSpec(name="slowA", kind="train", workload="mt_backbone_suite",
+                steps=max(2, steps // 2)),
+        JobSpec(name="fastC", kind="train", workload="ofasys",
+                steps=steps * 5),
+        JobSpec(name="hipriB", kind="train", workload="multitask_clip",
+                steps=steps, priority=4, arrival=0.7),
+    ]
+
+
+def revoke_smoke(
+    *,
+    steps: int = 8,
+    revoke_deadline: int = 4,
+    n_hosts: int = 8,
+    devices_per_host: int = 4,
+    verbose: bool = True,
+) -> Dict:
+    """Run the preemptive-lease scenario; returns metrics (checks in main)."""
+    cluster = ClusterSpec(
+        n_devices=n_hosts * devices_per_host,
+        island_size=8,
+        mem_bytes=96e9,
+        devices_per_host=devices_per_host,
+    )
+    printer = FleetPrinter(verbose=verbose)
+    fleet = FleetScheduler(
+        FleetConfig(cluster=cluster, policy="fleet",
+                    revoke_deadline=revoke_deadline),
+        revoke_jobs(steps),
+        callbacks=[printer],
+    )
+    metrics = fleet.run()
+    fleet.arbiter.check()  # lease invariants must hold at exit
+    lease = metrics["lease"]
+    if verbose:
+        print(
+            f"[fleet] revoke: deadline={revoke_deadline} ticks, "
+            f"{lease['revokes_issued']} revocation(s) issued, "
+            f"{lease['cooperative_yields']} cooperative yield(s), "
+            f"{lease['forced_revokes']} forced revoke(s), "
+            f"{lease['pending_revocations']} pending at exit"
+        )
+        for r in metrics["jobs"]:
+            if r["forced_revokes"]:
+                print(f"[fleet] revoke: {r['name']} force-evicted "
+                      f"{r['forced_revokes']} time(s), still finished "
+                      f"{r['steps_done']} steps")
+    metrics["_handles"] = fleet.jobs
+    return metrics
 
 
 def run_fleet(
@@ -206,7 +272,39 @@ def main() -> None:
     ap.add_argument("--straggler-at", type=int, default=-1,
                     help="inject a straggler after the Nth fleet step "
                          "(-1 = none; --smoke defaults to 6)")
+    ap.add_argument("--revoke-smoke", action="store_true",
+                    help="CI contract: bounded-deadline preemptive leases "
+                         "— a slow holder must be force-evicted and every "
+                         "job must still drain")
+    ap.add_argument("--revoke-deadline", type=int, default=4,
+                    help="revoke-smoke: ticks a holder gets to yield")
     args = ap.parse_args()
+
+    if args.revoke_smoke:
+        m = revoke_smoke(
+            steps=args.steps,
+            revoke_deadline=args.revoke_deadline,
+            n_hosts=args.hosts,
+            devices_per_host=args.devices_per_host,
+        )
+        failures = []
+        not_done = [r["name"] for r in m["jobs"] if r["state"] != "done"]
+        if not_done:
+            failures.append(f"jobs did not drain: {not_done}")
+        if m["lease"]["revokes_issued"] < 1:
+            failures.append("no revocation was ever issued")
+        if m["forced_revokes"] < 1:
+            failures.append(
+                "the slow holder was never force-evicted "
+                "(forced_revokes == 0)"
+            )
+        if m["lease"]["pending_revocations"] != 0:
+            failures.append("revocations still pending at exit")
+        if failures:
+            for f in failures:
+                print(f"[fleet] FAILED: {f}", file=sys.stderr)
+            sys.exit(1)
+        return
 
     straggler_at = args.straggler_at
     if args.smoke and straggler_at < 0 and args.policy != "colocate":

@@ -199,6 +199,137 @@ def elastic_smoke(
     }
 
 
+def crash_smoke(
+    *,
+    steps: int = 8,
+    kill_at: int = 4,
+    kill_hosts: Tuple[int, ...] = (1,),
+    ckpt_every: int = 2,
+    ckpt_dir: Optional[str] = None,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    """Hard-failure scenario: a bound session survives a host KILL through
+    the async-snapshot → rollback → re-mesh → replay path (CI gate).
+
+    A :class:`repro.launch.faults.FaultInjector` hard-kills ``kill_hosts``
+    after step ``kill_at`` while an
+    :class:`repro.ckpt.AsyncCheckpointManager` snapshots every
+    ``ckpt_every`` steps off the step turn.  The session must roll back to
+    the last durable snapshot, evict the dead block, re-mesh over the
+    survivors and deterministically replay the lost steps — the full loss
+    history must EXACTLY match an uninterrupted reference run on the
+    surviving topology, and the final plan must not place the dead
+    devices.  Any violation raises ``SystemExit`` (CI greps the
+    transcript on top).
+    """
+    import tempfile
+
+    import numpy as np
+
+    from ..ckpt import AsyncCheckpointManager, all_steps
+    from ..config import MeshConfig
+    from ..parallel import mesh_over_devices
+    from ..runtime import tiny_multitask_clip
+    from ..session import CheckpointCallbacks, SessionConfig, SpindleSession
+    from .faults import FaultInjector, FaultScript
+
+    n_dev = jax.device_count()
+    if n_dev < 4:
+        print(f"[crash] WARNING: only {n_dev} devices visible — set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    per_host = 2 if n_dev >= 4 else 1
+    cluster = MeshConfig(
+        shape=(n_dev,), axes=("data",), devices_per_host=per_host
+    ).cluster_spec(island_size=max(per_host * 2, 2), mem_bytes=1e13)
+    bad = tuple(h for h in kill_hosts if 0 <= h < cluster.n_hosts)
+    if not bad or len(bad) >= cluster.n_hosts:
+        raise SystemExit("[crash] no valid host to kill")
+    if not 0 < kill_at < steps:
+        raise SystemExit(f"[crash] --kill-at must be in 1..{steps - 1}")
+    tasks = ("img_text", "audio_text", "audio_vision")
+    factory = lambda ts: tiny_multitask_clip(n_tasks=len(ts))  # noqa: E731
+
+    # uninterrupted reference on the surviving topology — the ground truth
+    # the recovered run must reproduce loss-for-loss
+    ref = SpindleSession(
+        SessionConfig(cluster=cluster.shrink(bad)),
+        model_factory=factory, tasks=tasks,
+    ).bind()
+    ref_hist = [ref.step() for _ in range(steps)]
+
+    mgr = AsyncCheckpointManager(
+        ckpt_dir or tempfile.mkdtemp(prefix="crash_"),
+        every=max(ckpt_every, 1), keep=3,
+    )
+    inj = FaultInjector(cluster.n_hosts,
+                        schedule=[FaultScript(step=kill_at, hosts=bad)])
+    session = SpindleSession(
+        SessionConfig(
+            cluster=cluster,
+            mesh=mesh_over_devices(range(n_dev)),
+        ),
+        model_factory=factory,
+        tasks=tasks,
+        callbacks=[CheckpointCallbacks(mgr)],
+        event_sources=[inj],
+    ).bind()
+
+    announced = 0
+    for k in range(steps):
+        loss = session.step()
+        if verbose:
+            phase = "recovered" if any(
+                r.mode == "restore" for r in session.replans
+            ) else "healthy"
+            print(f"[crash] step {k:3d}  loss {loss:.4f}  ({phase})")
+        for r in session.replans[announced:]:
+            if r.mode == "restore":
+                print(f"[crash] host kill {list(bad)} -> rollback to "
+                      f"step {r.restored_step}, replayed "
+                      f"{r.rollback_steps} lost step(s), re-meshed on "
+                      f"{len(session.cluster.healthy_devices())} devices")
+        announced = len(session.replans)
+    mgr.wait()
+
+    restores = [r for r in session.replans if r.mode == "restore"]
+    if not restores:
+        raise SystemExit("[crash] FAIL: no rollback-restore replan occurred")
+    dead_devs = {d for h in bad for d in cluster.devices_of(h)}
+    plan_devs = {d for s in session.current_plan.steps for d in s.devices}
+    if plan_devs & dead_devs:
+        raise SystemExit(
+            f"[crash] FAIL: dead devices {sorted(plan_devs & dead_devs)} "
+            "still placed after recovery"
+        )
+    if len(session.history) != steps:
+        raise SystemExit(
+            f"[crash] FAIL: {len(session.history)} steps recorded, "
+            f"expected {steps}"
+        )
+    err = float(np.max(np.abs(np.asarray(session.history)
+                              - np.asarray(ref_hist))))
+    if err > 1e-6:
+        raise SystemExit(
+            f"[crash] FAIL: recovered losses diverge from the "
+            f"uninterrupted reference (max abs err {err:.2e})"
+        )
+    durable = all_steps(mgr.base)
+    if not durable:
+        raise SystemExit("[crash] FAIL: no restorable checkpoint on disk")
+    print(f"[crash] OK: rollback_steps={restores[0].rollback_steps} "
+          f"restored_step={restores[0].restored_step} "
+          f"loss-exact vs reference (max err {err:.1e}), "
+          f"{len(durable)} durable snapshot(s), async saves "
+          f"{mgr.saves_written} written / {mgr.saves_dropped} dropped")
+    return {
+        "steps": session.step_count,
+        "history": session.history,
+        "ref_history": ref_hist,
+        "replans": session.replans,
+        "session": session,
+    }
+
+
 def make_train_state(model, optimizer, rng, mesh=None, rules=None):
     params = model.init(rng)
     opt_state = optimizer.init(params)
@@ -417,7 +548,26 @@ def main() -> None:
                     help="elastic-smoke: inject the straggler after this step")
     ap.add_argument("--straggler-hosts", default="1",
                     help="elastic-smoke: comma-separated host ids to flag")
+    ap.add_argument("--crash-smoke", action="store_true",
+                    help="hard-failure scenario: scripted host kill -> "
+                         "async-snapshot rollback + deterministic replay "
+                         "(CI gate); uses --steps/--kill-at/--kill-hosts")
+    ap.add_argument("--kill-at", type=int, default=4,
+                    help="crash-smoke: hard-kill after this step")
+    ap.add_argument("--kill-hosts", default="1",
+                    help="crash-smoke: comma-separated host ids to kill")
     args = ap.parse_args()
+    if args.crash_smoke:
+        crash_smoke(
+            steps=args.steps,
+            kill_at=args.kill_at,
+            kill_hosts=tuple(
+                int(h) for h in args.kill_hosts.split(",") if h != ""
+            ),
+            ckpt_every=max(args.ckpt_every, 1),
+            ckpt_dir=args.ckpt_dir,
+        )
+        return
     if args.elastic_smoke:
         elastic_smoke(
             steps=args.steps,

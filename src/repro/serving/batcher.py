@@ -494,6 +494,7 @@ class ContinuousBatcher:
         self._preempted: List[Request] = []
         self._pending_forks: Dict[int, Tuple[int, int]] = {}  # slot→(src,dst)
         self.preemptions = 0
+        self.host_loss_preemptions = 0  # subset of preemptions: dead host
         self.prefix_requests = 0  # sharing-eligible admissions
         self.prefix_hits = 0  # admissions that mapped >= 1 shared position
         self.prefix_hit_tokens = 0  # prompt positions mapped, not prefilled
@@ -554,6 +555,7 @@ class ContinuousBatcher:
         out: Dict[str, Any] = {
             "kv_layout": self.kv_layout,
             "kv_slab_tokens": slab_tokens,
+            "kv_host_loss_preemptions": self.host_loss_preemptions,
         }
         if self.pool is not None:
             hw = self.pool.high_water_tokens()
@@ -1158,6 +1160,37 @@ class ContinuousBatcher:
         requeues them at the front of the admission queue."""
         out, self._preempted = self._preempted, []
         return out
+
+    def preempt_resident(self) -> int:
+        """Hard host loss: bump EVERY resident request through the
+        preemption machinery (the device KV is gone — nothing in flight
+        can finish on it) and return how many were bumped.
+
+        Unlike grow-pressure preemption, this also cancels in-progress
+        chunked prefill jobs (their optimistically-indexed pages will
+        never be written) and drops the whole prefix index — cached
+        prefix KV presumed lost with the host.  Greedy decode makes the
+        re-admissions token-exact: each request re-prefills its full
+        prompt and regenerates the same continuation.
+        """
+        n = 0
+        for job in list(self._jobs):  # streaming prefills first
+            self._jobs.remove(job)
+            self._index_evict_states(job.states)
+            for st in job.states:
+                self._preempt(st)
+                n += 1
+        for s in list(self.slots):
+            if s is None:
+                continue
+            self._preempt(s)
+            n += 1
+        if self.index is not None:
+            self.index.evict_pages(self.index.pages)
+        self.host_loss_preemptions += n
+        if self.paged:
+            self._refresh_tables()
+        return n
 
     # ----------------------------------------------------------------- evict
     def _evict(self, state: SlotState) -> None:

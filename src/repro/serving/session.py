@@ -280,6 +280,8 @@ class ServingSession:
         self._t_submit: Dict[int, float] = {}
         self.results: Dict[int, RequestResult] = {}
         self.steps = 0
+        self.host_loss_events = 0
+        self.host_loss_requeued = 0
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -446,6 +448,8 @@ class ServingSession:
             **self.batcher.kv_stats(),
             "p50_latency_s": float(np.percentile(lats, 50)) if lats else 0.0,
             "p99_latency_s": float(np.percentile(lats, 99)) if lats else 0.0,
+            "host_loss_events": self.host_loss_events,
+            "host_loss_requeued": self.host_loss_requeued,
             "replans": len(self.replans),
             "replan_modes": [r.mode for r in self.replans],
             "planning_seconds": sum(r.planning_seconds for r in self.replans),
@@ -483,6 +487,28 @@ class ServingSession:
             return None
         ps.signal(LeaseChanged(cluster=cluster))
         return ps.replans[-1] if ps.replans else None
+
+    def host_failed(self, cluster: Optional[ClusterSpec] = None) -> int:
+        """Degrade gracefully under a hard host loss (DESIGN.md §17).
+
+        Every in-flight request's KV lived (at least partly) on the dead
+        host, so the whole resident set — decoding slots AND streaming
+        prefill jobs — is bumped through the grow-preemption machinery
+        and requeued at the FRONT of the admission queue; the prefix
+        index is dropped with the lost pages.  Greedy decode makes the
+        regeneration token-exact: each requeued request re-prefills its
+        full prompt on the surviving topology and produces the same
+        continuation it would have streamed uninterrupted.  Pass the
+        surviving sub-cluster as ``cluster`` to re-lease in the same
+        turn.  Returns how many requests were requeued.
+        """
+        n = self.batcher.preempt_resident()
+        self.queue.requeue_front(self.batcher.take_preempted())
+        self.host_loss_events += 1
+        self.host_loss_requeued += n
+        if cluster is not None:
+            self.apply_lease(cluster)
+        return n
 
     # ---------------------------------------------------------------- replan
     def _maybe_replan(self) -> Optional[ReplanRecord]:

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import inspect
 import time
+import warnings
 from dataclasses import dataclass
 from typing import (
     Any,
@@ -58,6 +59,7 @@ from .core.plan import ExecutionPlan, PlanStep
 from .core.plancache import PlanCache
 from .launch.events import (
     Event,
+    HostFailed,
     LeaseChanged,
     StragglerDetected,
     TaskArrived,
@@ -99,7 +101,8 @@ class SessionConfig:
     curve_memo_max: int = 8192
     #: event kinds that trigger a replan (subset of launch.events.EVENT_KINDS)
     replan_on: Tuple[str, ...] = (
-        "task_arrived", "task_completed", "straggler", "lease_changed"
+        "task_arrived", "task_completed", "straggler", "host_failed",
+        "lease_changed",
     )
     #: evict flagged hosts before a straggler replan: the flagged hosts'
     #: OWN device blocks (``ClusterSpec.devices_of``) leave the schedulable
@@ -161,7 +164,12 @@ class CheckpointCallbacks(SessionCallbacks):
     ``StragglerDetected`` replan snapshots through this manager, rebuilds
     the mesh from the healthy-host set, and restores the snapshot via
     :func:`repro.ckpt.remesh.restore_to_mesh` — the session reports it as
-    ``ReplanRecord(mode="restore")``.
+    ``ReplanRecord(mode="restore")`` — and the HARD-failure path: a
+    :class:`HostFailed` event (no cooperative snapshot turn possible)
+    rolls back to this manager's last *durable* snapshot and replays the
+    lost steps (``ReplanRecord.rollback_steps``).  Pair it with an
+    :class:`repro.ckpt.AsyncCheckpointManager` to keep the periodic
+    saves off the step turn.
     """
 
     def __init__(self, manager: Any, *, save_extra: Optional[Dict] = None):
@@ -201,6 +209,11 @@ class ReplanRecord:
     model_rebuilt: bool = False
     #: checkpoint step the restore path snapshotted + restored (restore only)
     restored_step: Optional[int] = None
+    #: hard-failure recovery only: completed steps rolled back to reach the
+    #: last durable snapshot and deterministically replayed on the
+    #: surviving topology (0 on cooperative restores, which snapshot the
+    #: live state and lose nothing)
+    rollback_steps: int = 0
 
 
 #: a model factory returns an MTModel or an (MTModel, batches) pair
@@ -220,6 +233,7 @@ class SpindleSession:
         graph_factory: Optional[GraphFactory] = None,
         tasks: Optional[Sequence[str]] = None,
         batches: Optional[Dict[str, Dict]] = None,
+        batch_fn: Optional[Callable[[int], Dict[str, Dict]]] = None,
         callbacks: Sequence[SessionCallbacks] = (),
         event_sources: Sequence[Any] = (),
         cache: Optional[PlanCache] = None,
@@ -249,8 +263,20 @@ class SpindleSession:
         #: live mesh — rebuilt over the healthy-host set by elastic restores
         self.mesh = self.config.mesh
         self._straggler_hosts: frozenset = frozenset()
+        #: hosts confirmed dead by HostFailed events (hard failures).  Kept
+        #: separate from the straggler flags: eviction is unconditional
+        #: (not gated on ``straggler_shrink`` — a dead host cannot be
+        #: scheduled slower, only not at all), and a NEW dead host on a
+        #: bound session triggers rollback-restore instead of
+        #: snapshot-restore
+        self._dead_hosts: frozenset = frozenset()
         self.model = None
         self.batches = batches
+        #: step-indexed data cursor: when set, ``step()`` (and hard-failure
+        #: replay) fetch ``batch_fn(step_index)`` — rolling ``step_count``
+        #: back to a snapshot's step IS the data-cursor restore, which is
+        #: what makes replay deterministic with a non-constant data stream
+        self.batch_fn = batch_fn
         self.engine = None
         self.params: Optional[Dict[str, Any]] = None
         self.opt_state: Any = None
@@ -260,6 +286,7 @@ class SpindleSession:
         #: a new request family) to force the next plan to be full, not
         #: incremental, when its signature misses the cache
         self.incremental = True
+        self._warned_plan_only_ckpt = False
         self.step_count = 0
         self.history: List[float] = []
         self.replans: List[ReplanRecord] = []
@@ -386,6 +413,18 @@ class SpindleSession:
         everything else plans from scratch via the registered pipeline.
         Fires ``on_plan`` when the current plan actually changed.
         """
+        if (self._checkpoint_manager() is not None and self.model is None
+                and self.model_factory is None
+                and not self._warned_plan_only_ckpt):
+            self._warned_plan_only_ckpt = True
+            warnings.warn(
+                "session carries a CheckpointManager through its callbacks "
+                "but is plan-only (no model or model_factory): periodic "
+                "snapshots and failure recovery will silently not run "
+                "until a model is bind()-ed explicitly",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         p = self._get_or_plan()
         if p is not self.current_plan:
             self.current_plan = p
@@ -457,12 +496,7 @@ class SpindleSession:
         """
         if self.engine is None:
             raise RuntimeError("bind() a model before calling step()")
-        b = batches if batches is not None else self.batches
-        if b is None:
-            raise ValueError(
-                "no batches: pass step(batches=...) or use a model_factory "
-                "returning (model, batches)"
-            )
+        b = batches if batches is not None else self._step_batches()
         t0 = time.perf_counter()
         self.params, self.opt_state, loss = self.engine.train_step(
             self.params, self.opt_state, b, self.optimizer,
@@ -493,6 +527,18 @@ class SpindleSession:
         self._fire("on_step_end", step_idx, loss, dt)
         self.poll()
         return loss
+
+    def _step_batches(self) -> Dict[str, Dict]:
+        """The current step's batches: the ``batch_fn`` data cursor (keyed
+        by ``step_count``) when one is set, else the static batches."""
+        if self.batch_fn is not None:
+            return self.batch_fn(self.step_count)
+        if self.batches is None:
+            raise ValueError(
+                "no batches: pass step(batches=...), set batch_fn=, or use "
+                "a model_factory returning (model, batches)"
+            )
+        return self.batches
 
     def run(self, steps: int,
             batches: Optional[Dict[str, Dict]] = None) -> Dict[str, Any]:
@@ -582,6 +628,7 @@ class SpindleSession:
         effective: List[Event] = []
         tasks = self.tasks
         flagged = self._straggler_hosts
+        dead = self._dead_hosts
         lease = self._lease
         for event in events:
             if event.kind not in self.config.replan_on:
@@ -601,6 +648,22 @@ class SpindleSession:
                 if event.cluster == base:
                     continue  # re-granted the same view: no-op
                 lease = event.cluster
+            elif isinstance(event, HostFailed):
+                # hard failures evict unconditionally (no straggler_shrink
+                # gate); the event carries the FULL currently-dead set, so
+                # a shrinking set is a flapped host returning — handled as
+                # a plain topology restore, no rollback
+                cluster0 = (
+                    lease if lease is not None else self.config.cluster
+                )
+                new_dead = frozenset(
+                    h for h in event.hosts if 0 <= h < cluster0.n_hosts
+                )
+                if len(new_dead | flagged) >= cluster0.n_hosts:
+                    new_dead = dead  # never evict the whole cluster
+                if new_dead == dead:
+                    continue  # duplicate / recovery no-op / capped flood
+                dead = new_dead
             elif isinstance(event, StragglerDetected):
                 # the event carries the FULL currently-flagged set,
                 # host-indexed against the session's base topology (the
@@ -616,7 +679,8 @@ class SpindleSession:
                     # host degrades to a replan without eviction
                     evictable = (
                         new_flagged
-                        if len(new_flagged) < cluster0.n_hosts else flagged
+                        if len(new_flagged | dead) < cluster0.n_hosts
+                        else flagged
                     )
                     if evictable != flagged:
                         flagged = evictable
@@ -650,20 +714,27 @@ class SpindleSession:
         # only after the whole turn succeeded.
         rollback = (
             self.tasks, self.cluster, self.mesh, self._straggler_hosts,
-            self._lease, self.model, self.batches, self.params,
-            self.opt_state,
+            self._dead_hosts, self._lease, self.model, self.batches,
+            self.params, self.opt_state,
         )
+        #: hosts newly LOST this burst (not a flap recovery): their device
+        #: state is gone, so a bound session must roll back to the last
+        #: durable snapshot instead of snapshotting live state
+        hard_lost = dead - self._dead_hosts
         self.tasks = tasks
         cluster_changed = False
-        if flagged != self._straggler_hosts or lease is not self._lease:
+        if (flagged != self._straggler_hosts or dead != self._dead_hosts
+                or lease is not self._lease):
             self._straggler_hosts = flagged
+            self._dead_hosts = dead
             self._lease = lease
             # topology-aware eviction over the session's base topology (an
             # injected lease view, else the configured cluster): the
-            # flagged hosts' OWN device blocks leave the pool (shrink(())
-            # ≡ full recovery — the spec then compares equal to the base)
+            # flagged + dead hosts' OWN device blocks leave the pool
+            # (shrink(()) ≡ full recovery — the spec then compares equal
+            # to the base)
             base = lease if lease is not None else self.config.cluster
-            self.cluster = base.shrink(flagged)
+            self.cluster = base.shrink(flagged | dead)
             cluster_changed = True
         event = effective[-1]  # the record's headline event
 
@@ -671,11 +742,14 @@ class SpindleSession:
         # bound session with a CheckpointManager threaded through the
         # callbacks snapshots, replans around the hole, re-meshes over the
         # healthy hosts, and restores the snapshot (§5.5 made survivable).
+        # A HARD failure (new dead hosts) cannot snapshot — it restores
+        # the last durable snapshot and replays the lost steps instead.
         ckpt_mgr = (
             self._checkpoint_manager()
             if cluster_changed and self.engine is not None
             and self.step_count > 0 else None
         )  # nothing trained yet → plain shrink replan, nothing to restore
+        hard = bool(hard_lost) and ckpt_mgr is not None
         restored_step: Optional[int] = None
         old_plan, old_model = self.current_plan, self.model
         try:
@@ -689,7 +763,7 @@ class SpindleSession:
                 # (the primary axis; re-stacking multi-axis shapes over a
                 # ragged survivor set is a follow-up), full recovery
                 # reinstates the configured mesh EXACTLY
-                if flagged:
+                if flagged or dead:
                     from .parallel.mesh import mesh_over_devices
 
                     self.mesh = mesh_over_devices(
@@ -698,7 +772,7 @@ class SpindleSession:
                     )
                 else:
                     self.mesh = self.config.mesh
-            if ckpt_mgr is not None:
+            if ckpt_mgr is not None and not hard:
                 # label = index of the last COMPLETED step — the same
                 # convention as the periodic path (on_step_end) and the
                 # train driver's resume (start_step = manifest.step + 1),
@@ -719,7 +793,10 @@ class SpindleSession:
             p = self._get_or_plan()
             plan_seconds = time.perf_counter() - t0
             if ckpt_mgr is not None:
-                restored_step = self._remesh_restore(ckpt_mgr)
+                restored_step = (
+                    self._rollback_restore(ckpt_mgr) if hard
+                    else self._remesh_restore(ckpt_mgr)
+                )
             if self.engine is not None:
                 if self.model is not old_model:
                     self._refresh_params()
@@ -729,12 +806,19 @@ class SpindleSession:
                 )
         except BaseException:
             (self.tasks, self.cluster, self.mesh, self._straggler_hosts,
-             self._lease, self.model, self.batches, self.params,
-             self.opt_state) = rollback
+             self._dead_hosts, self._lease, self.model, self.batches,
+             self.params, self.opt_state) = rollback
             raise
         if p is not self.current_plan:
             self.current_plan = p
             self._fire("on_plan", p)
+        rollback_steps = 0
+        if hard and restored_step is not None:
+            # the session is committed onto the surviving topology; now
+            # replay the steps the rollback lost, deterministically, so
+            # post-recovery state is exactly what an uninterrupted run on
+            # the survivors would have produced
+            rollback_steps = self._replay_lost_steps(restored_step)
         if s.fallbacks > before[2]:
             plan_mode = "fallback"
         elif s.hits > before[0]:
@@ -751,6 +835,7 @@ class SpindleSession:
             planning_seconds=plan_seconds,
             model_rebuilt=self.model is not old_model,
             restored_step=restored_step,
+            rollback_steps=rollback_steps,
         )
         if self.engine is not None:
             info.closures_cached = rebind_stats["closures_cached"]
@@ -801,3 +886,64 @@ class SpindleSession:
         placed = restore_to_mesh(tree, self._restore_targets(tree))
         self.params, self.opt_state = placed["params"], placed["opt"]
         return int(manifest["step"])
+
+    def _rollback_restore(self, mgr: Any) -> Optional[int]:
+        """Hard-failure restore: load the last DURABLE snapshot (no save —
+        the dead host's state is gone) onto the surviving mesh.
+
+        Returns the restored step, or ``None`` (with a warning) when the
+        manager holds no snapshot yet — the in-process simulation then
+        degrades to a plain shrink replan on the live state; a real pod
+        would have lost the run.
+        """
+        from .ckpt.remesh import restore_to_mesh
+
+        tree, manifest = mgr.restore_latest(
+            {"params": self.params, "opt": self.opt_state}
+        )
+        if tree is None:
+            warnings.warn(
+                "hard host failure with no durable snapshot to roll back "
+                "to: recovering from live in-process state (a real "
+                "deployment would have lost the run) — attach a "
+                "CheckpointManager with every >= 1 before training",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return None
+        placed = restore_to_mesh(tree, self._restore_targets(tree))
+        self.params, self.opt_state = placed["params"], placed["opt"]
+        return int(manifest["step"])
+
+    def _replay_lost_steps(self, restored_step: int) -> int:
+        """Deterministically re-run the steps between the restored snapshot
+        and the failure point on the already-rebound surviving engine.
+
+        Rolling ``step_count`` back to ``restored_step + 1`` IS the
+        RNG/data-cursor restore: params/opt come from the snapshot, and
+        each replayed step refetches its batches through the step-indexed
+        ``batch_fn`` (or reuses the static batches).  Observers see the
+        replayed steps through ``on_step_end`` — so periodic snapshots
+        keep their cadence — but event sources are NOT polled (recovery
+        must not recursively replan mid-replay).
+        """
+        target = self.step_count
+        resume = restored_step + 1
+        if resume >= target:
+            return 0
+        del self.history[resume:]
+        self.step_count = resume
+        for _ in range(target - resume):
+            b = self._step_batches()
+            t0 = time.perf_counter()
+            self.params, self.opt_state, loss = self.engine.train_step(
+                self.params, self.opt_state, b, self.optimizer,
+                on_wave=self._fire_wave,
+            )
+            loss = float(loss)
+            step_idx = self.step_count
+            self.history.append(loss)
+            self.step_count += 1
+            self._fire("on_step_end", step_idx, loss,
+                       time.perf_counter() - t0)
+        return target - resume
